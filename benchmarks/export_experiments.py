@@ -1,0 +1,205 @@
+"""Render EXPERIMENTS.md from the recorded results.
+
+Sources:
+- benchmarks/results/dryrun_baseline.json   (the 40-cell baseline sweep)
+- benchmarks/results/dryrun_<tag>.json      (hillclimb variants)
+- benchmarks/results/perf_log.json          (hypothesis→change→measure log,
+                                             appended by the perf loop)
+- the paper-figure benchmark rows (figures.py, run live)
+
+Usage: PYTHONPATH=src python benchmarks/export_experiments.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+OUT = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+
+
+def _load(name):
+    p = os.path.join(RESULTS, name)
+    if os.path.exists(p):
+        with open(p) as f:
+            return json.load(f)
+    return {}
+
+
+def figures_section() -> str:
+    from benchmarks import figures
+    lines = ["## Paper-validation (the paper's worked examples, "
+             "reproduced numerically)", "",
+             "The paper has no measured evaluation; its claims are the "
+             "worked examples of Figs. 1–3, 6, 7.  Each is reproduced in "
+             "the discrete-event simulator (`benchmarks/figures.py`); "
+             "`claim_* = 1` means validated.", "",
+             "| metric | value | meaning |", "|---|---|---|"]
+    for fig in figures.ALL:
+        for name, value, derived in fig():
+            d = str(derived).replace("|", "/")
+            lines.append(f"| `{name}` | {value:.4g} | {d} |")
+    lines.append("")
+    return "\n".join(lines)
+
+
+def dryrun_section(tag="baseline") -> str:
+    data = _load(f"dryrun_{tag}.json")
+    ok = sum(1 for v in data.values() if v.get("ok"))
+    skipped = sum(1 for v in data.values() if v.get("skipped"))
+    failed = sum(1 for v in data.values()
+                 if not v.get("ok") and not v.get("skipped"))
+    lines = [
+        "## Dry-run",
+        "",
+        f"`python -m repro.launch.dryrun --all` lowers + compiles every "
+        f"(arch × shape × mesh) cell on the production meshes "
+        f"(single-pod 16×16 = 256 chips; multi-pod 2×16×16 = 512 chips, "
+        f"axes (pod, data, model)).",
+        "",
+        f"**Result: {ok} cells compiled OK, {failed} failed, "
+        f"{skipped} skipped** (long_500k for the 8 pure full-attention "
+        f"archs, per the assignment; noted in DESIGN.md §4).",
+        "",
+        "Per-cell dry-run facts (per-device; from `memory_analysis()` and "
+        "the trip-count-aware HLO cost model `repro/launch/hlo_cost.py` — "
+        "XLA's `cost_analysis()` counts while bodies once, validated in "
+        "`tests/test_hlo_cost.py`):",
+        "",
+        "| cell | step | args GB | temp GB | fits 16GiB | lower+compile s |",
+        "|---|---|---|---|---|---|",
+    ]
+    for key, rec in sorted(data.items()):
+        if not rec.get("ok"):
+            continue
+        m = rec["memory"]
+        lines.append(
+            f"| {key} | {rec['kind']} | "
+            f"{m['argument_size_in_bytes'] / 2**30:.2f} | "
+            f"{m['temp_size_in_bytes'] / 2**30:.2f} | "
+            f"{'yes' if m['fits_hbm'] else 'NO'} | "
+            f"{rec['lower_s']}+{rec['compile_s']} |")
+    lines.append("")
+    return "\n".join(lines)
+
+
+def roofline_section(tag="baseline") -> str:
+    from benchmarks import roofline
+    lines = [
+        "## Roofline",
+        "",
+        "Three terms per cell (TPU v5e: 197 TFLOP/s bf16, 819 GB/s HBM, "
+        "50 GB/s/link ICI).  `compute = flops/(chip·peak)`, `memory = "
+        "bytes/(chip·bw)`, `collective = wire-bytes/(chip·link-bw)` — all "
+        "per-device from the partitioned module, trip-count-scaled.  "
+        "`useful` = MODEL_FLOPS/(HLO flops × chips) with MODEL_FLOPS = "
+        "6·N_active·tokens (train) or 2·N_active·tokens (inference); "
+        "`frac` = useful-compute-time / dominant-term (the score).",
+        "",
+        "```",
+        roofline.table(tag),
+        "```",
+        "",
+        "**Reading the baseline.**  Attention-bearing train/prefill cells "
+        "are memory-dominated by the S²-shaped softmax-chain tensors the "
+        "XLA path materializes in HBM — exactly the traffic the validated "
+        "Pallas flash kernel (and SSD kernel for mamba/jamba Q² chains) "
+        "keeps in VMEM on the real TPU target.  Decode cells are "
+        "weight/cache-streaming bound as expected (useful column ≈ "
+        "active-param utilization).  The §Perf log below drives the "
+        "dominant terms down per cell.",
+        "",
+    ]
+    return "\n".join(lines)
+
+
+def perf_section() -> str:
+    log = _load("perf_log.json")
+    lines = ["## Perf (hypothesis → change → measure → validate)", ""]
+    if not log:
+        lines.append("_perf log pending_")
+        return "\n".join(lines)
+    lines += [log.get("intro", ""), ""]
+    for cell, entries in log.get("cells", {}).items():
+        lines.append(f"### {cell}")
+        lines.append("")
+        lines.append("| # | hypothesis | change | before (dom term s) | "
+                      "after | verdict |")
+        lines.append("|---|---|---|---|---|---|")
+        for i, e in enumerate(entries, 1):
+            lines.append(
+                f"| {i} | {e['hypothesis']} | `{e['change']}` | "
+                f"{e['before']} | {e['after']} | {e['verdict']} |")
+        lines.append("")
+    if "summary" in log:
+        lines += [log["summary"], ""]
+    return "\n".join(lines)
+
+
+HEADER = """# EXPERIMENTS — MXDAG on a multi-pod TPU v5e mesh
+
+Paper: *MXDAG: A Hybrid Abstraction for Cluster Applications* (Wang et
+al., 2021).  Bands: soundness 5/5, repro 5/5.  DESIGN.md records the
+paper→TPU mapping; this file records every measured result.
+
+Environment: CPU-only container; TPU v5e is the *target*.  Dry-runs use
+512 forced host devices (`--xla_force_host_platform_device_count=512`);
+Pallas kernels validated in interpret mode (`tests/test_kernels.py`).
+"""
+
+
+def comparison_section() -> str:
+    base = _load("dryrun_baseline.json")
+    opt = _load("dryrun_optimized.json")
+    lines = ["## Roofline — optimized configuration",
+             "",
+             "Same grid re-lowered after the §Perf changes "
+             "(dryrun_optimized.json).  Per-cell dominant-term bound, "
+             "baseline -> optimized:",
+             "",
+             "| cell | baseline bound s | optimized bound s | speedup | "
+             "fits HBM |", "|---|---|---|---|---|"]
+    tb = to = 0.0
+    fb = fo = 0
+    for k in sorted(base):
+        b, o = base.get(k, {}), opt.get(k, {})
+        if not (b.get("ok") and o.get("ok")):
+            continue
+        rb, ro = b["roofline"], o["roofline"]
+        bb = max(rb["compute_s"], rb["memory_s"], rb["collective_s"])
+        bo = max(ro["compute_s"], ro["memory_s"], ro["collective_s"])
+        tb += bb; to += bo
+        fb += b["memory"]["fits_hbm"]; fo += o["memory"]["fits_hbm"]
+        lines.append(f"| {k} | {bb:.2f} | {bo:.2f} | {bb/bo:.2f}x | "
+                     f"{'y' if b['memory']['fits_hbm'] else 'N'}->"
+                     f"{'y' if o['memory']['fits_hbm'] else 'N'} |")
+    lines += ["",
+              f"**Total: {tb:.0f} s -> {to:.0f} s ({tb/to:.2f}x); "
+              f"fits-HBM {fb} -> {fo} of 64 cells.**",
+              "",
+              "Kernel-adjusted memory terms for the hillclimbed cells "
+              "(chain tensors held in VMEM by the validated Pallas "
+              "kernels; benchmarks/results/kernel_adjusted.json):", ""]
+    ka = _load("kernel_adjusted.json")
+    for cell, v in ka.items():
+        lines.append(f"- `{cell}`: raw {v['raw_memory_s']} s, chain "
+                     f"{v['chain_bytes_tb']} TB -> adjusted "
+                     f"{v['adjusted_memory_s']} s")
+    lines.append("")
+    return "\n".join(lines)
+
+
+def main():
+    parts = [HEADER, figures_section(), dryrun_section(),
+             roofline_section(), comparison_section(), perf_section()]
+    with open(OUT, "w") as f:
+        f.write("\n".join(parts))
+    print(f"wrote {os.path.abspath(OUT)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Roofline table from the dry-run results (§Roofline deliverable).
+
+Reads ``benchmarks/results/dryrun_<tag>.json`` (written incrementally by
+repro.launch.dryrun) and renders the per-(arch × shape × mesh) three-term
+table: compute / memory / collective seconds, dominant term, MODEL_FLOPS
+ratio, roofline fraction, HBM fit — plus a one-line "what would move the
+dominant term" note derived from the dominant term and the cell kind.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def load(tag: str = "baseline") -> dict:
+    path = os.path.join(RESULTS, f"dryrun_{tag}.json")
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        return json.load(f)
+
+
+def suggestion(rec: dict) -> str:
+    r = rec.get("roofline", {})
+    dom = r.get("dominant", "?")
+    kind = rec.get("kind", "?")
+    if dom == "memory" and kind == "train":
+        return ("fuse attention softmax chain into the Pallas flash "
+                "kernel (S^2 tensors stay in VMEM)")
+    if dom == "memory":
+        return ("decode is weight/cache-streaming bound: int8 KV cache "
+                "or wider batch raises arithmetic intensity")
+    if dom == "collective":
+        return ("reduce TP resharding: bf16 grad reduction + "
+                "head-aligned shardings; overlap per MXDAG plan")
+    return "increase per-chip batch or reduce remat recompute"
+
+
+def rows(tag: str = "baseline") -> list[dict]:
+    out = []
+    for key, rec in sorted(load(tag).items()):
+        if rec.get("skipped"):
+            out.append({"cell": key, "skipped": rec["skipped"]})
+            continue
+        if not rec.get("ok"):
+            out.append({"cell": key,
+                        "error": rec.get("error", "?")[:80]})
+            continue
+        r = rec["roofline"]
+        out.append({
+            "cell": key,
+            "kind": rec["kind"],
+            "compute_s": r["compute_s"],
+            "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"],
+            "dominant": r["dominant"],
+            "useful_ratio": r["useful_flops_ratio"],
+            "roofline_fraction": r["roofline_fraction"],
+            "fits_hbm": rec["memory"]["fits_hbm"],
+            "peak_gb": rec["memory"]["peak_estimate_bytes"] / 2**30,
+            "suggestion": suggestion(rec),
+        })
+    return out
+
+
+def table(tag: str = "baseline") -> str:
+    lines = [f"{'cell':46s} {'kind':8s} {'compute':>9s} {'memory':>9s} "
+             f"{'collect':>9s} {'dom':10s} {'useful':>7s} {'frac':>6s} "
+             f"{'HBM':>5s}"]
+    for r in rows(tag):
+        if "skipped" in r:
+            lines.append(f"{r['cell']:46s} SKIP  {r['skipped'][:60]}")
+            continue
+        if "error" in r:
+            lines.append(f"{r['cell']:46s} FAIL  {r['error']}")
+            continue
+        lines.append(
+            f"{r['cell']:46s} {r['kind']:8s} {r['compute_s']:9.3f} "
+            f"{r['memory_s']:9.3f} {r['collective_s']:9.3f} "
+            f"{r['dominant']:10s} {r['useful_ratio']:7.3f} "
+            f"{r['roofline_fraction']:6.3f} "
+            f"{'ok' if r['fits_hbm'] else 'OVER':>5s}")
+    return "\n".join(lines)
+
+
+def bench_rows(tag: str = "baseline"):
+    """(name, value, derived) rows for the CSV driver."""
+    out = []
+    for r in rows(tag):
+        if "skipped" in r or "error" in r:
+            continue
+        name = r["cell"].replace("|", ".")
+        out.append((f"roofline.{name}.bound_s",
+                    max(r["compute_s"], r["memory_s"], r["collective_s"]),
+                    f"dominant={r['dominant']} frac="
+                    f"{r['roofline_fraction']:.3f} fits={r['fits_hbm']}"))
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+    print(table(sys.argv[1] if len(sys.argv) > 1 else "baseline"))

@@ -1,0 +1,64 @@
+"""Benchmark driver.  Prints ``name,value,derived`` CSV rows:
+
+- one section per paper figure (figures.py — the paper's only
+  quantitative claims are its worked examples),
+- scheduler micro-benchmarks (wall-time of the Principle-1 scheduler and
+  the DES on generated DAGs),
+- the roofline summary per dry-run cell (roofline.py; populated by
+  ``python -m repro.launch.dryrun --all``).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _timeit(fn, *args, repeat=3):
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn(*args)
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def scheduler_micro():
+    from repro.core import MXDAGScheduler, simulate
+    from repro.core import builders
+    rows = []
+    g = builders.mapreduce("mr", 8, 8)
+    rows.append(("micro.schedule_mr8x8_us",
+                 _timeit(lambda: MXDAGScheduler(
+                     try_pipelining=False).schedule(g)),
+                 "Principle-1 scheduling of an 8x8 shuffle (80 tasks)"))
+    rows.append(("micro.simulate_mr8x8_us",
+                 _timeit(lambda: simulate(g)),
+                 "DES of the same DAG"))
+    g2 = builders.ddl(32, push=2.0, pull=2.0)
+    rows.append(("micro.schedule_ddl32_us",
+                 _timeit(lambda: MXDAGScheduler(
+                     try_pipelining=False).schedule(g2)),
+                 "Principle-1 scheduling of a 32-layer DDL step"))
+    return rows
+
+
+def main() -> None:
+    from benchmarks import figures, roofline
+
+    rows = []
+    for fig in figures.ALL:
+        rows += fig()
+    rows += scheduler_micro()
+    rows += roofline.bench_rows()
+
+    print("name,value,derived")
+    for name, value, derived in rows:
+        d = str(derived).replace(",", ";")
+        print(f"{name},{value:.6g},{d}")
+
+
+if __name__ == "__main__":
+    main()

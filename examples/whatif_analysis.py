@@ -1,0 +1,70 @@
+"""What-if analysis on a real workload MXDAG (paper §4.3).
+
+Takes the deepseek-coder-33b training step at production scale (256
+chips), builds its MXDAG from the roofline constants, and answers the
+questions the paper says only MXDAG can answer:
+
+1. would pipelining (chunking) the gradient flows help?  at what unit?
+2. what if we re-partition (change TP) — does the network get better
+   or worse?
+3. which task would a straggler turn critical?
+
+Run:  PYTHONPATH=src python examples/whatif_analysis.py
+"""
+import sys
+sys.path.insert(0, "src")
+
+from repro import configs
+from repro.configs.base import SHAPES
+from repro.core import Monitor, MXDAGScheduler, WhatIf
+from repro.sync.plan import plan_sync, step_mxdag
+
+cfg = configs.get("deepseek-coder-33b")
+shape = SHAPES["train_4k"]
+
+# 1. pipelining / chunking sweep ----------------------------------------
+plan = plan_sync(cfg, shape)
+print(f"{cfg.name} @ 256 chips, {shape.name}:")
+print(f"  barrier sync predicted:  {plan.predicted_barrier:.3f} s/step")
+print(f"  bucketed (MXDAG plan):   {plan.predicted_bucketed:.3f} s/step "
+      f"(+{(plan.predicted_speedup - 1) * 100:.1f}%)")
+print(f"  flow priority order: {plan.order[:5]}... "
+      "(lower layers first == ByteScheduler, §4.1.1)")
+
+g = step_mxdag(cfg, shape, n_layers=8, unit_frac=0.25)  # 8-layer slice
+for i in range(8):                       # stream grads as BP produces them
+    g.set_pipelined(f"BP{i}", f"push{i}", True)
+    g.set_pipelined(f"push{i}", f"pull{i}", True)
+w = WhatIf(g)
+print("\n  unit-size sweep on the gradient flows (chunked collectives):")
+for unit_frac in (1.0, 0.5, 0.25, 0.125):
+    import dataclasses as _dc
+    g2 = g.copy()
+    for i in range(8):
+        for t in (f"push{i}", f"pull{i}"):
+            task = g2.tasks[t]
+            g2.tasks[t] = _dc.replace(task, unit=task.size * unit_frac)
+    ms = WhatIf(g2).baseline()
+    print(f"    unit={unit_frac:>5}x  predicted JCT {ms:.4f} s")
+
+# 2. repartition: what if TP were 8 instead of 16? ----------------------
+plan8 = plan_sync(cfg, shape, tp=8)
+print(f"\n  repartition tp=16 -> tp=8: bucketed "
+      f"{plan.predicted_bucketed:.3f} -> {plan8.predicted_bucketed:.3f} "
+      f"s/step")
+
+# 3. straggler analysis (monitoring, §4.3) ------------------------------
+sched = MXDAGScheduler(try_pipelining=False).schedule(g)
+expected = sched.simulate()
+mon = Monitor(g, expected)
+# a network straggler: push3 at 10% progress well after it should be DONE
+dur = expected.finish["push3"] - expected.start["push3"]
+t_probe = expected.finish["push3"] + 2 * dur
+mon.observe("push3", 0.1, t_probe)
+stragglers = mon.stragglers()
+print(f"\n  injected slow flow push3 -> monitor reports: "
+      f"{[(s.task, s.kind.value) for s in stragglers]}")
+print(f"  replanned critical path now runs through: "
+      f"{[t for t in mon.replan_critical_path() if 'push' in t or 'pull' in t][:3]}")
+print("  (MXDAG distinguishes network from host stragglers — the paper's"
+      " monitoring claim)")

@@ -1,0 +1,6 @@
+from repro.checkpoint.ckpt import (
+    all_steps, latest_step, read_meta, restore, save, save_async,
+)
+
+__all__ = ["save", "save_async", "restore", "latest_step", "all_steps",
+           "read_meta"]

@@ -1,0 +1,25 @@
+"""MXDAG core: the paper's abstraction, calculus, schedulers and simulator."""
+from repro.core.task import MXTask, TaskKind, compute, flow
+from repro.core.graph import MXDAG, Edge, NodeTiming
+from repro.core.cluster import Cluster, Host
+from repro.core.simulator import SimResult, Simulator, simulate
+from repro.core.schedule import (
+    AltruisticMultiScheduler,
+    CoflowConfig,
+    FairShareScheduler,
+    MXDAGScheduler,
+    Schedule,
+    auto_coflows,
+)
+from repro.core.whatif import WhatIf, WhatIfResult
+from repro.core.monitor import Monitor, Straggler
+
+__all__ = [
+    "MXTask", "TaskKind", "compute", "flow",
+    "MXDAG", "Edge", "NodeTiming",
+    "Cluster", "Host",
+    "SimResult", "Simulator", "simulate",
+    "FairShareScheduler", "CoflowConfig", "MXDAGScheduler",
+    "AltruisticMultiScheduler", "Schedule", "auto_coflows",
+    "WhatIf", "WhatIfResult", "Monitor", "Straggler",
+]

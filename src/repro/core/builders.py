@@ -1,0 +1,281 @@
+"""MXDAG builders: the paper's worked examples plus parametric generators.
+
+Every figure the paper argues from is constructible here so benchmarks and
+tests can validate the claims numerically:
+
+- :func:`fig1_jobs`       — Fig. 1 / Fig. 4(a): two flows leaving host A.
+- :func:`fig2a`           — Fig. 2(a): symmetric topology, asymmetric
+                            compute times t1/t2.
+- :func:`fig2b`           — Fig. 2(b): Wukong-style asymmetric topology
+                            with flows f1..f6 (+ the b1/b2/b3 coflow
+                            groupings of Fig. 2(b1..b3)).
+- :func:`fig3`            — Fig. 3: 4-node DAG with critical path A→B→C
+                            used for the three pipelining cases.
+- :func:`ddl`             — Fig. 6: layer-wise data-parallel training
+                            (BP → push → pull → FP with a parameter server).
+- :func:`mapreduce_pair`  — Fig. 7: two map-reduce jobs sharing a host and
+                            a NIC.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from repro.core.graph import MXDAG
+from repro.core.task import compute, flow
+
+
+# ----------------------------------------------------------------------
+# Fig. 1 / Fig. 4(a)
+# ----------------------------------------------------------------------
+def fig1_jobs() -> MXDAG:
+    """Job X of Fig. 4(a): a@A fans out f1→B and f3→C; b@B sends f2→C;
+    c@C joins f2 and f3.  Critical path A→f1→b→f2→c."""
+    g = MXDAG("fig1_jobX")
+    a = g.add(compute("a", 1.0, "A"))
+    b = g.add(compute("b", 1.0, "B"))
+    c = g.add(compute("c", 1.0, "C"))
+    f1 = g.add(flow("f1", 1.0, "A", "B"))
+    f2 = g.add(flow("f2", 1.0, "B", "C"))
+    f3 = g.add(flow("f3", 1.0, "A", "C"))
+    g.add_edge(a, f1)
+    g.add_edge(a, f3)
+    g.add_edge(f1, b)
+    g.add_edge(b, f2)
+    g.add_edge(f2, c)
+    g.add_edge(f3, c)
+    return g
+
+
+# ----------------------------------------------------------------------
+# Fig. 2(a): symmetric topology, asymmetric compute times
+# ----------------------------------------------------------------------
+def fig2a(t1: float = 3.0, t2: float = 1.0, fsize: float = 1.0) -> MXDAG:
+    g = MXDAG("fig2a")
+    a = g.add(compute("a", 0.0, "A"))
+    b = g.add(compute("b", t1, "B"))
+    c = g.add(compute("c", t2, "C"))
+    d = g.add(compute("d", 1.0, "D"))
+    f1 = g.add(flow("f1", fsize, "A", "B"))
+    f2 = g.add(flow("f2", fsize, "A", "C"))
+    f3 = g.add(flow("f3", fsize, "B", "D"))
+    f4 = g.add(flow("f4", fsize, "C", "D"))
+    g.add_edge(a, f1)
+    g.add_edge(a, f2)
+    g.add_edge(f1, b)
+    g.add_edge(f2, c)
+    g.add_edge(b, f3)
+    g.add_edge(c, f4)
+    g.add_edge(f3, d)
+    g.add_edge(f4, d)
+    return g
+
+
+def fig2a_coflows() -> list[set[str]]:
+    """The Fig. 2(c) grouping: broadcast {f1,f2}, aggregation {f3,f4}."""
+    return [{"f1", "f2"}, {"f3", "f4"}]
+
+
+# ----------------------------------------------------------------------
+# Fig. 2(b): Wukong-derived asymmetric topology
+# ----------------------------------------------------------------------
+def fig2b() -> MXDAG:
+    """A→f1→B→f2→E; C broadcasts f3→D, f4→E; D→f5→F; E→f6→F; F joins.
+
+    The optimal schedule delays f4 to give f3 the full C-egress bandwidth,
+    which cascades so f5 and f6 do not share F's ingress (§2.2).
+    """
+    g = MXDAG("fig2b")
+    a = g.add(compute("a", 1.0, "A"))
+    b = g.add(compute("b", 1.0, "B"))
+    c = g.add(compute("c", 1.0, "C"))
+    d = g.add(compute("d", 1.0, "D"))
+    e = g.add(compute("e", 1.0, "E"))
+    f = g.add(compute("f", 1.0, "F"))
+    f1 = g.add(flow("f1", 1.0, "A", "B"))
+    f2 = g.add(flow("f2", 1.0, "B", "E"))
+    f3 = g.add(flow("f3", 1.0, "C", "D"))
+    f4 = g.add(flow("f4", 1.0, "C", "E"))
+    f5 = g.add(flow("f5", 1.0, "D", "F"))
+    f6 = g.add(flow("f6", 1.0, "E", "F"))
+    g.add_edge(a, f1)
+    g.add_edge(f1, b)
+    g.add_edge(b, f2)
+    g.add_edge(c, f3)
+    g.add_edge(c, f4)
+    g.add_edge(f3, d)
+    g.add_edge(f2, e)
+    g.add_edge(f4, e)
+    g.add_edge(d, f5)
+    g.add_edge(e, f6)
+    g.add_edge(f5, f)
+    g.add_edge(f6, f)
+    return g
+
+
+def fig2b_coflows(variant: str) -> list[set[str]]:
+    """The three ambiguous groupings of Fig. 2(b1), (b2), (b3)."""
+    if variant == "b1":    # broadcast from C + aggregation at F
+        return [{"f3", "f4"}, {"f5", "f6"}]
+    if variant == "b2":    # aggregation at E
+        return [{"f2", "f4"}]
+    if variant == "b3":    # all flows between {B,C} and {D,E}
+        return [{"f2", "f3", "f4"}]
+    raise ValueError(variant)
+
+
+# ----------------------------------------------------------------------
+# Fig. 3: pipelineability cases
+# ----------------------------------------------------------------------
+def fig3(unit: float = 0.25) -> MXDAG:
+    """4-host DAG with critical path a→f1→b→f2→c and a side branch
+    a→f3→d→f4→c.  All of a, f1, f3, d, f4 are pipelineable with ``unit``.
+    """
+    g = MXDAG("fig3")
+    a = g.add(compute("a", 1.0, "A", unit=unit))
+    b = g.add(compute("b", 2.0, "B"))
+    c = g.add(compute("c", 1.0, "C"))
+    d = g.add(compute("d", 0.5, "D", unit=unit))
+    f1 = g.add(flow("f1", 1.0, "A", "B", unit=unit))
+    f2 = g.add(flow("f2", 1.0, "B", "C"))
+    f3 = g.add(flow("f3", 1.0, "A", "D", unit=unit))
+    f4 = g.add(flow("f4", 0.5, "D", "C", unit=unit))
+    g.add_edge(a, f1)
+    g.add_edge(a, f3)
+    g.add_edge(f1, b)
+    g.add_edge(b, f2)
+    g.add_edge(f2, c)
+    g.add_edge(f3, d)
+    g.add_edge(d, f4)
+    g.add_edge(f4, c)
+    return g
+
+
+def fig3_case(case: int) -> MXDAG:
+    """Return Fig. 3 with the pipelining choice of the given case applied.
+
+    0: baseline (no pipelining);  1: pipeline flow4 only (non-critical);
+    2: + pipeline flow1 (critical, helps);  3: + pipeline flow3 (critical,
+    hurts: f1 and f3 now share A's egress NIC from t≈0)."""
+    g = fig3()
+    if case >= 1:
+        g.set_pipelined("d", "f4", True)
+    if case >= 2:
+        g.set_pipelined("a", "f1", True)
+    if case >= 3:
+        g.set_pipelined("a", "f3", True)
+    return g
+
+
+# ----------------------------------------------------------------------
+# Fig. 6: data-parallel distributed training (worker + parameter server)
+# ----------------------------------------------------------------------
+def ddl(n_layers: int = 4, *,
+        bp: Sequence[float] | float = 1.0,
+        fp: Sequence[float] | float = 1.0,
+        push: Sequence[float] | float = 1.0,
+        pull: Sequence[float] | float = 1.0,
+        unit_frac: Optional[float] = None,
+        worker: str = "W", ps: str = "PS", job: str = "job0") -> MXDAG:
+    """One boundary iteration of layer-wise data-parallel training.
+
+    BP runs top layer → layer 0 on the worker GPU; each BP_i releases
+    push_i (worker→PS) then pull_i (PS→worker); FP of the *next* iteration
+    runs layer 0 → top and FP_i requires pull_i and FP_{i-1}.  This is the
+    MXDAG of Fig. 6; MXDAG scheduling recovers ByteScheduler's
+    lower-layer-first flow priority (§4.1.1).
+    """
+    def seq(x, default):
+        if isinstance(x, (int, float)):
+            return [float(x)] * n_layers
+        return [float(v) for v in x]
+
+    bp, fp = seq(bp, 1.0), seq(fp, 1.0)
+    push, pull = seq(push, 1.0), seq(pull, 1.0)
+    uf = unit_frac
+
+    g = MXDAG(f"ddl{n_layers}")
+    bps = [g.add(compute(f"BP{i}", bp[i], worker, proc="gpu", job=job))
+           for i in range(n_layers)]
+    fps = [g.add(compute(f"FP{i}", fp[i], worker, proc="gpu", job=job))
+           for i in range(n_layers)]
+    pushes = [g.add(flow(f"push{i}", push[i], worker, ps, job=job,
+                         unit=None if uf is None else uf * push[i]))
+              for i in range(n_layers)]
+    pulls = [g.add(flow(f"pull{i}", pull[i], ps, worker, job=job,
+                        unit=None if uf is None else uf * pull[i]))
+             for i in range(n_layers)]
+    # BP chain: top layer first
+    for i in range(n_layers - 1, 0, -1):
+        g.add_edge(bps[i], bps[i - 1])
+    for i in range(n_layers):
+        g.add_edge(bps[i], pushes[i])
+        g.add_edge(pushes[i], pulls[i])
+        g.add_edge(pulls[i], fps[i])
+    # FP chain: layer 0 first
+    for i in range(n_layers - 1):
+        g.add_edge(fps[i], fps[i + 1])
+    return g
+
+
+# ----------------------------------------------------------------------
+# Fig. 7: two map-reduce jobs sharing a host and a NIC
+# ----------------------------------------------------------------------
+def mapreduce_pair() -> tuple[MXDAG, MXDAG]:
+    """Job1: long map a@Ha + short map b@Hb feeding reduce r1@Hr.
+    Job2: map d@Hb (shares Hb's compute slot with b) feeding r2@Hr2 via
+    f3 (shares Hb's egress NIC with f2)."""
+    j1 = MXDAG("job1")
+    a = j1.add(compute("a", 3.0, "Ha", job="job1"))
+    b = j1.add(compute("b", 1.0, "Hb", job="job1"))
+    f1 = j1.add(flow("f1", 1.0, "Ha", "Hr", job="job1"))
+    f2 = j1.add(flow("f2", 1.0, "Hb", "Hr", job="job1"))
+    r1 = j1.add(compute("r1", 1.0, "Hr", job="job1"))
+    j1.add_edge(a, f1)
+    j1.add_edge(b, f2)
+    j1.add_edge(f1, r1)
+    j1.add_edge(f2, r1)
+
+    j2 = MXDAG("job2")
+    d = j2.add(compute("d", 1.0, "Hb", job="job2"))
+    f3 = j2.add(flow("f3", 1.0, "Hb", "Hr2", job="job2"))
+    r2 = j2.add(compute("r2", 1.0, "Hr2", job="job2"))
+    j2.add_edge(d, f3)
+    j2.add_edge(f3, r2)
+    return j1, j2
+
+
+# ----------------------------------------------------------------------
+# generic map-reduce generator (used by tests/benchmarks beyond the paper)
+# ----------------------------------------------------------------------
+def mapreduce(name: str, n_map: int, n_reduce: int, *,
+              map_time: float = 1.0, shuffle_time: float = 1.0,
+              reduce_time: float = 1.0, hosts_per_side: int | None = None,
+              unit_frac: Optional[float] = None, job: str | None = None,
+              host_prefix: str | None = None) -> MXDAG:
+    """n_map mappers shuffling all-to-all into n_reduce reducers.
+
+    ``host_prefix`` lets multiple jobs share the same physical hosts
+    (multi-job scheduling experiments); default: per-job private hosts."""
+    job = job or name
+    hp = host_prefix if host_prefix is not None else name
+    g = MXDAG(name)
+    nm_hosts = hosts_per_side or n_map
+    nr_hosts = hosts_per_side or n_reduce
+    maps = [g.add(compute(f"{name}.m{i}", map_time,
+                          f"{hp}.M{i % nm_hosts}", job=job,
+                          unit=None if unit_frac is None
+                          else unit_frac * map_time))
+            for i in range(n_map)]
+    reduces = [g.add(compute(f"{name}.r{j}", reduce_time,
+                             f"{hp}.R{j % nr_hosts}", job=job))
+               for j in range(n_reduce)]
+    for i, m in enumerate(maps):
+        for j, r in enumerate(reduces):
+            f = g.add(flow(f"{name}.s{i}_{j}", shuffle_time / n_reduce,
+                           f"{hp}.M{i % nm_hosts}",
+                           f"{hp}.R{j % nr_hosts}", job=job,
+                           unit=None if unit_frac is None
+                           else unit_frac * shuffle_time / n_reduce))
+            g.add_edge(m, f)
+            g.add_edge(f, r)
+    return g

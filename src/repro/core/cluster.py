@@ -1,0 +1,65 @@
+"""Cluster resource model: hosts with processor pools and NICs.
+
+Resource naming convention (matches ``MXTask.resources()``):
+
+- ``"<host>.<proc>"``   — a processor pool with an integer slot count
+  (compute tasks occupy one slot exclusively, non-preemptively),
+- ``"<host>.nic_out"`` / ``"<host>.nic_in"`` — NIC directions with a float
+  capacity (flows share them; rate allocation is policy-driven and
+  preemptible, reflecting the paper's observation that network tasks cannot
+  be isolated the way compute tasks can).
+
+Capacities are normalized: a flow of ``size`` seconds completes in ``size``
+seconds when allocated rate 1.0.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+from repro.core.graph import MXDAG
+from repro.core.task import TaskKind
+
+
+@dataclasses.dataclass(frozen=True)
+class Host:
+    name: str
+    procs: Mapping[str, int] = dataclasses.field(
+        default_factory=lambda: {"cpu": 1})
+    nic_in: float = 1.0
+    nic_out: float = 1.0
+
+
+class Cluster:
+    def __init__(self, hosts: list[Host]) -> None:
+        self.hosts = {h.name: h for h in hosts}
+
+    @classmethod
+    def homogeneous(cls, names: list[str], *, procs: Mapping[str, int] | None = None,
+                    nic: float = 1.0) -> "Cluster":
+        return cls([Host(n, procs=dict(procs or {"cpu": 1}),
+                         nic_in=nic, nic_out=nic) for n in names])
+
+    @classmethod
+    def for_graph(cls, g: MXDAG, *, nic: float = 1.0) -> "Cluster":
+        """Build a sufficient homogeneous cluster for a graph's placements."""
+        names: set[str] = set()
+        procs: dict[str, int] = {}
+        for t in g:
+            if t.kind is TaskKind.COMPUTE:
+                names.add(t.host)  # type: ignore[arg-type]
+                procs[t.proc] = 1
+            else:
+                names.add(t.src)   # type: ignore[arg-type]
+                names.add(t.dst)   # type: ignore[arg-type]
+        procs = procs or {"cpu": 1}
+        return cls.homogeneous(sorted(names), procs=procs, nic=nic)
+
+    def slots(self, resource: str) -> int:
+        host, pool = resource.rsplit(".", 1)
+        return int(self.hosts[host].procs.get(pool, 0))
+
+    def bandwidth(self, resource: str) -> float:
+        host, direction = resource.rsplit(".", 1)
+        h = self.hosts[host]
+        return h.nic_out if direction == "nic_out" else h.nic_in

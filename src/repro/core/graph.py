@@ -1,0 +1,332 @@
+"""MXDAG: directed acyclic graph of MXTasks (paper §3.1–§3.2).
+
+Implements:
+
+- the graph itself (explicit compute *and* network nodes, dummy start/end),
+- edge-level pipelineability (an edge may stream units instead of barriers),
+- the path-length calculus of §3.2:
+    Eq.(1)  Len(P_seq)  = Σ Size(v_i)/Rsrc(v_i)
+    Eq.(2)  Len(P_pipe) = Σ Unit(v_i)/Rsrc(v_i) + max_i Size(v_i)/Rsrc(v_i)
+                          − max_i Unit(v_i)/Rsrc(v_i)
+- a contention-free analytic evaluator (earliest first-unit-out / completion
+  recursion) that is exact for deterministic pipelines with unbounded
+  buffers and reduces to Eq.(1)/(2) on chains,
+- critical-path extraction and per-task slack (drives Principle 1/2),
+- copath detection (groups of paths sharing head and tail; §3.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable, Iterator, Optional
+
+from repro.core.task import MXTask, TaskKind
+
+START = "__start__"
+END = "__end__"
+
+
+@dataclasses.dataclass(frozen=True)
+class Edge:
+    src: str
+    dst: str
+    pipelined: bool = False  # stream units across this edge when both ends allow
+
+
+@dataclasses.dataclass
+class NodeTiming:
+    """Analytic timing for one task under a given resource assignment."""
+    ready: float        # earliest time the first unit of input is available
+    first_out: float    # earliest time the first output unit is emitted
+    completion: float   # earliest completion of the whole task
+    latest_completion: float = float("inf")  # from reverse pass (slack calc)
+
+    @property
+    def slack(self) -> float:
+        return self.latest_completion - self.completion
+
+
+class MXDAG:
+    """A directed acyclic graph over MXTasks with pipelineable edges."""
+
+    def __init__(self, name: str = "mxdag") -> None:
+        self.name = name
+        self.tasks: dict[str, MXTask] = {}
+        self.edges: dict[tuple[str, str], Edge] = {}
+        self._succ: dict[str, list[str]] = {}
+        self._pred: dict[str, list[str]] = {}
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+    def add(self, task: MXTask) -> MXTask:
+        if task.name in self.tasks:
+            raise ValueError(f"duplicate task {task.name}")
+        self.tasks[task.name] = task
+        self._succ[task.name] = []
+        self._pred[task.name] = []
+        return task
+
+    def add_edge(self, src: str | MXTask, dst: str | MXTask,
+                 *, pipelined: bool = False) -> Edge:
+        s = src.name if isinstance(src, MXTask) else src
+        d = dst.name if isinstance(dst, MXTask) else dst
+        for n in (s, d):
+            if n not in self.tasks:
+                raise KeyError(f"unknown task {n}")
+        if (s, d) in self.edges:
+            raise ValueError(f"duplicate edge {s}->{d}")
+        e = Edge(s, d, pipelined)
+        self.edges[(s, d)] = e
+        self._succ[s].append(d)
+        self._pred[d].append(s)
+        self._check_acyclic()
+        return e
+
+    def chain(self, *tasks: MXTask, pipelined: bool = False) -> None:
+        """Add tasks (if new) and connect them in sequence."""
+        for t in tasks:
+            if t.name not in self.tasks:
+                self.add(t)
+        for a, b in zip(tasks, tasks[1:]):
+            self.add_edge(a, b, pipelined=pipelined)
+
+    def set_pipelined(self, src: str, dst: str, pipelined: bool) -> None:
+        e = self.edges[(src, dst)]
+        self.edges[(src, dst)] = Edge(e.src, e.dst, pipelined)
+
+    def copy(self) -> "MXDAG":
+        g = MXDAG(self.name)
+        g.tasks = dict(self.tasks)
+        g.edges = dict(self.edges)
+        g._succ = {k: list(v) for k, v in self._succ.items()}
+        g._pred = {k: list(v) for k, v in self._pred.items()}
+        return g
+
+    # ------------------------------------------------------------------
+    # structure
+    # ------------------------------------------------------------------
+    def preds(self, name: str) -> list[str]:
+        return self._pred[name]
+
+    def succs(self, name: str) -> list[str]:
+        return self._succ[name]
+
+    def sources(self) -> list[str]:
+        return [n for n in self.tasks if not self._pred[n]]
+
+    def sinks(self) -> list[str]:
+        return [n for n in self.tasks if not self._succ[n]]
+
+    def topo_order(self) -> list[str]:
+        indeg = {n: len(self._pred[n]) for n in self.tasks}
+        frontier = sorted(n for n, d in indeg.items() if d == 0)
+        order: list[str] = []
+        while frontier:
+            n = frontier.pop(0)
+            order.append(n)
+            for s in self._succ[n]:
+                indeg[s] -= 1
+                if indeg[s] == 0:
+                    frontier.append(s)
+            frontier.sort()
+        if len(order) != len(self.tasks):
+            raise ValueError("graph has a cycle")
+        return order
+
+    def _check_acyclic(self) -> None:
+        self.topo_order()
+
+    def effective_pipelined(self, e: Edge) -> bool:
+        """An edge streams units only if marked AND both endpoints can.
+
+        A non-pipelineable consumer needs its full input before starting, so
+        a pipelined edge into it degenerates to a barrier (paper §3.1).
+        """
+        return (e.pipelined
+                and self.tasks[e.src].pipelineable
+                and self.tasks[e.dst].pipelineable)
+
+    # ------------------------------------------------------------------
+    # §3.2 path-length calculus (explicit-path form, Eqs. 1 & 2)
+    # ------------------------------------------------------------------
+    @staticmethod
+    def len_sequential(tasks: Iterable[MXTask],
+                       rsrc: Optional[dict[str, float]] = None) -> float:
+        """Eq. (1): length of a sequential-only path."""
+        r = rsrc or {}
+        return sum(t.time(r.get(t.name, 1.0)) for t in tasks)
+
+    @staticmethod
+    def len_pipelined(tasks: Iterable[MXTask],
+                      rsrc: Optional[dict[str, float]] = None) -> float:
+        """Eq. (2): length of a pipelineable-only path."""
+        ts = list(tasks)
+        r = rsrc or {}
+        units = [t.unit_time(r.get(t.name, 1.0)) for t in ts]
+        sizes = [t.time(r.get(t.name, 1.0)) for t in ts]
+        return sum(units) + max(sizes) - max(units)
+
+    # ------------------------------------------------------------------
+    # analytic evaluator (contention-free; exact on chains, lower bound
+    # in general — the DES in simulator.py adds resource contention)
+    # ------------------------------------------------------------------
+    def evaluate(self, rsrc: Optional[dict[str, float]] = None,
+                 release: Optional[dict[str, float]] = None,
+                 ) -> dict[str, NodeTiming]:
+        """Earliest-time recursion over the DAG.
+
+        ready(v)      = max over in-edges e=(p,v):
+                          first_out(p) if e streams else completion(p)
+        first_out(v)  = ready(v) + unit_time(v)
+        completion(v) = max( ready(v) + time(v),
+                             max over streaming preds: completion(p) + unit_time(v) )
+
+        For deterministic unit pipelines with unbounded buffers this is exact
+        and reproduces Eq. (2) on pipelineable chains.
+        """
+        r = rsrc or {}
+        rel = release or {}
+        out: dict[str, NodeTiming] = {}
+        for n in self.topo_order():
+            t = self.tasks[n]
+            f = r.get(n, 1.0)
+            ready = rel.get(n, 0.0)
+            comp_floor = 0.0
+            for p in self._pred[n]:
+                e = self.edges[(p, n)]
+                pt = out[p]
+                if self.effective_pipelined(e):
+                    ready = max(ready, pt.first_out)
+                    comp_floor = max(comp_floor, pt.completion + t.unit_time(f))
+                else:
+                    ready = max(ready, pt.completion)
+            completion = max(ready + t.time(f), comp_floor)
+            out[n] = NodeTiming(ready=ready,
+                                first_out=ready + t.unit_time(f),
+                                completion=completion)
+        return out
+
+    def makespan(self, rsrc: Optional[dict[str, float]] = None,
+                 release: Optional[dict[str, float]] = None) -> float:
+        timing = self.evaluate(rsrc, release)
+        return max((t.completion for t in timing.values()), default=0.0)
+
+    def with_slack(self, rsrc: Optional[dict[str, float]] = None,
+                   ) -> dict[str, NodeTiming]:
+        """Forward + reverse pass: fills ``latest_completion`` (⇒ slack)."""
+        timing = self.evaluate(rsrc)
+        ms = max((t.completion for t in timing.values()), default=0.0)
+        r = rsrc or {}
+        for n in reversed(self.topo_order()):
+            t = self.tasks[n]
+            f = r.get(n, 1.0)
+            if not self._succ[n]:
+                timing[n].latest_completion = ms
+                continue
+            lc = float("inf")
+            for s in self._succ[n]:
+                st = self.tasks[s]
+                sf = r.get(s, 1.0)
+                e = self.edges[(n, s)]
+                if self.effective_pipelined(e):
+                    # successor needs our first unit by latest_start(s);
+                    # conservative: our completion by its latest_completion
+                    # minus one of its units.
+                    lc = min(lc, timing[s].latest_completion - st.unit_time(sf))
+                else:
+                    lc = min(lc, timing[s].latest_completion - st.time(sf))
+            timing[n].latest_completion = lc
+        return timing
+
+    def critical_path(self, rsrc: Optional[dict[str, float]] = None,
+                      ) -> list[str]:
+        """Longest path under the analytic evaluator (ties: lexicographic)."""
+        timing = self.evaluate(rsrc)
+        r = rsrc or {}
+        # walk back from the sink with max completion
+        cur = max(self.sinks(), key=lambda n: (timing[n].completion, n))
+        path = [cur]
+        while self._pred[cur]:
+            t = self.tasks[cur]
+            f = r.get(cur, 1.0)
+            best, best_val = None, -1.0
+            for p in self._pred[cur]:
+                e = self.edges[(p, cur)]
+                pt = timing[p]
+                if self.effective_pipelined(e):
+                    v = max(pt.first_out + t.time(f),
+                            pt.completion + t.unit_time(f))
+                else:
+                    v = pt.completion + t.time(f)
+                if v > best_val + 1e-12 or (abs(v - best_val) <= 1e-12
+                                            and (best is None or p < best)):
+                    best, best_val = p, v
+            # only follow preds that actually bind the completion
+            if best is None or best_val + 1e-9 < timing[cur].completion:
+                break
+            cur = best
+            path.append(cur)
+        path.reverse()
+        return path
+
+    # ------------------------------------------------------------------
+    # copaths (§3.2): groups of ≥2 distinct paths with same head & tail
+    # ------------------------------------------------------------------
+    def paths_between(self, head: str, tail: str,
+                      limit: int = 10000) -> list[list[str]]:
+        out: list[list[str]] = []
+
+        def dfs(n: str, acc: list[str]) -> None:
+            if len(out) >= limit:
+                return
+            if n == tail:
+                out.append(acc + [n])
+                return
+            for s in self._succ[n]:
+                dfs(s, acc + [n])
+
+        dfs(head, [])
+        return out
+
+    def copaths(self, limit: int = 10000) -> dict[tuple[str, str], list[list[str]]]:
+        """All (head, tail) pairs joined by ≥2 distinct paths."""
+        # count paths between all pairs via DP to avoid useless DFS
+        order = self.topo_order()
+        idx = {n: i for i, n in enumerate(order)}
+        npaths: dict[tuple[str, str], int] = {}
+        for h in order:
+            counts = {h: 1}
+            for n in order[idx[h]:]:
+                c = counts.get(n, 0)
+                if not c:
+                    continue
+                for s in self._succ[n]:
+                    counts[s] = counts.get(s, 0) + c
+            for t, c in counts.items():
+                if t != h and c >= 2:
+                    npaths[(h, t)] = c
+        return {pair: self.paths_between(*pair, limit=limit)
+                for pair in sorted(npaths)}
+
+    # ------------------------------------------------------------------
+    def network_tasks(self) -> list[MXTask]:
+        return [t for t in self.tasks.values() if t.kind is TaskKind.NETWORK]
+
+    def compute_tasks(self) -> list[MXTask]:
+        return [t for t in self.tasks.values() if t.kind is TaskKind.COMPUTE]
+
+    def pipelineable_edges(self) -> list[Edge]:
+        return [e for e in self.edges.values()
+                if self.tasks[e.src].pipelineable
+                and self.tasks[e.dst].pipelineable]
+
+    def __len__(self) -> int:
+        return len(self.tasks)
+
+    def __iter__(self) -> Iterator[MXTask]:
+        return iter(self.tasks.values())
+
+    def __repr__(self) -> str:
+        return (f"MXDAG({self.name}: {len(self.tasks)} tasks, "
+                f"{len(self.edges)} edges, "
+                f"{len(self.network_tasks())} network)")

@@ -1,0 +1,105 @@
+"""Runtime monitoring & straggler identification over an MXDAG (§4.3).
+
+Because MXDAG distinguishes compute from network tasks, lagging progress on
+a node immediately identifies *which kind* of straggler it is — "traditional
+DAG cannot distinguish those two kinds of stragglers".  The monitor also
+re-estimates task sizes from observed progress and recomputes the critical
+path so the scheduler can replan at runtime.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.graph import MXDAG
+from repro.core.simulator import SimResult
+from repro.core.task import MXTask, TaskKind
+
+
+@dataclasses.dataclass
+class Straggler:
+    task: str
+    kind: TaskKind          # host straggler vs network straggler
+    expected_finish: float
+    projected_finish: float
+
+    @property
+    def lag(self) -> float:
+        return self.projected_finish - self.expected_finish
+
+
+@dataclasses.dataclass
+class Observation:
+    time: float
+    fraction: float         # fraction of the task's work completed
+
+
+class Monitor:
+    def __init__(self, graph: MXDAG, expected: SimResult,
+                 *, threshold: float = 0.2):
+        """``threshold``: relative lag beyond which a task is a straggler."""
+        self.graph = graph
+        self.expected = expected
+        self.threshold = threshold
+        self.obs: dict[str, Observation] = {}
+
+    def observe(self, task: str, fraction: float, time: float) -> None:
+        if task not in self.graph.tasks:
+            raise KeyError(task)
+        self.obs[task] = Observation(time=time, fraction=min(1.0, fraction))
+
+    # ------------------------------------------------------------------
+    def projected_finish(self, task: str) -> Optional[float]:
+        """Linear extrapolation from observed progress."""
+        o = self.obs.get(task)
+        if o is None:
+            return None
+        if o.fraction >= 1.0:
+            return o.time
+        exp_start = self.expected.start[task]
+        if o.fraction <= 0.0:
+            # not started: shift the expected duration to start "now"
+            dur = self.expected.finish[task] - exp_start
+            return max(o.time, exp_start) + dur
+        rate = o.fraction / max(o.time - exp_start, 1e-12)
+        return o.time + (1.0 - o.fraction) / rate
+
+    def stragglers(self) -> list[Straggler]:
+        out = []
+        for name, o in sorted(self.obs.items()):
+            proj = self.projected_finish(name)
+            exp = self.expected.finish[name]
+            dur = max(exp - self.expected.start[name], 1e-12)
+            if proj is not None and proj > exp + self.threshold * dur:
+                out.append(Straggler(task=name,
+                                     kind=self.graph.tasks[name].kind,
+                                     expected_finish=exp,
+                                     projected_finish=proj))
+        return out
+
+    def host_stragglers(self) -> list[Straggler]:
+        return [s for s in self.stragglers() if s.kind is TaskKind.COMPUTE]
+
+    def network_stragglers(self) -> list[Straggler]:
+        return [s for s in self.stragglers() if s.kind is TaskKind.NETWORK]
+
+    # ------------------------------------------------------------------
+    def reestimated_graph(self) -> MXDAG:
+        """Graph with task sizes re-scaled by observed progress rates."""
+        g = self.graph.copy()
+        for name, o in self.obs.items():
+            proj = self.projected_finish(name)
+            if proj is None or o.fraction >= 1.0:
+                continue
+            t = g.tasks[name]
+            exp_start = self.expected.start[name]
+            new_size = max(proj - exp_start, 1e-12)
+            unit = t.unit
+            if unit is not None:
+                unit = unit * new_size / max(t.size, 1e-12)
+            g.tasks[name] = dataclasses.replace(t, size=new_size, unit=unit)
+        return g
+
+    def replan_critical_path(self) -> list[str]:
+        """New critical path after folding in runtime observations."""
+        return self.reestimated_graph().critical_path()

@@ -1,0 +1,361 @@
+"""Discrete-event simulator for MXDAG execution on a cluster.
+
+Models exactly the behaviours the paper reasons about:
+
+- compute tasks occupy processor slots exclusively and non-preemptively
+  (compute "can be easily isolated"),
+- network flows share NIC bandwidth under a pluggable allocation policy
+  ("fair" max-min sharing — the network-aware-DAG baseline of Fig. 1(b) —
+  or "priority" — the co-scheduler of Fig. 1(c)); flow rates are
+  preemptible and recomputed at every event,
+- pipelined edges stream units: the consumer may process its j-th unit only
+  once every streaming predecessor has *delivered* input fraction
+  ≥ (j+1)/n_units (unit-granular, as in Fig. 5),
+- coflows (for the §2.2 baseline): synchronized start, MADD-style coupled
+  rates (members' rates proportional to remaining work so they finish
+  together), and all-or-nothing downstream gating.
+
+The simulator advances by exact rate integration between events; events are
+unit boundaries, task completions, and release times, so no behaviour change
+can occur between events and the result is exact for piecewise-constant
+rates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from repro.core.cluster import Cluster
+from repro.core.graph import MXDAG
+from repro.core.task import MXTask, TaskKind
+
+EPS = 1e-9
+
+
+@dataclasses.dataclass
+class SimResult:
+    start: dict[str, float]
+    finish: dict[str, float]
+    makespan: float
+    job_completion: dict[str, float]
+
+    def jct(self, job: str) -> float:
+        return self.job_completion[job]
+
+
+@dataclasses.dataclass
+class _State:
+    task: MXTask
+    work: float = 0.0
+    started: Optional[float] = None
+    finished: Optional[float] = None
+    has_slot: bool = False
+
+    @property
+    def done(self) -> bool:
+        return self.finished is not None
+
+    def delivered_fraction(self) -> float:
+        """Fraction of output delivered downstream (unit granularity)."""
+        t = self.task
+        if self.done:
+            return 1.0
+        if t.size <= 0:
+            return 1.0
+        u = t.effective_unit
+        return min(1.0, math.floor(self.work / u + EPS) * u / t.size)
+
+
+class Simulator:
+    def __init__(self, graph: MXDAG, cluster: Optional[Cluster] = None, *,
+                 policy: str = "fair",
+                 priorities: Optional[dict[str, float]] = None,
+                 releases: Optional[dict[str, float]] = None,
+                 coflows: Optional[list[set[str]]] = None) -> None:
+        if policy not in ("fair", "priority"):
+            raise ValueError(f"unknown policy {policy}")
+        self.g = graph
+        self.cluster = cluster or Cluster.for_graph(graph)
+        self.policy = policy
+        self.prio = dict(priorities or {})
+        self.releases = dict(releases or {})
+        self.coflows = [set(c) for c in (coflows or [])]
+        self._coflow_of: dict[str, int] = {}
+        for i, c in enumerate(self.coflows):
+            for n in c:
+                if n in self._coflow_of:
+                    raise ValueError(f"{n} in two coflows")
+                if self.g.tasks[n].kind is not TaskKind.NETWORK:
+                    raise ValueError(f"coflow member {n} must be a flow")
+                self._coflow_of[n] = i
+
+    # ------------------------------------------------------------------
+    def run(self, horizon: float = 1e15) -> SimResult:
+        g = self.g
+        st = {n: _State(t) for n, t in g.tasks.items()}
+        now = 0.0
+        slots_free = {f"{h}.{p}": k
+                      for h, host in self.cluster.hosts.items()
+                      for p, k in host.procs.items()}
+
+        def coflow_done(i: int) -> bool:
+            return all(st[m].done for m in self.coflows[i])
+
+        def pred_satisfied_for_start(n: str) -> bool:
+            """Can task n begin its first unit now?"""
+            for p in g.preds(n):
+                e = g.edges[(p, n)]
+                ps = st[p]
+                ci = self._coflow_of.get(p)
+                if ci is not None:
+                    if not coflow_done(ci):        # all-or-nothing gating
+                        return False
+                    continue
+                if g.effective_pipelined(e):
+                    nu = g.tasks[n].n_units
+                    if ps.delivered_fraction() + EPS < 1.0 / nu:
+                        return False
+                elif not ps.done:
+                    return False
+            # coflow synchronized start: every member's preds must be done
+            ci = self._coflow_of.get(n)
+            if ci is not None:
+                for m in self.coflows[ci]:
+                    for p in g.preds(m):
+                        if not st[p].done:
+                            return False
+            return True
+
+        def work_cap(n: str) -> float:
+            """Max work task n may perform given currently delivered inputs.
+
+            Quantized to the *consumer's* unit granularity: unit j may be
+            processed only once its full input (fraction (j+1)/n_units) has
+            been delivered by every streaming predecessor (Fig. 5).
+            """
+            t = g.tasks[n]
+            cap = t.size
+            nu = t.n_units
+            for p in g.preds(n):
+                e = g.edges[(p, n)]
+                if self._coflow_of.get(p) is not None:
+                    continue  # gated at start; coflow edges are barriers
+                if g.effective_pipelined(e) and not st[p].done:
+                    frac = st[p].delivered_fraction()
+                    enabled = math.floor(frac * nu + EPS)
+                    cap = min(cap, enabled * t.effective_unit)
+            return cap
+
+        def release(n: str) -> float:
+            return self.releases.get(n, 0.0)
+
+        # main loop ----------------------------------------------------
+        guard = 0
+        max_iters = 10000 * (len(g.tasks) + 1) + sum(
+            t.n_units for t in g.tasks.values())
+        while any(not s.done for s in st.values()):
+            guard += 1
+            if guard > max_iters:
+                raise RuntimeError("simulator did not converge (livelock?)")
+
+            # 1) start tasks whose gating allows it
+            startable = [n for n, s in st.items()
+                         if s.started is None and release(n) <= now + EPS
+                         and pred_satisfied_for_start(n)]
+            # compute tasks need a free slot; dispatch by (priority, name)
+            for n in sorted(startable,
+                            key=lambda n: (self.prio.get(n, 0.0), n)):
+                t = g.tasks[n]
+                if t.kind is TaskKind.COMPUTE:
+                    r = t.resources()[0]
+                    if slots_free.get(r, 0) >= 1:
+                        slots_free[r] -= 1
+                        st[n].has_slot = True
+                        st[n].started = now
+                else:
+                    st[n].started = now
+                if t.size <= EPS and st[n].started is not None:
+                    st[n].finished = now
+                    if st[n].has_slot:
+                        slots_free[t.resources()[0]] += 1
+                        st[n].has_slot = False
+
+            # zero-size completions may unlock more starts immediately
+            if any(s.started is not None and s.done and
+                   g.tasks[n].size <= EPS for n, s in st.items()):
+                # cheap: loop again to re-evaluate gating at same timestamp
+                if any(st[n].started is None and release(n) <= now + EPS
+                       and pred_satisfied_for_start(n)
+                       for n in st):
+                    continue
+
+            # 2) rates
+            rates = self._allocate_rates(st, work_cap)
+
+            # 3) dt to next boundary
+            dt = horizon - now
+            progressing = False
+            for n, s in st.items():
+                if s.done or s.started is None:
+                    continue
+                r = rates.get(n, 0.0)
+                if r <= EPS:
+                    continue
+                progressing = True
+                t = g.tasks[n]
+                u = t.effective_unit
+                # next unit boundary strictly above current work
+                k = math.floor(s.work / u + EPS) + 1
+                targets = [min(k * u, t.size), t.size, work_cap(n)]
+                for tgt in targets:
+                    if tgt > s.work + EPS:
+                        dt = min(dt, (tgt - s.work) / r)
+            future_rel = [rel for n, rel in self.releases.items()
+                          if st[n].started is None and rel > now + EPS]
+            if future_rel:
+                dt = min(dt, min(future_rel) - now)
+            if not progressing:
+                if future_rel:
+                    now = min(future_rel)
+                    continue
+                # could be waiting on a compute slot that frees only at a
+                # completion — but nothing progresses ⇒ deadlock
+                pend = [n for n, s in st.items() if not s.done]
+                raise RuntimeError(f"deadlock at t={now:.6g}: {pend}")
+            dt = max(dt, 0.0)
+
+            # 4) integrate
+            now += dt
+            for n, s in st.items():
+                if s.done or s.started is None:
+                    continue
+                r = rates.get(n, 0.0)
+                if r > EPS:
+                    s.work = min(g.tasks[n].size, s.work + r * dt)
+
+            # 5) completions
+            for n, s in st.items():
+                t = g.tasks[n]
+                if not s.done and s.started is not None \
+                        and s.work >= t.size - EPS:
+                    s.finished = now
+                    if s.has_slot:
+                        slots_free[t.resources()[0]] += 1
+                        s.has_slot = False
+
+        start = {n: s.started for n, s in st.items()}         # type: ignore
+        finish = {n: s.finished for n, s in st.items()}       # type: ignore
+        jobs: dict[str, float] = {}
+        for n, s in st.items():
+            j = g.tasks[n].job
+            jobs[j] = max(jobs.get(j, 0.0), s.finished)       # type: ignore
+        return SimResult(start=start, finish=finish,
+                         makespan=max(finish.values(), default=0.0),
+                         job_completion=jobs)
+
+    # ------------------------------------------------------------------
+    def _allocate_rates(self, st: dict[str, _State],
+                        work_cap) -> dict[str, float]:
+        """Instantaneous rates for all runnable tasks.
+
+        Compute tasks: rate 1 while holding a slot and not input-starved.
+        Flows: weighted max-min fair within a priority class, classes served
+        in strict priority order on residual NIC capacity.  Coflow members
+        get weights ∝ remaining work (MADD: finish together).
+
+        Paper semantic (§4.1): a *pipelined* task "enforces the resources to
+        be occupied right after the precedent task begins processing, which
+        may contend with the tasks on the critical path" — so a flow fed by
+        a streaming edge contends in the top priority class once started.
+        This is precisely why Principle 1 applies pipelining only when it
+        shrinks the makespan (Fig. 3 case 3).
+        """
+        g = self.g
+        rates: dict[str, float] = {}
+        flows: list[str] = []
+        for n, s in st.items():
+            if s.done or s.started is None:
+                continue
+            if work_cap(n) <= s.work + EPS:
+                rates[n] = 0.0           # starved on pipelined input
+                continue
+            t = g.tasks[n]
+            if t.kind is TaskKind.COMPUTE:
+                rates[n] = 1.0 if s.has_slot else 0.0
+            else:
+                flows.append(n)
+
+        if not flows:
+            return rates
+
+        residual = {}
+        for n in flows:
+            for r in g.tasks[n].resources():
+                residual.setdefault(r, self.cluster.bandwidth(r))
+
+        def weight(n: str) -> float:
+            ci = self._coflow_of.get(n)
+            if ci is None:
+                return 1.0
+            rem = {m: g.tasks[m].size - st[m].work for m in self.coflows[ci]
+                   if not st[m].done}
+            mx = max(rem.values(), default=1.0)
+            return max(rem.get(n, 0.0) / mx, 1e-6) if mx > 0 else 1.0
+
+        def flow_class(n: str) -> float:
+            # streaming flows occupy bandwidth eagerly (paper §4.1)
+            if any(g.effective_pipelined(g.edges[(p, n)])
+                   for p in g.preds(n)):
+                return 0.0
+            return self.prio.get(n, 0.0)
+
+        if self.policy == "priority":
+            classes = sorted({flow_class(n) for n in flows})
+        else:
+            classes = [None]
+
+        for cls in classes:
+            group = [n for n in flows
+                     if cls is None or flow_class(n) == cls]
+            self._waterfill(group, weight, residual, rates)
+        return rates
+
+    def _waterfill(self, group: list[str], weight, residual: dict[str, float],
+                   rates: dict[str, float]) -> None:
+        """Weighted max-min fair allocation of ``group`` on ``residual``."""
+        g = self.g
+        unfrozen = sorted(group)
+        while unfrozen:
+            # bottleneck NIC: minimizes residual / total weight
+            best_r, best_ratio = None, float("inf")
+            wsum: dict[str, float] = {}
+            for r in residual:
+                w = sum(weight(n) for n in unfrozen
+                        if r in g.tasks[n].resources())
+                if w > EPS:
+                    wsum[r] = w
+                    ratio = residual[r] / w
+                    if ratio < best_ratio - EPS:
+                        best_r, best_ratio = r, ratio
+            if best_r is None:
+                for n in unfrozen:
+                    rates[n] = 0.0
+                return
+            frozen_now = [n for n in unfrozen
+                          if best_r in g.tasks[n].resources()]
+            for n in frozen_now:
+                alloc = weight(n) * best_ratio
+                rates[n] = alloc
+                for r in g.tasks[n].resources():
+                    residual[r] = max(0.0, residual[r] - alloc)
+            unfrozen = [n for n in unfrozen if n not in frozen_now]
+
+
+def simulate(graph: MXDAG, cluster: Optional[Cluster] = None, *,
+             policy: str = "fair",
+             priorities: Optional[dict[str, float]] = None,
+             releases: Optional[dict[str, float]] = None,
+             coflows: Optional[list[set[str]]] = None) -> SimResult:
+    return Simulator(graph, cluster, policy=policy, priorities=priorities,
+                     releases=releases, coflows=coflows).run()

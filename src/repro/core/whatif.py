@@ -1,0 +1,74 @@
+"""What-if analysis on MXDAGs (paper §4.3).
+
+MXDAG's explicit network tasks make questions answerable that a traditional
+DAG cannot express: *would pipelining these two tasks help?*, *what unit
+(chunk) size is best?*, *what if we re-partition work between compute and
+network?*  Each query re-evaluates the scheduled DAG in the DES.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from repro.core.cluster import Cluster
+from repro.core.graph import MXDAG
+from repro.core.schedule import MXDAGScheduler
+from repro.core.task import MXTask
+
+
+@dataclasses.dataclass
+class WhatIfResult:
+    baseline: float
+    variant: float
+
+    @property
+    def speedup(self) -> float:
+        return self.baseline / self.variant if self.variant > 0 else float("inf")
+
+    @property
+    def helps(self) -> bool:
+        return self.variant < self.baseline - 1e-9
+
+
+class WhatIf:
+    def __init__(self, graph: MXDAG, cluster: Optional[Cluster] = None,
+                 scheduler: Optional[MXDAGScheduler] = None):
+        self.graph = graph
+        self.cluster = cluster
+        self.scheduler = scheduler or MXDAGScheduler(try_pipelining=False)
+
+    def _makespan(self, g: MXDAG) -> float:
+        return self.scheduler.schedule(g, self.cluster) \
+                   .simulate(self.cluster).makespan
+
+    def baseline(self) -> float:
+        return self._makespan(self.graph)
+
+    # ------------------------------------------------------------------
+    def pipeline_edges(self, edges: Sequence[tuple[str, str]]) -> WhatIfResult:
+        """Would streaming these edges shrink the makespan? (Fig. 3)"""
+        g = self.graph.copy()
+        for s, d in edges:
+            g.set_pipelined(s, d, True)
+        return WhatIfResult(self.baseline(), self._makespan(g))
+
+    def set_unit(self, task: str, unit: Optional[float]) -> WhatIfResult:
+        """Change a task's pipeline unit (chunk) size."""
+        g = self.graph.copy()
+        t = g.tasks[task]
+        g.tasks[task] = dataclasses.replace(t, unit=unit)
+        return WhatIfResult(self.baseline(), self._makespan(g))
+
+    def sweep_unit(self, task: str, units: Sequence[float],
+                   ) -> list[tuple[float, float]]:
+        """Makespan as a function of the unit size — pick the knee."""
+        return [(u, self.set_unit(task, u).variant) for u in units]
+
+    def repartition(self, changes: dict[str, float]) -> WhatIfResult:
+        """Re-size tasks (e.g. move work between compute and network)."""
+        g = self.graph.copy()
+        for name, size in changes.items():
+            t = g.tasks[name]
+            unit = t.unit if (t.unit is None or t.unit <= size) else size
+            g.tasks[name] = dataclasses.replace(t, size=size, unit=unit)
+        return WhatIfResult(self.baseline(), self._makespan(g))

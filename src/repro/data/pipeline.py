@@ -1,0 +1,63 @@
+"""Deterministic synthetic data pipeline.
+
+Produces a *learnable* token stream (per-sample affine progressions
+``tok_t = (phase + stride·t) mod V`` mixed with noise tokens) so the
+end-to-end training example exhibits real loss descent, while remaining
+fully deterministic in (seed, step) — a restart from a checkpoint resumes
+the exact same stream (fault-tolerance requirement), and each (host,
+data-shard) can materialize only its slice (multi-pod requirement).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    noise_prob: float = 0.05
+
+
+class SyntheticLM:
+    """Stateless-per-step synthetic LM stream: ``batch_at(step)``."""
+
+    def __init__(self, cfg: DataConfig,
+                 sharding: Optional[jax.sharding.NamedSharding] = None):
+        self.cfg = cfg
+        self.sharding = sharding
+
+    def _host_batch(self, step: int) -> np.ndarray:
+        cfg = self.cfg
+        rng = np.random.default_rng((cfg.seed, step))
+        B, S, V = cfg.global_batch, cfg.seq_len, cfg.vocab_size
+        phase = rng.integers(0, V, size=(B, 1))
+        stride = rng.integers(1, min(V - 1, 64), size=(B, 1))
+        t = np.arange(S)[None, :]
+        toks = (phase + stride * t) % V
+        noise = rng.random((B, S)) < cfg.noise_prob
+        toks = np.where(noise, rng.integers(0, V, size=(B, S)), toks)
+        return toks.astype(np.int32)
+
+    def batch_at(self, step: int) -> dict:
+        toks_np = self._host_batch(step)
+        if self.sharding is not None:
+            toks = jax.make_array_from_callback(
+                toks_np.shape, self.sharding,
+                lambda idx: toks_np[idx])
+        else:
+            toks = jnp.asarray(toks_np)
+        return {"tokens": toks}
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1

@@ -1,0 +1,128 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to "not on TPU": in this CPU container the kernel
+bodies execute in Python interpret mode for correctness validation; on a
+real TPU the same call sites compile to Mosaic.  ``flash_attention`` is
+differentiable: the forward runs the kernel, the backward recomputes via
+the jnp oracle (standard recompute-flash; a fused bwd kernel is a listed
+follow-up in DESIGN.md).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.moe_gmm import gmm as _gmm
+from repro.kernels.ssd import ssd_intra_chunk as _ssd_intra
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ----------------------------------------------------------------------
+# flash attention: [B,S,H,hd] layout (model-side convention)
+# ----------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _flash(q_bhsd, k_bhsd, v_bhsd, causal, scale):
+    return flash_attention_bhsd(q_bhsd, k_bhsd, v_bhsd, causal=causal,
+                                scale=scale, interpret=_interpret_default())
+
+
+def _flash_fwd(q, k, v, causal, scale):
+    return _flash(q, k, v, causal, scale), (q, k, v)
+
+
+def _flash_bwd(causal, scale, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: _ref.flash_attention_ref(
+            q_, k_, v_, causal=causal, scale=scale), q, k, v)
+    return vjp(g)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True,
+                    scale: Optional[float] = None) -> jax.Array:
+    """q: [B,S,H,hd]; k,v: [B,T,K,hd] → [B,S,H,hd]  (GQA-aware)."""
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    o = _flash(qt, kt, vt, causal, scale)
+    return jnp.swapaxes(o, 1, 2)
+
+
+# ----------------------------------------------------------------------
+# SSD: full chunked layer built on the intra-chunk kernel
+# ----------------------------------------------------------------------
+def ssd_chunked_pallas(xh: jax.Array, dt: jax.Array, A: jax.Array,
+                       Bm: jax.Array, Cm: jax.Array, chunk: int,
+                       init_state: Optional[jax.Array] = None):
+    """Same contract as models.ssm.ssd_chunked, intra-chunk via Pallas.
+
+    xh: [B,L,H,P], dt: [B,L,H], A: [H], Bm/Cm: [B,L,G,N]."""
+    Bsz, L, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    assert L % chunk == 0
+    nc = L // chunk
+
+    # flatten (batch, head) and (batch, group) for the kernel grid
+    x_k = xh.reshape(Bsz, nc, chunk, H, P).transpose(0, 3, 1, 2, 4) \
+        .reshape(Bsz * H, nc, chunk, P)
+    dt_k = dt.reshape(Bsz, nc, chunk, H).transpose(0, 3, 1, 2) \
+        .reshape(Bsz * H, nc, chunk)
+    A_k = jnp.tile(A, Bsz)
+    B_k = Bm.reshape(Bsz, nc, chunk, G, N).transpose(0, 3, 1, 2, 4) \
+        .reshape(Bsz * G, nc, chunk, N)
+    C_k = Cm.reshape(Bsz, nc, chunk, G, N).transpose(0, 3, 1, 2, 4) \
+        .reshape(Bsz * G, nc, chunk, N)
+
+    y_intra, states, cum = _ssd_intra(
+        x_k, dt_k, A_k, B_k, C_k, interpret=_interpret_default())
+
+    # inter-chunk recurrence + correction (linear, outside the kernel)
+    states = states.reshape(Bsz, H, nc, N, P)
+    cum_b = cum.reshape(Bsz, H, nc, chunk)
+    chunk_decay = jnp.exp(cum_b[..., -1])                  # [B,H,nc]
+    s0 = (jnp.zeros((Bsz, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(s, inp):
+        dec, st = inp                                      # [B,H], [B,H,N,P]
+        s_new = s * dec[..., None, None] + jnp.swapaxes(st, -1, -2)
+        return s_new, s
+
+    final, prev = jax.lax.scan(
+        step, s0, (jnp.moveaxis(chunk_decay, 2, 0),
+                   jnp.moveaxis(states, 2, 0)))
+    prev = jnp.moveaxis(prev, 0, 2)                        # [B,H,nc,P,N]
+
+    hpg = H // G
+    Ch = jnp.repeat(
+        Cm.reshape(Bsz, nc, chunk, G, N)[:, :, :, :, None, :], hpg, axis=4
+    ).reshape(Bsz, nc, chunk, H, N)
+    decay_from_start = jnp.exp(cum_b).transpose(0, 2, 3, 1)  # [B,nc,Q,H]
+    y_inter = jnp.einsum(
+        "bcqhn,bhcpn->bcqhp",
+        Ch.astype(jnp.float32) * decay_from_start[..., None], prev)
+
+    y_intra = y_intra.reshape(Bsz, H, nc, chunk, P) \
+        .transpose(0, 2, 3, 1, 4)                          # [B,nc,Q,H,P]
+    y = (y_intra + y_inter).reshape(Bsz, L, H, P)
+    return y.astype(xh.dtype), final
+
+
+# ----------------------------------------------------------------------
+# grouped matmul
+# ----------------------------------------------------------------------
+def grouped_matmul(x: jax.Array, w: jax.Array, **kw) -> jax.Array:
+    """x: [E,C,d]; w: [E,d,f] → [E,C,f]."""
+    return _gmm(x, w, interpret=_interpret_default(), **kw)

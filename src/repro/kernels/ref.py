@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, scale=None):
+    """q: [B,H,S,hd]; k,v: [B,K,T,hd].  Plain softmax attention in fp32."""
+    B, H, S, hd = q.shape
+    K, T = k.shape[1], k.shape[2]
+    G = H // K
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    k = jnp.repeat(k, G, axis=1)
+    v = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(S)[:, None] >= jnp.arange(T)[None, :]
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_intra_chunk_ref(x, dt, A, Bm, Cm):
+    """Oracle for the SSD intra-chunk kernel.
+
+    x: [BH,nc,Q,P], dt: [BH,nc,Q], A: [BH], Bm/Cm: [BG,nc,Q,N].
+    Returns (y [BH,nc,Q,P] f32, states [BH,nc,N,P] f32, cum [BH,nc,Q] f32).
+    """
+    BH, nc, Q, P = x.shape
+    BG, N = Bm.shape[0], Bm.shape[3]
+    hpg = BH // BG
+    f32 = jnp.float32
+    x = x.astype(f32)
+    dt = dt.astype(f32)
+    Bh = jnp.repeat(Bm.astype(f32), hpg, axis=0)
+    Ch = jnp.repeat(Cm.astype(f32), hpg, axis=0)
+
+    dA = dt * A[:, None, None]
+    cum = jnp.cumsum(dA, axis=-1)
+    seg = cum[..., :, None] - cum[..., None, :]
+    tril = jnp.tril(jnp.ones((Q, Q), bool))
+    Lmat = jnp.where(tril, jnp.exp(jnp.where(tril, seg, 0.0)), 0.0)
+    CB = jnp.einsum("hcqn,hckn->hcqk", Ch, Bh)
+    xdt = x * dt[..., None]
+    y = jnp.einsum("hcqk,hckp->hcqp", CB * Lmat, xdt)
+    decay_end = jnp.exp(cum[..., -1:] - cum)
+    states = jnp.einsum("hcqn,hcqp->hcnp", Bh * decay_end[..., None], xdt)
+    return y, states, cum
+
+
+def ssd_sequential_ref(x, dt, A, Bm, Cm, init_state=None):
+    """Fully sequential SSM recurrence — oracle for the *whole* SSD layer
+    (chunked == sequential is the state-space-duality claim itself).
+
+    x: [B,L,H,P], dt: [B,L,H], A: [H], Bm/Cm: [B,L,G,N].
+    Returns (y [B,L,H,P], final_state [B,H,P,N]).
+    """
+    Bsz, L, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    hpg = H // G
+    f32 = jnp.float32
+    Bh = jnp.repeat(Bm.astype(f32), hpg, axis=2)
+    Ch = jnp.repeat(Cm.astype(f32), hpg, axis=2)
+    xf = x.astype(f32)
+    dtf = dt.astype(f32)
+    s = (jnp.zeros((Bsz, H, P, N), f32) if init_state is None
+         else init_state.astype(f32))
+
+    def step(s, t):
+        dec = jnp.exp(dtf[:, t] * A)                       # [B,H]
+        s = s * dec[..., None, None] + jnp.einsum(
+            "bhn,bhp,bh->bhpn", Bh[:, t], xf[:, t], dtf[:, t])
+        y = jnp.einsum("bhn,bhpn->bhp", Ch[:, t], s)
+        return s, y
+
+    s, ys = jax.lax.scan(step, s, jnp.arange(L))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), s
+
+
+def gmm_ref(x, w):
+    """x: [E,C,d]; w: [E,d,f] → [E,C,f] (fp32 accumulate)."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,412 @@
+"""Trip-count-aware cost analysis over compiled SPMD HLO text.
+
+``compiled.cost_analysis()`` visits every while body ONCE — with
+scan-over-layers (and microbatch scans) that under-counts flops, bytes
+and collective traffic by the trip count.  This module parses the HLO
+module into its computations, recovers each while loop's trip count from
+its condition (`compare(iter, constant), direction=LT`), and accumulates:
+
+- flops: 2·|out|·K for every ``dot`` (including dots inside fusions) —
+  matmuls dominate every assigned arch;
+- hbm bytes: Σ (operand + output bytes) per top-level op, fusions counted
+  as single ops (their internals stay in registers/VMEM — XLA's own
+  fusion model);
+- collective bytes per kind, with physically-meaningful conventions:
+  all-reduce 2×in, all-gather out, reduce-scatter in, all-to-all in,
+  collective-permute in (ring-equivalent wire bytes per device);
+
+all scaled by the product of enclosing loop trip counts.  The result is
+the per-device roofline numerator set for §Roofline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\](?:\{[^}]*\})?")
+
+
+def _shape_info(type_str: str) -> tuple[int, list[tuple[str, list[int]]]]:
+    """Total bytes + [(dtype, dims), ...] for a (possibly tuple) type."""
+    total = 0
+    shapes = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        ds = [int(x) for x in dims.split(",")] if dims else []
+        n = 1
+        for d in ds:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+        shapes.append((dt, ds))
+    return total, shapes
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    out_type: str
+    operands: list[str]
+    attrs: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: dict[str, str]          # param name -> type str
+    ops: list[Op]
+    types: dict[str, str]           # %name -> type str (params + defs)
+
+
+_COMP_HEADER = re.compile(
+    r"^(ENTRY\s+)?%?([\w.\-]+)(?:\.clone)?\s*\((.*)\)\s*->\s*(.+?)\s*\{\s*$")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(.*?\)|\S+)\s+([\w\-]+)\((.*)$")
+
+
+def parse_module(text: str) -> tuple[dict[str, Computation], Optional[str]]:
+    comps: dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HEADER.match(line.strip())
+            if m:
+                is_entry, name, params_str, _ = m.groups()
+                params = {}
+                # params: "a: f32[2], b: (f32[], s32[])"
+                depth = 0
+                cur_name, buf = None, ""
+                tokens = params_str
+                parts = []
+                for ch in tokens:
+                    if ch == "(" :
+                        depth += 1
+                    elif ch == ")":
+                        depth -= 1
+                    if ch == "," and depth == 0:
+                        parts.append(buf)
+                        buf = ""
+                    else:
+                        buf += ch
+                if buf.strip():
+                    parts.append(buf)
+                for part in parts:
+                    if ":" in part:
+                        pname, ptype = part.split(":", 1)
+                        params[pname.strip()] = ptype.strip()
+                cur = Computation(name=name, params=params, ops=[],
+                                  types=dict(params))
+                if is_entry:
+                    entry = name
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_LINE.match(line)
+        if m:
+            name, out_type, kind, rest = m.groups()
+            # split rest at the matching close paren of the call
+            depth = 1
+            i = 0
+            for i, ch in enumerate(rest):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+            args = rest[:i]
+            attrs = rest[i + 1:]
+            operands = re.findall(r"%([\w.\-]+)", args)
+            op = Op(name=name, kind=kind, out_type=out_type,
+                    operands=operands, attrs=attrs + " ||| " + args)
+            cur.ops.append(op)
+            cur.types[name] = out_type
+    return comps, entry
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", scale: float = 1.0) -> None:
+        self.flops += other.flops * scale
+        self.bytes += other.bytes * scale
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v * scale
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+class HloCostModel:
+    def __init__(self, text: str):
+        self.comps, self.entry = parse_module(text)
+        self.constants: dict[str, int] = {}
+        for comp in self.comps.values():
+            for op in comp.ops:
+                if op.kind == "constant":
+                    m = re.search(r"\|\|\|\s*(-?\d+)\s*$", op.attrs)
+                    if m and op.out_type.startswith(("s32[]", "u32[]",
+                                                     "s64[]", "u64[]")):
+                        self.constants[op.name] = int(m.group(1))
+        self._memo: dict[str, Cost] = {}
+
+    # ------------------------------------------------------------------
+    def _dot_flops(self, comp: Computation, op: Op) -> float:
+        out_bytes, out_shapes = _shape_info(op.out_type)
+        if not out_shapes:
+            return 0.0
+        out_numel = 1
+        for d in out_shapes[0][1]:
+            out_numel *= d
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+        lhs_type = comp.types.get(op.operands[0], "") if op.operands else ""
+        _, lhs_shapes = _shape_info(lhs_type)
+        k = 1
+        if m and m.group(1) and lhs_shapes:
+            dims = lhs_shapes[0][1]
+            for idx in m.group(1).split(","):
+                i = int(idx)
+                if i < len(dims):
+                    k *= dims[i]
+        return 2.0 * out_numel * k
+
+    def _trip_count(self, cond_name: str) -> int:
+        cond = self.comps.get(cond_name)
+        if cond is None:
+            return 1
+        # direct compare or fusion wrapping a compare
+        for op in cond.ops:
+            if op.kind == "compare" and "direction=LT" in op.attrs:
+                for o in op.operands:
+                    if o in self.constants:
+                        return max(1, self.constants[o])
+            if op.kind == "fusion":
+                called = re.search(r"calls=%([\w.\-]+)", op.attrs)
+                if called and called.group(1) in self.comps:
+                    inner = self.comps[called.group(1)]
+                    has_lt = any(i.kind == "compare" and
+                                 "direction=LT" in i.attrs
+                                 for i in inner.ops)
+                    if has_lt:
+                        for o in op.operands:
+                            if o in self.constants:
+                                return max(1, self.constants[o])
+        return 1
+
+    # ops whose operand reads cannot be fused away on TPU (matmuls read
+    # full panels; gathers/scatters/collectives stream their inputs)
+    _READ_OPS = {"dot", "gather", "scatter", "dynamic-slice",
+                 "dynamic-update-slice", "sort",
+                 *COLLECTIVES, *(c + "-start" for c in COLLECTIVES)}
+
+    def _op_bytes(self, comp: Computation, op: Op) -> float:
+        """HBM traffic model approximating TPU fusion: every op pays its
+        OUTPUT bytes (write traffic ≈ read traffic of its consumer chain);
+        operand reads are added only for ops that stream large inputs
+        irrespective of fusion (dot/gather/scatter/collectives).  Counting
+        operands for every op would double-count fused elementwise chains
+        (validated: ~5× overcount on the dense-7B cell)."""
+        skip = {"parameter", "constant", "tuple", "get-tuple-element",
+                "bitcast", "reshape", "copy", "after-all", "token",
+                "partition-id", "replica-id", "iota"}
+        if op.kind in skip:
+            return 0.0
+        # dynamic-update-slice updates IN PLACE (buffer aliased): traffic
+        # is the update slice, not the whole buffer.  Without this, every
+        # scan stash / decode-cache write counts the full stacked buffer
+        # per iteration (measured: 6.4 TB phantom traffic on dsv3 train).
+        if op.kind == "dynamic-update-slice" or (
+                op.kind == "fusion" and self._fusion_has_dus(op)):
+            opb = []
+            for o in op.operands:
+                t = comp.types.get(o)
+                if t:
+                    b, _ = _shape_info(t)
+                    if b > 0:
+                        opb.append(b)
+            return 2.0 * min(opb) if opb else 0.0
+        total, _ = _shape_info(op.out_type)
+        if op.kind in self._READ_OPS or op.kind == "fusion":
+            for o in op.operands:
+                t = comp.types.get(o)
+                if t:
+                    b, _ = _shape_info(t)
+                    total += b
+        return float(total)
+
+    def _fusion_root_kind(self, op: Op) -> str:
+        m = re.search(r"calls=%([\w.\-]+)", op.attrs)
+        if not m:
+            return ""
+        called = self.comps.get(m.group(1))
+        if not called or not called.ops:
+            return ""
+        return called.ops[-1].kind
+
+    def _fusion_has_dus(self, op: Op) -> bool:
+        """Fusions containing a dynamic-update-slice alias their buffer
+        operand (the root may be a convert wrapping the DUS)."""
+        m = re.search(r"calls=%([\w.\-]+)", op.attrs)
+        if not m:
+            return False
+        called = self.comps.get(m.group(1))
+        if not called:
+            return False
+        return any(o.kind == "dynamic-update-slice" for o in called.ops)
+
+    def _collective(self, comp: Computation, op: Op) -> dict:
+        base = op.kind[:-6] if op.kind.endswith("-start") else op.kind
+        if base not in COLLECTIVES or op.kind.endswith("-done"):
+            return {}
+        in_bytes = 0.0
+        for o in op.operands:
+            t = comp.types.get(o)
+            if t:
+                b, _ = _shape_info(t)
+                in_bytes += b
+        out_bytes, _ = _shape_info(op.out_type)
+        if base == "all-reduce":
+            wire = 2.0 * in_bytes
+        elif base == "all-gather":
+            wire = float(out_bytes)
+        else:                       # RS / A2A / permute
+            wire = in_bytes
+        return {base: wire}
+
+    # ------------------------------------------------------------------
+    def cost_of(self, comp_name: str, *, inside_fusion: bool = False
+                ) -> Cost:
+        key = f"{comp_name}|{inside_fusion}"
+        if key in self._memo:
+            return self._memo[key]
+        comp = self.comps.get(comp_name)
+        c = Cost()
+        if comp is None:
+            return c
+        for op in comp.ops:
+            if op.kind == "dot":
+                c.flops += self._dot_flops(comp, op)
+                if not inside_fusion:
+                    c.bytes += self._op_bytes(comp, op)
+                continue
+            coll = self._collective(comp, op)
+            if coll:
+                for k, v in coll.items():
+                    c.coll[k] = c.coll.get(k, 0.0) + v
+                if not inside_fusion:
+                    c.bytes += self._op_bytes(comp, op)
+                continue
+            if op.kind == "while":
+                body = re.search(r"body=%([\w.\-]+)", op.attrs)
+                cond = re.search(r"condition=%([\w.\-]+)", op.attrs)
+                trips = self._trip_count(cond.group(1)) if cond else 1
+                if body:
+                    c.add(self.cost_of(body.group(1)), scale=trips)
+                if cond:
+                    c.add(self.cost_of(cond.group(1)), scale=trips)
+                continue
+            if op.kind in ("fusion",):
+                called = re.search(r"calls=%([\w.\-]+)", op.attrs)
+                if called:
+                    c.add(self.cost_of(called.group(1),
+                                       inside_fusion=True))
+                if not inside_fusion:
+                    c.bytes += self._op_bytes(comp, op)
+                continue
+            if op.kind in ("call", "conditional", "async-start"):
+                for m in re.finditer(
+                        r"(?:to_apply|calls|branch_computations=\{|"
+                        r"true_computation|false_computation)=?\{?%([\w.\-]+)",
+                        op.attrs):
+                    c.add(self.cost_of(m.group(1)))
+                continue
+            if op.kind in ("custom-call",):
+                if not inside_fusion:
+                    c.bytes += self._op_bytes(comp, op)
+                continue
+            if not inside_fusion:
+                c.bytes += self._op_bytes(comp, op)
+        self._memo[key] = c
+        return c
+
+    def total(self) -> Cost:
+        if self.entry is None:
+            return Cost()
+        return self.cost_of(self.entry)
+
+
+def analyze_text(text: str) -> Cost:
+    return HloCostModel(text).total()
+
+
+class _Reporter(HloCostModel):
+    """Debug: attribute cost to individual ops with trip multipliers."""
+
+    def top_ops(self, n: int = 25):
+        rows = []
+
+        def walk(comp_name: str, scale: float, inside_fusion: bool):
+            comp = self.comps.get(comp_name)
+            if comp is None:
+                return
+            for op in comp.ops:
+                if op.kind == "while":
+                    body = re.search(r"body=%([\w.\-]+)", op.attrs)
+                    cond = re.search(r"condition=%([\w.\-]+)", op.attrs)
+                    trips = self._trip_count(cond.group(1)) if cond else 1
+                    if body:
+                        walk(body.group(1), scale * trips, inside_fusion)
+                    continue
+                if op.kind == "fusion":
+                    called = re.search(r"calls=%([\w.\-]+)", op.attrs)
+                    if called:
+                        walk(called.group(1), scale, True)
+                    if not inside_fusion:
+                        b = self._op_bytes(comp, op)
+                        if b:
+                            rows.append((b * scale, "bytes", op.kind,
+                                         op.name, op.out_type[:60], scale))
+                    continue
+                coll = self._collective(comp, op)
+                if coll:
+                    for k, v in coll.items():
+                        rows.append((v * scale, "coll:" + k, op.kind,
+                                     op.name, op.out_type[:60], scale))
+                    continue
+                if op.kind == "dot":
+                    rows.append((self._dot_flops(comp, op) * scale,
+                                 "flops", op.kind, op.name,
+                                 op.out_type[:60], scale))
+                if not inside_fusion:
+                    b = self._op_bytes(comp, op)
+                    if b:
+                        rows.append((b * scale, "bytes", op.kind, op.name,
+                                     op.out_type[:60], scale))
+
+        walk(self.entry, 1.0, False)
+        rows.sort(reverse=True)
+        return rows[:n]

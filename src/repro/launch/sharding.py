@@ -1,0 +1,259 @@
+"""Sharding rules: param / batch / cache PartitionSpecs per arch × mesh.
+
+Strategy (DESIGN.md §6):
+- TP over "model": attention heads and FFN hidden; EP over "model" for MoE
+  expert banks; vocab over "model" for embed/lm_head.
+- DP over ("pod","data"): batch; with ``RunConfig.fsdp`` also params'
+  non-TP dim (ZeRO-3-style weight sharding — GSPMD inserts the per-layer
+  all-gathers).
+- Decode caches: batch over dp when divisible, cache sequence over
+  "model" (and over dp too when batch==1, e.g. long_500k).
+
+Every rule is divisibility-guarded: a dim that doesn't divide the axis
+size falls back to replication rather than failing to lower.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, RunConfig
+from repro.launch.mesh import dp_axes as _dp_axes
+
+Params = dict
+
+
+def _axsize(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _maybe(mesh, axes, dim: int):
+    """axes if dim divides evenly, else None (replicate)."""
+    return axes if axes and dim % _axsize(mesh, axes) == 0 else None
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            out.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return out
+
+
+def param_spec_for(path, shape, cfg: ArchConfig, run: RunConfig,
+                   mesh) -> P:
+    names = _path_names(path)
+    name = names[-1]
+    nd = len(shape)
+    if run.batch_axes == "all":
+        # pure-DP regime (tiny models): replicate params, batch owns the
+        # whole mesh; optionally FSDP over all axes
+        if run.fsdp:
+            for i, d in enumerate(shape):
+                if d % _axsize(mesh, mesh.axis_names) == 0:
+                    return P(*([None] * i + [mesh.axis_names]
+                               + [None] * (nd - i - 1)))
+        return P(*([None] * nd))
+    dp = _dp_axes(mesh)
+    fsdp = dp if run.fsdp else None
+
+    def spec(*entries):
+        # pad leading None for stacked layer axes
+        lead = nd - len(entries)
+        return P(*([None] * lead + list(entries)))
+
+    m = "model"
+    if name == "embed":
+        # vocab-sharded ONLY: fsdp on the d axis makes the token gather
+        # reshard pathologically (SPMD "involuntary full remat" warning)
+        return P(_maybe(mesh, m, shape[0]), None)
+    if name == "lm_head":
+        return P(_maybe(mesh, fsdp, shape[0]), _maybe(mesh, m, shape[1]))
+    if name == "vis_proj":
+        return P(None, _maybe(mesh, m, shape[1]))
+
+    # --- MoE expert banks: [.., E, d, f] / router [.., d, E] -----------
+    if "moe" in names:
+        if name in ("w_in", "w_gate"):
+            return spec(_maybe(mesh, m, shape[-3]),
+                        _maybe(mesh, fsdp, shape[-2]), None)
+        if name == "w_out":
+            return spec(_maybe(mesh, m, shape[-3]),
+                        _maybe(mesh, fsdp, shape[-2]), None)
+        if name == "router":
+            return spec(_maybe(mesh, fsdp, shape[-2]), None)
+        if name == "shared_in" or name == "shared_gate":
+            return spec(_maybe(mesh, fsdp, shape[-2]),
+                        _maybe(mesh, m, shape[-1]))
+        if name == "shared_out":
+            return spec(_maybe(mesh, m, shape[-2]),
+                        _maybe(mesh, fsdp, shape[-1]))
+
+    # --- attention ------------------------------------------------------
+    # head-aware TP (§Perf internvl2 iter 4 + whisper regression fix):
+    #   heads % tp == 0  -> aligned shard (ideal)
+    #   heads >= tp      -> flat shard (heads split across shards; the
+    #                       resharding cost beats 16x replicated compute —
+    #                       measured: whisper prefill 20 heads @ tp=16)
+    #   heads <  tp      -> replicate (flat sharding scatters single heads
+    #                       over 2+ shards and gathers per use — measured:
+    #                       internvl2 kv=8 @ tp=16 per-q-block all-gathers)
+    tp = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    q_ok = cfg.n_heads >= tp if cfg.n_heads else False
+    kv_ok = cfg.n_kv_heads >= tp if cfg.n_kv_heads else False
+    if name in ("wq", "wq_b"):
+        return spec(_maybe(mesh, fsdp, shape[-2]),
+                    _maybe(mesh, m if q_ok else None, shape[-1]))
+    if name in ("wk", "wv"):
+        return spec(_maybe(mesh, fsdp, shape[-2]),
+                    _maybe(mesh, m if kv_ok else None, shape[-1]))
+    if name == "wkv_b":     # MLA: output is per-head (H)
+        return spec(_maybe(mesh, fsdp, shape[-2]),
+                    _maybe(mesh, m if q_ok else None, shape[-1]))
+    if name in ("wq_a", "wkv_a"):
+        return spec(_maybe(mesh, fsdp, shape[-2]),
+                    _maybe(mesh, m, shape[-1]))
+    if name == "wo":
+        return spec(_maybe(mesh, m if q_ok else None, shape[-2]),
+                    _maybe(mesh, fsdp, shape[-1]))
+
+    # --- dense MLP -------------------------------------------------------
+    if name in ("w_in", "w_gate"):
+        return spec(_maybe(mesh, fsdp, shape[-2]),
+                    _maybe(mesh, m, shape[-1]))
+    if name == "w_out":
+        return spec(_maybe(mesh, m, shape[-2]),
+                    _maybe(mesh, fsdp, shape[-1]))
+    if name == "proj":                           # mtp 2d->d projection
+        return spec(_maybe(mesh, fsdp, shape[-2]),
+                    _maybe(mesh, m, shape[-1]))
+
+    # --- SSM -------------------------------------------------------------
+    if name == "in_proj":
+        return spec(_maybe(mesh, fsdp, shape[-2]),
+                    _maybe(mesh, m, shape[-1]))
+    if name == "out_proj":
+        return spec(_maybe(mesh, m, shape[-2]),
+                    _maybe(mesh, fsdp, shape[-1]))
+    if name == "conv_w":
+        return spec(None, _maybe(mesh, m, shape[-1]))
+    if name in ("conv_b", "norm_w"):
+        return spec(_maybe(mesh, m, shape[-1]))
+
+    # --- norms / scalars / vectors → replicate ---------------------------
+    return P(*([None] * nd))
+
+
+def param_shardings(params_shapes: Any, cfg: ArchConfig, run: RunConfig,
+                    mesh) -> Any:
+    """Pytree of NamedSharding matching a pytree of ShapeDtypeStruct."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    out = []
+    for path, leaf in flat:
+        spec = param_spec_for(path, leaf.shape, cfg, run, mesh)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def opt_state_shardings(opt_shapes: Any, params_shapes: Any,
+                        cfg: ArchConfig, run: RunConfig, mesh) -> Any:
+    """Optimizer moments follow their parameter's sharding (8-bit scale
+    tensors drop the last dim's sharding entry)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(opt_shapes)
+    out = []
+    for path, leaf in flat:
+        names = _path_names(path)
+        if names and names[0] == "step":
+            out.append(NamedSharding(mesh, P()))
+            continue
+        # path looks like ('m'|'v', <param path...>[, 'q'|'s'])
+        sub = [p for p in path[1:]]
+        if names[-1] in ("q", "s"):
+            sub = sub[:-1]
+        spec = param_spec_for(sub, leaf.shape, cfg, run, mesh) \
+            if sub else P()
+        entries = list(spec)
+        if names[-1] == "s":                     # scale: last dim is 1
+            entries = (entries + [None] * (len(leaf.shape) - len(entries)))
+            entries = entries[:len(leaf.shape)]
+            if entries:
+                entries[-1] = None
+        # pad/trim to rank
+        entries = (entries + [None] * (len(leaf.shape) - len(entries)))
+        entries = entries[:len(leaf.shape)]
+        out.append(NamedSharding(mesh, P(*entries)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ----------------------------------------------------------------------
+# batch / cache
+# ----------------------------------------------------------------------
+def batch_shardings(batch_shapes: Any, mesh,
+                    run: Optional[RunConfig] = None) -> Any:
+    dp = _dp_axes(mesh) if run is None or run.batch_axes != "all" \
+        else tuple(mesh.axis_names)
+
+    def one(leaf):
+        if not leaf.shape:
+            return NamedSharding(mesh, P())
+        # largest prefix of dp axes that divides the batch dim — a batch
+        # of 32 on a 256-chip mesh still shards 16-way over "data" instead
+        # of replicating outright (§Perf mamba2 iter 1: the old
+        # all-or-nothing fallback replicated prefill activations 256×)
+        axes: list = []
+        size = 1
+        for a in dp:
+            if leaf.shape[0] % (size * mesh.shape[a]) == 0:
+                axes.append(a)
+                size *= mesh.shape[a]
+            else:
+                break
+        if axes:
+            return NamedSharding(
+                mesh, P(tuple(axes), *([None] * (len(leaf.shape) - 1))))
+        return NamedSharding(mesh, P(*([None] * len(leaf.shape))))
+
+    return jax.tree.map(one, batch_shapes)
+
+
+def cache_shardings(cache_shapes: Any, cfg: ArchConfig, mesh) -> Any:
+    """Decode caches: [R, B, T, ...] (attn) / [R, B, ...] (ssm).
+
+    B over dp when divisible; the cache sequence dim T over "model", and
+    over ("data","model") combined when B==1 (long-context single-stream).
+    """
+    dp = _dp_axes(mesh)
+
+    def one(path, leaf):
+        names = _path_names(path)
+        shape = leaf.shape
+        nd = len(shape)
+        entries: list = [None] * nd
+        leaf_name = names[-1]
+        if leaf_name in ("k", "v", "ckv", "kr"):     # [R,B,T,...]
+            b_ax = _maybe(mesh, dp, shape[1])
+            entries[1] = b_ax
+            seq_axes = ("model",) if b_ax else tuple(
+                a for a in mesh.axis_names)
+            entries[2] = _maybe(mesh, seq_axes, shape[2])
+        elif leaf_name in ("conv", "state"):          # [R,B,...]
+            entries[1] = _maybe(mesh, dp, shape[1])
+        return NamedSharding(mesh, P(*entries))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    out = [one(path, leaf) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,37 @@
+"""ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+``input_specs(cfg, shape)`` returns the abstract batch for a train/prefill
+cell; ``decode_specs`` additionally returns the abstract KV/SSM cache via
+``jax.eval_shape`` over ``Model.init_cache`` (zero bytes allocated).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+S = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    B = shape.global_batch
+    batch = {"tokens": S((B, shape.seq_len), jnp.int32)}
+    if cfg.encoder_layers:
+        batch["audio_embeds"] = S(
+            (B, cfg.max_source_positions, cfg.d_model), jnp.bfloat16)
+    if cfg.vision_embed_dim:
+        batch["vision_embeds"] = S(
+            (B, cfg.vision_seq, cfg.vision_embed_dim), jnp.bfloat16)
+    return batch
+
+
+def decode_specs(model, cfg: ArchConfig, shape: ShapeConfig):
+    """(tokens, cache, index) stand-ins for one decode step with a
+    KV cache of seq_len."""
+    B = shape.global_batch
+    cache = jax.eval_shape(
+        lambda: model.init_cache(B, shape.seq_len))
+    tokens = S((B, 1), jnp.int32)
+    index = S((), jnp.int32)
+    return tokens, cache, index

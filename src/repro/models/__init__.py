@@ -1,0 +1,4 @@
+"""Model zoo: composable JAX definitions for the assigned architectures."""
+from repro.models.model import BlockSpec, Model, Segment, derive_segments
+
+__all__ = ["Model", "BlockSpec", "Segment", "derive_segments"]

@@ -1,0 +1,4 @@
+from repro.optim.adamw import AdamW, AdamWConfig, cosine_schedule
+from repro.optim import compression
+
+__all__ = ["AdamW", "AdamWConfig", "cosine_schedule", "compression"]

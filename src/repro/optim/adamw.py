@@ -1,0 +1,129 @@
+"""AdamW with cosine schedule, global-norm clipping, and optional 8-bit
+moment state (built from scratch — no optax in this environment).
+
+8-bit state: each moment tensor is stored as int8 with one fp32 absmax
+scale per trailing-axis row (block quantization).  For the ≥33B assigned
+archs this is what makes optimizer state fit 16 GiB/chip HBM at the
+assigned mesh (DESIGN.md §6); the quantization error is re-absorbed each
+step because m/v are re-quantized from the freshly updated fp32 values.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = dict
+
+
+# ----------------------------------------------------------------------
+# schedules
+# ----------------------------------------------------------------------
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+# ----------------------------------------------------------------------
+# int8 block quantization for moments
+# ----------------------------------------------------------------------
+def _quant8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequant8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+# ----------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: Callable | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    state_8bit: bool = False
+
+
+class AdamW:
+    def __init__(self, cfg: AdamWConfig = AdamWConfig()):
+        self.cfg = cfg
+
+    # -- state ----------------------------------------------------------
+    def init(self, params: Params) -> Params:
+        def zeros_like_moment(p):
+            if self.cfg.state_8bit:
+                return {"q": jnp.zeros(p.shape, jnp.int8),
+                        "s": jnp.zeros(p.shape[:-1] + (1,), jnp.float32)}
+            return jnp.zeros(p.shape, jnp.float32)
+
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(zeros_like_moment, params),
+            "v": jax.tree.map(zeros_like_moment, params),
+        }
+
+    def _read(self, moment):
+        if self.cfg.state_8bit:
+            return _dequant8(moment["q"], moment["s"])
+        return moment
+
+    def _write(self, value):
+        if self.cfg.state_8bit:
+            q, s = _quant8(value)
+            return {"q": q, "s": s}
+        return value
+
+    # -- update ----------------------------------------------------------
+    def update(self, grads: Params, state: Params, params: Params
+               ) -> tuple[Params, Params]:
+        cfg = self.cfg
+        step = state["step"] + 1
+        lr = cfg.lr(step) if callable(cfg.lr) else cfg.lr
+
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if cfg.clip_norm is not None:
+            gnorm = jnp.sqrt(sum(
+                jnp.sum(jnp.square(g)) for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-12))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+
+        bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m_st, v_st):
+            m = cfg.b1 * self._read(m_st) + (1 - cfg.b1) * g
+            v = cfg.b2 * self._read(v_st) + (1 - cfg.b2) * jnp.square(g)
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            decay = cfg.weight_decay if p.ndim >= 2 else 0.0
+            newp = (p.astype(jnp.float32)
+                    - lr * (delta + decay * p.astype(jnp.float32)))
+            return newp.astype(p.dtype), self._write(m), self._write(v)
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"],
+                           is_leaf=lambda x: isinstance(x, jax.Array))
+        # unzip the 3-tuples
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"step": step, "m": new_m, "v": new_v}

@@ -1,0 +1,62 @@
+"""Gradient compression with error feedback (beyond-paper distributed trick).
+
+Gradients are cast to fp8 (e4m3) before crossing the network; the
+quantization residual stays in a local error-feedback accumulator and is
+re-added next step, so the compression is unbiased over time (1-bit-Adam
+style analysis).  On the wire this halves every gradient collective's
+bytes vs bf16 — directly visible in the dry-run's collective-bytes term
+(§Roofline), which is how we measure it without hardware.
+
+The compress/decompress pair brackets the gradient sync:
+
+    err, g8 = compress(g + err)        # local
+    g8_synced = <reduce-scatter / all-reduce on fp8>
+    g = decompress(g8_synced)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = dict
+
+F8 = jnp.float8_e4m3fn
+F8_MAX = 448.0
+
+
+def init_error_state(params: Params) -> Params:
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_leaf(g: jax.Array, err: jax.Array
+                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (g8, scale, new_err).  Per-tensor absmax scaling into the
+    fp8 dynamic range; residual goes to the error accumulator."""
+    g32 = g.astype(jnp.float32) + err
+    absmax = jnp.max(jnp.abs(g32))
+    scale = jnp.maximum(absmax, 1e-12) / F8_MAX
+    g8 = (g32 / scale).astype(F8)
+    new_err = g32 - g8.astype(jnp.float32) * scale
+    return g8, scale, new_err
+
+
+def decompress_leaf(g8: jax.Array, scale: jax.Array) -> jax.Array:
+    return g8.astype(jnp.float32) * scale
+
+
+def compress_tree(grads: Params, err: Params):
+    out = jax.tree.map(compress_leaf, grads, err)
+    g8 = jax.tree.map(lambda t: t[0], out,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    scale = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda t: t[2], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return g8, scale, new_err
+
+
+def decompress_tree(g8: Params, scale: Params) -> Params:
+    return jax.tree.map(decompress_leaf, g8, scale)

@@ -1,0 +1,6 @@
+from repro.runtime.fault import (
+    LoopConfig, SimulatedFailure, StepMonitor, StragglerReport, run_training,
+)
+
+__all__ = ["LoopConfig", "SimulatedFailure", "StepMonitor",
+           "StragglerReport", "run_training"]

@@ -1,0 +1,146 @@
+"""Fault-tolerant training runtime.
+
+- periodic (optionally async) checkpointing with atomic rename,
+- crash/restart: the loop resumes from the latest checkpoint, and the
+  deterministic data pipeline replays the exact step's batch,
+- failure injection hooks for tests (``fail_at_step``),
+- straggler detection: per-step wall-time EWMA plus MXDAG-based
+  attribution (§4.3 of the paper — compute vs network straggler) when a
+  step MXDAG is provided,
+- elastic restart: a new mesh shape reshards the restored state
+  (checkpoint arrays are mesh-agnostic).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+
+from repro.checkpoint import ckpt as ckpt_lib
+from repro.core.graph import MXDAG
+from repro.core.monitor import Monitor
+from repro.core.simulator import SimResult
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class StragglerReport:
+    step: int
+    step_time: float
+    ewma: float
+    kind: str                  # "step-time" | "compute" | "network"
+    detail: str = ""
+
+
+class StepMonitor:
+    """EWMA wall-time monitor; with an expected step MXDAG it attributes
+    anomalies to compute vs network (paper §4.3)."""
+
+    def __init__(self, *, alpha: float = 0.2, threshold: float = 1.5,
+                 step_graph: Optional[MXDAG] = None,
+                 expected: Optional[SimResult] = None):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.ewma: Optional[float] = None
+        self.reports: list[StragglerReport] = []
+        self.mxdag_monitor = (Monitor(step_graph, expected)
+                              if step_graph is not None
+                              and expected is not None else None)
+
+    def record(self, step: int, seconds: float,
+               task_progress: Optional[dict[str, float]] = None
+               ) -> Optional[StragglerReport]:
+        if self.ewma is None:
+            self.ewma = seconds
+            return None
+        is_slow = seconds > self.threshold * self.ewma
+        self.ewma = (1 - self.alpha) * self.ewma + self.alpha * seconds
+        if not is_slow:
+            return None
+        kind, detail = "step-time", ""
+        if self.mxdag_monitor is not None and task_progress:
+            for task, frac in task_progress.items():
+                self.mxdag_monitor.observe(task, frac, seconds)
+            hosts = self.mxdag_monitor.host_stragglers()
+            nets = self.mxdag_monitor.network_stragglers()
+            if nets and (not hosts or nets[0].lag >= hosts[0].lag):
+                kind, detail = "network", nets[0].task
+            elif hosts:
+                kind, detail = "compute", hosts[0].task
+        rep = StragglerReport(step=step, step_time=seconds,
+                              ewma=self.ewma, kind=kind, detail=detail)
+        self.reports.append(rep)
+        return rep
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int
+    ckpt_dir: str
+    ckpt_every: int = 50
+    ckpt_async: bool = False
+    keep: int = 3
+    fail_at_step: Optional[int] = None      # failure injection (tests)
+    max_restarts: int = 3
+
+
+def run_training(loop: LoopConfig, *,
+                 train_step: Callable,          # (state, batch) -> (state, metrics)
+                 init_state: Callable,          # () -> state pytree
+                 batch_at: Callable,            # (step) -> batch
+                 state_shardings: Any = None,
+                 monitor: Optional[StepMonitor] = None,
+                 on_step: Optional[Callable] = None) -> dict:
+    """Crash-safe training loop.  Returns summary dict."""
+    restarts = 0
+    history: list[float] = []
+    injected = {"armed": loop.fail_at_step is not None}
+
+    while True:
+        # ---- (re)start: restore or init --------------------------------
+        last = ckpt_lib.latest_step(loop.ckpt_dir)
+        state = init_state()
+        start_step = 0
+        if last is not None:
+            state = ckpt_lib.restore(loop.ckpt_dir, last, state,
+                                     shardings=state_shardings)
+            start_step = last + 1
+        try:
+            pending = None
+            for step in range(start_step, loop.total_steps):
+                if injected["armed"] and step == loop.fail_at_step:
+                    injected["armed"] = False
+                    raise SimulatedFailure(f"injected at step {step}")
+                t0 = time.monotonic()
+                batch = batch_at(step)
+                state, metrics = train_step(state, batch)
+                jax.block_until_ready(jax.tree.leaves(state)[0])
+                dt = time.monotonic() - t0
+                history.append(float(metrics.get("loss", float("nan"))))
+                if monitor is not None:
+                    monitor.record(step, dt)
+                if on_step is not None:
+                    on_step(step, metrics)
+                if (step + 1) % loop.ckpt_every == 0 \
+                        or step == loop.total_steps - 1:
+                    if loop.ckpt_async:
+                        pending = ckpt_lib.save_async(
+                            loop.ckpt_dir, step, state, keep=loop.keep)
+                    else:
+                        ckpt_lib.save(loop.ckpt_dir, step, state,
+                                      keep=loop.keep)
+            if pending is not None:
+                pending.join()
+            return {"completed": True, "restarts": restarts,
+                    "final_step": loop.total_steps - 1,
+                    "loss_history": history}
+        except SimulatedFailure:
+            restarts += 1
+            if restarts > loop.max_restarts:
+                raise
+            # loop re-enters: restore from latest checkpoint

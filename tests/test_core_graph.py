@@ -1,0 +1,131 @@
+"""Unit tests: MXDAG graph structure and the §3.2 path calculus."""
+import pytest
+
+from repro.core import MXDAG, compute, flow
+from repro.core import builders
+
+
+def chain_graph(tasks, pipelined=False):
+    g = MXDAG("chain")
+    g.chain(*tasks, pipelined=pipelined)
+    return g
+
+
+class TestConstruction:
+    def test_duplicate_task_rejected(self):
+        g = MXDAG()
+        g.add(compute("a", 1.0, "A"))
+        with pytest.raises(ValueError):
+            g.add(compute("a", 1.0, "A"))
+
+    def test_cycle_rejected(self):
+        g = MXDAG()
+        g.add(compute("a", 1.0, "A"))
+        g.add(compute("b", 1.0, "B"))
+        g.add_edge("a", "b")
+        with pytest.raises(ValueError):
+            g.add_edge("b", "a")
+
+    def test_task_validation(self):
+        with pytest.raises(ValueError):
+            compute("x", -1.0, "A")
+        with pytest.raises(ValueError):
+            compute("x", 1.0, "A", unit=2.0)   # unit > size
+        with pytest.raises(ValueError):
+            flow("f", 1.0, "A", None)          # missing dst
+
+    def test_topo_order(self):
+        g = builders.fig1_jobs()
+        order = g.topo_order()
+        pos = {n: i for i, n in enumerate(order)}
+        for (s, d) in g.edges:
+            assert pos[s] < pos[d]
+
+    def test_units(self):
+        t = compute("a", 1.0, "A", unit=0.25)
+        assert t.pipelineable and t.n_units == 4
+        t2 = compute("b", 1.0, "A")
+        assert not t2.pipelineable and t2.n_units == 1
+
+
+class TestCalculus:
+    def test_eq1_sequential(self):
+        ts = [compute("a", 2.0, "A"), compute("b", 3.0, "B")]
+        assert MXDAG.len_sequential(ts) == 5.0
+        assert MXDAG.len_sequential(ts, {"a": 0.5}) == 7.0
+
+    def test_eq2_pipelined(self):
+        # Fig. 5 style: units u_i, sizes N*u_i (equal unit counts)
+        ts = [compute("a", 4.0, "A", unit=1.0),
+              compute("b", 8.0, "B", unit=2.0)]
+        # sum(units) + max(sizes) - max(units) = 3 + 8 - 2 = 9
+        assert MXDAG.len_pipelined(ts) == 9.0
+
+    def test_eq2_throughput_capped_by_slowest_stage(self):
+        # paper: "maximum throughput of the flow can be restricted by the
+        # CPU processing speed when pipeline is used"
+        cpu = compute("c", 10.0, "A", unit=1.0)   # slow producer
+        f = flow("f", 2.0, "A", "B", unit=0.2)    # fast flow
+        ln = MXDAG.len_pipelined([cpu, f])
+        assert ln == pytest.approx(1.0 + 0.2 + 10.0 - 1.0)
+
+    def test_evaluate_matches_eq1_on_sequential_chain(self):
+        ts = [compute(f"t{i}", 1.0 + i, "H") for i in range(4)]
+        g = chain_graph(ts)
+        timing = g.evaluate()
+        assert timing["t3"].completion == pytest.approx(
+            MXDAG.len_sequential(ts))
+
+    def test_evaluate_matches_eq2_on_pipelined_chain(self):
+        n = 5
+        ts = [compute(f"t{i}", (i + 1) * n * 0.5, "H", unit=(i + 1) * 0.5)
+              for i in range(3)]
+        g = chain_graph(ts, pipelined=True)
+        timing = g.evaluate()
+        assert timing["t2"].completion == pytest.approx(
+            MXDAG.len_pipelined(ts))
+
+    def test_pipelined_edge_into_unpipelineable_consumer_is_barrier(self):
+        a = compute("a", 2.0, "A", unit=0.5)
+        b = compute("b", 1.0, "B")           # not pipelineable
+        g = MXDAG()
+        g.chain(a, b, pipelined=True)
+        assert g.evaluate()["b"].completion == pytest.approx(3.0)
+
+    def test_partial_resource_scaling(self):
+        ts = [compute("a", 2.0, "A")]
+        g = chain_graph(ts)
+        assert g.evaluate({"a": 0.5})["a"].completion == pytest.approx(4.0)
+
+
+class TestCriticalPath:
+    def test_fig1_critical_path(self):
+        g = builders.fig1_jobs()
+        assert g.critical_path() == ["a", "f1", "b", "f2", "c"]
+
+    def test_slack_zero_on_critical_path(self):
+        g = builders.fig1_jobs()
+        timing = g.with_slack()
+        for n in g.critical_path():
+            assert timing[n].slack == pytest.approx(0.0, abs=1e-9)
+        assert timing["f3"].slack > 0
+
+    def test_makespan(self):
+        g = builders.fig1_jobs()
+        assert g.makespan() == pytest.approx(5.0)
+
+
+class TestCopaths:
+    def test_fig4a_copath(self):
+        g = builders.fig1_jobs()
+        cps = g.copaths()
+        assert ("a", "c") in cps
+        paths = cps[("a", "c")]
+        assert sorted(map(tuple, paths)) == [
+            ("a", "f1", "b", "f2", "c"), ("a", "f3", "c")]
+
+    def test_copath_members_share_head_and_tail(self):
+        g = builders.fig2b()
+        for (h, t), paths in g.copaths().items():
+            for p in paths:
+                assert p[0] == h and p[-1] == t

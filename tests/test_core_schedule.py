@@ -1,0 +1,145 @@
+"""Integration tests: the paper's figures, validated numerically (§2, §4)."""
+import pytest
+
+from repro.core import (
+    AltruisticMultiScheduler, CoflowConfig, FairShareScheduler, MXDAG,
+    MXDAGScheduler, simulate,
+)
+from repro.core import builders
+
+
+class TestFig1:
+    """Co-scheduling beats network-aware fair sharing (Fig. 1)."""
+
+    def test_coscheduling_beats_fair_share(self):
+        g = builders.fig1_jobs()
+        fair = FairShareScheduler().schedule(g).simulate()
+        mx = MXDAGScheduler().schedule(g).simulate()
+        assert mx.makespan < fair.makespan
+        assert mx.makespan == pytest.approx(5.0)
+        assert fair.makespan == pytest.approx(6.0)
+
+    def test_task_on_c_starts_earlier(self):
+        """T2 < T1: prioritizing f1 over f3 lets c start earlier."""
+        g = builders.fig1_jobs()
+        fair = FairShareScheduler().schedule(g).simulate()
+        mx = MXDAGScheduler().schedule(g).simulate()
+        assert mx.start["c"] < fair.start["c"]
+
+
+class TestFig2:
+    """Coflow lacks global view: every grouping is suboptimal (§2.2)."""
+
+    def test_fig2a_asymmetric_compute_times(self):
+        g = builders.fig2a(t1=3.0, t2=1.0)
+        mx = MXDAGScheduler().schedule(g).simulate()
+        cof = CoflowConfig(builders.fig2a_coflows()).schedule(g).simulate()
+        fair = FairShareScheduler().schedule(g).simulate()
+        assert mx.makespan < cof.makespan
+        assert mx.makespan <= fair.makespan
+
+    def test_fig2b_all_three_coflow_groupings_suboptimal(self):
+        g = builders.fig2b()
+        mx = MXDAGScheduler().schedule(g).simulate()
+        for variant in ("b1", "b2", "b3"):
+            cof = CoflowConfig(builders.fig2b_coflows(variant)) \
+                .schedule(g).simulate()
+            assert mx.makespan < cof.makespan, variant
+
+    def test_fig2b_optimal_delays_f4(self):
+        """Optimal schedule avoids f3/f4 sharing C's egress NIC."""
+        g = builders.fig2b()
+        mx = MXDAGScheduler().schedule(g)
+        res = mx.simulate()
+        f3 = (res.start["f3"], res.finish["f3"])
+        f4 = (res.start["f4"], res.finish["f4"])
+        overlap = min(f3[1], f4[1]) - max(f3[0], f4[0])
+        assert overlap <= 1e-9 or res.makespan == pytest.approx(
+            MXDAGScheduler().schedule(g).meta["predicted_makespan"])
+
+
+class TestFig3:
+    """Pipelineability: no-op off the critical path, win on it,
+    loss when it induces NIC contention on it (Fig. 3)."""
+
+    @pytest.fixture
+    def priorities(self):
+        return MXDAGScheduler(try_pipelining=False) \
+            .schedule(builders.fig3_case(0)).priorities
+
+    def _run(self, case, priorities):
+        return simulate(builders.fig3_case(case), policy="priority",
+                        priorities=priorities).makespan
+
+    def test_case1_noncritical_pipelining_no_impact(self, priorities):
+        assert self._run(1, priorities) == pytest.approx(
+            self._run(0, priorities))
+
+    def test_case2_critical_pipelining_improves(self, priorities):
+        assert self._run(2, priorities) < self._run(0, priorities) - 0.5
+
+    def test_case3_critical_pipelining_degrades(self, priorities):
+        assert self._run(3, priorities) > self._run(0, priorities) + 0.1
+
+    def test_scheduler_only_applies_helpful_pipelines(self):
+        """Principle 1: 'pipelines will only be applied when they can
+        shrink the overall execution time'."""
+        s = MXDAGScheduler(try_pipelining=True).schedule(builders.fig3())
+        assert ("a", "f1") in s.meta["pipelined"]
+        assert ("a", "f3") not in s.meta["pipelined"]
+        base = MXDAGScheduler(try_pipelining=False) \
+            .schedule(builders.fig3()).simulate().makespan
+        assert s.simulate().makespan < base
+
+
+class TestFig6DDL:
+    """Layer-wise gradient sync (Fig. 6 / §4.1.1)."""
+
+    def test_mxdag_matches_bytescheduler_priority_order(self):
+        g = builders.ddl(4, push=2.0, pull=2.0)
+        s = MXDAGScheduler(try_pipelining=False).schedule(g)
+        pr = {k: v for k, v in s.priorities.items() if k.startswith("push")}
+        order = sorted(pr, key=lambda k: pr[k])
+        assert order == ["push0", "push1", "push2", "push3"]
+
+    def test_mxdag_beats_fair_when_comm_bound(self):
+        g = builders.ddl(4, push=2.0, pull=2.0)
+        fair = FairShareScheduler().schedule(g).simulate()
+        mx = MXDAGScheduler(try_pipelining=False).schedule(g).simulate()
+        assert mx.makespan < fair.makespan
+
+    def test_compute_bound_ddl_no_network_effect(self):
+        # network fast: both schedulers pinned by the FP/BP chain
+        g = builders.ddl(4, push=0.1, pull=0.1)
+        fair = FairShareScheduler().schedule(g).simulate()
+        mx = MXDAGScheduler(try_pipelining=False).schedule(g).simulate()
+        assert mx.makespan == pytest.approx(fair.makespan)
+        assert mx.makespan == pytest.approx(4 + 0.2 + 4)
+
+
+class TestFig7Altruism:
+    """Principle 2: altruism helps other jobs at no cost to self (§4.2)."""
+
+    def test_altruism_shrinks_job2_without_hurting_job1(self):
+        j1, j2 = builders.mapreduce_pair()
+        merged = MXDAG("m")
+        for t in list(j1) + list(j2):
+            merged.add(t)
+        for e in list(j1.edges.values()) + list(j2.edges.values()):
+            merged.add_edge(e.src, e.dst)
+        naive = simulate(merged, policy="fair")
+        alt = AltruisticMultiScheduler().schedule([j1, j2]).simulate()
+        assert alt.jct("job2") < naive.jct("job2")
+        assert alt.jct("job1") <= naive.jct("job1") + 1e-9
+
+    def test_altruism_bounded_by_slack(self):
+        """A job never demotes a task whose slack can't absorb the delay."""
+        j1, j2 = builders.mapreduce_pair()
+        s = AltruisticMultiScheduler().schedule([j1, j2])
+        from repro.core.schedule import ALTRUIST_DEMOTED
+        demoted = [n for n, p in s.priorities.items()
+                   if p == ALTRUIST_DEMOTED]
+        slacks = {n: t.slack for n, t in j1.with_slack().items()}
+        for n in demoted:
+            if n in j1.tasks:
+                assert slacks[n] > 0

@@ -1,0 +1,89 @@
+"""Monitoring & straggler identification (§4.3) and what-if analysis."""
+import pytest
+
+from repro.core import (
+    FairShareScheduler, Monitor, MXDAGScheduler, TaskKind, WhatIf,
+)
+from repro.core import builders
+
+
+class TestMonitor:
+    @pytest.fixture
+    def setup(self):
+        g = builders.fig1_jobs()
+        sched = MXDAGScheduler().schedule(g)
+        expected = sched.simulate()
+        return g, expected
+
+    def test_host_straggler_identified(self, setup):
+        g, expected = setup
+        mon = Monitor(g, expected)
+        # task b expected to run 2.0 -> 3.0; at t=2.9 only 20% done
+        mon.observe("b", 0.2, 2.9)
+        stragglers = mon.stragglers()
+        assert [s.task for s in stragglers] == ["b"]
+        assert stragglers[0].kind is TaskKind.COMPUTE
+        assert mon.host_stragglers() and not mon.network_stragglers()
+
+    def test_network_straggler_distinguished(self, setup):
+        """The paper: traditional DAG cannot distinguish host vs network
+        stragglers; MXDAG can."""
+        g, expected = setup
+        mon = Monitor(g, expected)
+        mon.observe("f1", 0.1, 1.9)   # flow f1 expected 1.0 -> 2.0
+        assert mon.network_stragglers() and not mon.host_stragglers()
+
+    def test_on_track_task_not_flagged(self, setup):
+        g, expected = setup
+        mon = Monitor(g, expected)
+        mon.observe("b", 0.5, 2.5)    # exactly on schedule
+        assert mon.stragglers() == []
+
+    def test_replan_updates_critical_path(self, setup):
+        g, expected = setup
+        mon = Monitor(g, expected)
+        # f3 is off-critical (slack 2); make it 10x slower than expected:
+        # at t=4.5 it should be done (finish 2.0 in mx schedule) but is 10%
+        mon.observe("f3", 0.1, 1.9)
+        new_cp = mon.replan_critical_path()
+        assert "f3" in new_cp  # straggling flow becomes critical
+
+    def test_observation_requires_known_task(self, setup):
+        g, expected = setup
+        mon = Monitor(g, expected)
+        with pytest.raises(KeyError):
+            mon.observe("nope", 0.5, 1.0)
+
+
+class TestWhatIf:
+    def test_pipeline_whatif_matches_fig3(self):
+        g = builders.fig3()
+        w = WhatIf(g)
+        helpful = w.pipeline_edges([("a", "f1")])
+        harmful = w.pipeline_edges([("a", "f1"), ("a", "f3")])
+        assert helpful.helps
+        assert harmful.variant > helpful.variant
+
+    def test_unit_sweep_smaller_units_help_on_critical_path(self):
+        g = builders.fig3()
+        g.set_pipelined("a", "f1", True)
+        w = WhatIf(g)
+        res = w.sweep_unit("f1", [0.5, 0.25, 0.125])
+        times = [t for _, t in res]
+        assert times == sorted(times, reverse=True) or \
+            max(times) - min(times) < 1e-9
+
+    def test_repartition(self):
+        g = builders.fig1_jobs()
+        w = WhatIf(g)
+        # shrinking c (the sink, on every path) always helps ...
+        r = w.repartition({"c": 0.25})
+        assert r.helps
+        # ... but shrinking b does NOT: the what-if reveals that C's ingress
+        # NIC (serializing f2 and f3) becomes the bottleneck — exactly the
+        # kind of insight the paper claims MXDAG enables (§4.3)
+        r2 = w.repartition({"b": 0.25})
+        assert not r2.helps
+        # growing a critical compute task hurts
+        r3 = w.repartition({"b": 3.0})
+        assert r3.variant > r3.baseline
