@@ -1,0 +1,14 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+
+
+def timeit_us(fn, *args, repeat: int = 3) -> float:
+    """Best-of-``repeat`` wall time of ``fn(*args)`` in microseconds."""
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn(*args)
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6

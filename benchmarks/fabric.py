@@ -1,0 +1,51 @@
+"""Fabric benchmark: co-scheduling vs fair sharing on oversubscribed cores.
+
+The single-switch figures can't show this regime at all — the whole point
+of the link-level fabric.  Sweeps the two-tier oversubscription knob on the
+cross-rack fan-in scenario and reports both schedulers' makespans, plus a
+wall-time micro for path-based allocation on a fat-tree shuffle.
+"""
+from __future__ import annotations
+
+from benchmarks._util import timeit_us
+
+
+def bench_rows():
+    from repro.core import (
+        Cluster, FairShareScheduler, MXDAG, MXDAGScheduler, Topology,
+        compute, flow, simulate,
+    )
+    from repro.core.builders import oversubscribed_fanin
+
+    rows = []
+    for oversub in (1.0, 2.0, 4.0, 8.0):
+        g, cl = oversubscribed_fanin(n_senders=4, oversubscription=oversub)
+        fair = FairShareScheduler().schedule(g, cl).simulate(cl)
+        mx = MXDAGScheduler(try_pipelining=False).schedule(g, cl) \
+            .simulate(cl)
+        tag = f"{oversub:g}to1"
+        rows.append((f"fabric.fanin4_{tag}.fair", fair.makespan,
+                     f"fair sharing on a {tag} oversubscribed core"))
+        rows.append((f"fabric.fanin4_{tag}.mxdag", mx.makespan,
+                     "MXDAG priority co-scheduling, same fabric"))
+        rows.append((f"fabric.fanin4_{tag}.speedup",
+                     fair.makespan / mx.makespan,
+                     "co-scheduling gain (grows with oversubscription)"))
+
+    # DES wall-time with path-based allocation on a k=4 fat-tree shuffle
+    topo = Topology.fat_tree(4)
+    cl = Cluster.from_topology(topo)
+    hosts = topo.hosts()
+    g = MXDAG("ft_shuffle")
+    senders = hosts[:8]
+    receivers = hosts[8:]
+    for i, s in enumerate(senders):
+        m = g.add(compute(f"m{i}", 1.0, s))
+        for j, d in enumerate(receivers):
+            f = g.add(flow(f"s{i}_{j}", 0.125, s, d))
+            g.add_edge(m, f)
+    rows.append(("fabric.micro.simulate_ft4_shuffle_us",
+                 timeit_us(lambda: simulate(g, cl)),
+                 "DES of an 8x8 shuffle on a k=4 fat-tree (72 tasks, "
+                 "6-link paths)"))
+    return rows

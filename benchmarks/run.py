@@ -2,27 +2,30 @@
 
 - one section per paper figure (figures.py — the paper's only
   quantitative claims are its worked examples),
+- the fabric section (fabric.py — co-scheduling vs fair sharing across
+  core oversubscription ratios),
 - scheduler micro-benchmarks (wall-time of the Principle-1 scheduler and
   the DES on generated DAGs),
 - the roofline summary per dry-run cell (roofline.py; populated by
   ``python -m repro.launch.dryrun --all``).
+
+``--json PATH`` additionally dumps the rows as JSON (the CI smoke step
+uploads it as an artifact); ``--smoke`` skips the roofline section, which
+is only meaningful after a dry-run populated its measurement files.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import os
 import sys
-import time
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)        # so `python benchmarks/run.py` works too
 
 
-def _timeit(fn, *args, repeat=3):
-    best = float("inf")
-    for _ in range(repeat):
-        t0 = time.perf_counter()
-        fn(*args)
-        best = min(best, time.perf_counter() - t0)
-    return best * 1e6
+from benchmarks._util import timeit_us as _timeit  # noqa: E402
 
 
 def scheduler_micro():
@@ -45,14 +48,28 @@ def scheduler_micro():
     return rows
 
 
-def main() -> None:
-    from benchmarks import figures, roofline
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="skip the roofline section (needs dry-run data)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the rows as JSON to PATH")
+    args = ap.parse_args(argv)
+
+    from benchmarks import fabric, figures, roofline
 
     rows = []
     for fig in figures.ALL:
         rows += fig()
+    rows += fabric.bench_rows()
     rows += scheduler_micro()
-    rows += roofline.bench_rows()
+    if not args.smoke:
+        rows += roofline.bench_rows()
+
+    if args.json:        # artifact first: survives a closed stdout pipe
+        with open(args.json, "w") as f:
+            json.dump([{"name": n, "value": v, "derived": str(d)}
+                       for n, v, d in rows], f, indent=2)
 
     print("name,value,derived")
     for name, value, derived in rows:

@@ -1,0 +1,54 @@
+"""Co-scheduling on an oversubscribed multi-tier fabric.
+
+The paper's single-switch figures charge a flow only against its endpoint
+NICs.  Real clusters are oversubscribed: a rack's uplink carries a fraction
+of its hosts' NIC bandwidth (4:1 here), so cross-rack flows contend *inside*
+the fabric — contention a big-switch model cannot even represent.  This
+example shows:
+
+1. on a 4:1 oversubscribed two-tier core, MXDAG priority co-scheduling
+   strictly beats fair sharing (the critical flow gets the whole uplink
+   first instead of 1/4 of it),
+2. ``whatif.resize_fabric`` answers "is this job core-bound?": fair sharing
+   would need 4x the fabric to match what co-scheduling achieves on the
+   oversubscribed core with zero extra hardware.
+
+Run:  PYTHONPATH=src python examples/oversubscribed_fabric.py
+"""
+import sys
+sys.path.insert(0, "src")
+
+from repro.core import FairShareScheduler, MXDAGScheduler, WhatIf
+from repro.core.builders import oversubscribed_fanin
+
+OVERSUB = 4.0
+g, cluster = oversubscribed_fanin(n_senders=4, oversubscription=OVERSUB)
+uplink = cluster.topology.capacity("rack0.up")
+print(f"{g.name}: 4 cross-rack flows, rack0 uplink capacity {uplink:g} "
+      f"({OVERSUB:g}:1 oversubscribed)")
+print(f"  flow f0 feeds the critical 8s compute; f1..f3 feed 1s computes\n")
+
+fair = FairShareScheduler().schedule(g, cluster).simulate(cluster)
+sched = MXDAGScheduler(try_pipelining=False).schedule(g, cluster)
+mx = sched.simulate(cluster)
+print(f"  fair sharing makespan:      {fair.makespan:.3f} s "
+      "(uplink split 4 ways; critical flow crawls)")
+print(f"  MXDAG priority makespan:    {mx.makespan:.3f} s "
+      f"(critical path {sched.meta['critical_path']})")
+assert mx.makespan < fair.makespan - 1e-9, \
+    "priority co-scheduling must strictly beat fair sharing here"
+print(f"  speedup: {fair.makespan / mx.makespan:.2f}x\n")
+
+# what-if: how much fabric would fair sharing need to catch up?
+fair_whatif = WhatIf(g, cluster, scheduler=FairShareScheduler())
+r = fair_whatif.resize_fabric(scale=OVERSUB)       # undo the oversubscription
+print(f"  fair @ full bisection (resize_fabric x{OVERSUB:g}): "
+      f"{r.variant:.3f} s  (was {r.baseline:.3f} s)")
+mx_whatif = WhatIf(g, cluster)                     # MXDAG scheduler default
+r2 = mx_whatif.resize_fabric(scale=OVERSUB)
+print(f"  MXDAG @ full bisection:                        "
+      f"{r2.variant:.3f} s  (was {r2.baseline:.3f} s)")
+assert abs(r2.variant - r2.baseline) < 1e-9
+print("\n  => co-scheduling already achieves the full-bisection makespan "
+      "on the 4:1 core:\n     the job is core-bound only under fair "
+      "sharing, not under MXDAG priorities.")

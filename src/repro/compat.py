@@ -1,0 +1,10 @@
+"""Version-compatibility shims for the jax side (single source of truth;
+the model code and the subprocess test probes both import from here)."""
+import jax
+
+try:                                    # jax >= 0.4.38 exports it top-level
+    shard_map = jax.shard_map
+except AttributeError:                  # older jax: experimental namespace
+    from jax.experimental.shard_map import shard_map
+
+__all__ = ["shard_map"]

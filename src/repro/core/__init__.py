@@ -1,8 +1,9 @@
 """MXDAG core: the paper's abstraction, calculus, schedulers and simulator."""
 from repro.core.task import MXTask, TaskKind, compute, flow
 from repro.core.graph import MXDAG, Edge, NodeTiming
+from repro.core.fabric import Link, Topology
 from repro.core.cluster import Cluster, Host
-from repro.core.simulator import SimResult, Simulator, simulate
+from repro.core.simulator import SimResult, Simulator, max_min_rates, simulate
 from repro.core.schedule import (
     AltruisticMultiScheduler,
     CoflowConfig,
@@ -17,8 +18,9 @@ from repro.core.monitor import Monitor, Straggler
 __all__ = [
     "MXTask", "TaskKind", "compute", "flow",
     "MXDAG", "Edge", "NodeTiming",
+    "Link", "Topology",
     "Cluster", "Host",
-    "SimResult", "Simulator", "simulate",
+    "SimResult", "Simulator", "max_min_rates", "simulate",
     "FairShareScheduler", "CoflowConfig", "MXDAGScheduler",
     "AltruisticMultiScheduler", "Schedule", "auto_coflows",
     "WhatIf", "WhatIfResult", "Monitor", "Straggler",

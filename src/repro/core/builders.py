@@ -20,6 +20,8 @@ from __future__ import annotations
 
 from typing import Optional, Sequence
 
+from repro.core.cluster import Cluster
+from repro.core.fabric import Topology
 from repro.core.graph import MXDAG
 from repro.core.task import compute, flow
 
@@ -242,6 +244,39 @@ def mapreduce_pair() -> tuple[MXDAG, MXDAG]:
     j2.add_edge(d, f3)
     j2.add_edge(f3, r2)
     return j1, j2
+
+
+# ----------------------------------------------------------------------
+# oversubscribed-fabric scenario (multi-tier topology; beyond the paper's
+# single-switch figures — the regime where co-scheduling matters most)
+# ----------------------------------------------------------------------
+def oversubscribed_fanin(n_senders: int = 4, *,
+                         oversubscription: float = 4.0,
+                         flow_size: float = 1.0,
+                         critical_compute: float = 8.0,
+                         other_compute: float = 1.0,
+                         job: str = "job0") -> tuple[MXDAG, Cluster]:
+    """Cross-rack fan-in on an oversubscribed two-tier core.
+
+    ``n_senders`` hosts in rack 0 each send one flow to a distinct host in
+    rack 1; all flows contend on rack 0's shared uplink (capacity
+    ``n_senders / oversubscription``).  Flow 0 feeds a *long* compute —
+    the critical path — while the rest feed short ones.  Fair sharing
+    splits the uplink evenly and delays the critical flow by a factor of
+    ``n_senders``; MXDAG priority co-scheduling gives it the whole uplink
+    first.  Returns ``(graph, cluster)``.
+    """
+    rack0 = [f"s{i}" for i in range(n_senders)]
+    rack1 = [f"d{i}" for i in range(n_senders)]
+    topo = Topology.two_tier([rack0, rack1],
+                             oversubscription=oversubscription)
+    g = MXDAG(f"fanin{n_senders}_{oversubscription:g}to1")
+    for i in range(n_senders):
+        f = g.add(flow(f"f{i}", flow_size, f"s{i}", f"d{i}", job=job))
+        size = critical_compute if i == 0 else other_compute
+        c = g.add(compute(f"c{i}", size, f"d{i}", job=job))
+        g.add_edge(f, c)
+    return g, Cluster.from_topology(topo)
 
 
 # ----------------------------------------------------------------------

@@ -1,4 +1,5 @@
-"""Cluster resource model: hosts with processor pools and NICs.
+"""Cluster resource model: hosts with processor pools, NICs, and an
+optional link-level fabric topology.
 
 Resource naming convention (matches ``MXTask.resources()``):
 
@@ -7,7 +8,14 @@ Resource naming convention (matches ``MXTask.resources()``):
 - ``"<host>.nic_out"`` / ``"<host>.nic_in"`` — NIC directions with a float
   capacity (flows share them; rate allocation is policy-driven and
   preemptible, reflecting the paper's observation that network tasks cannot
-  be isolated the way compute tasks can).
+  be isolated the way compute tasks can),
+- any other name — a fabric link (ToR uplink, spine link, ...) owned by the
+  cluster's :class:`~repro.core.fabric.Topology`.
+
+Without a topology a flow occupies exactly its two endpoint NICs (the seed
+"big switch" model).  With one, it occupies every link on its static route,
+of which the endpoint NICs are the first and last — so single-switch
+topologies reproduce the endpoint-only results exactly.
 
 Capacities are normalized: a flow of ``size`` seconds completes in ``size``
 seconds when allocated rate 1.0.
@@ -15,10 +23,11 @@ seconds when allocated rate 1.0.
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping
+from typing import Mapping, Optional
 
+from repro.core.fabric import Topology
 from repro.core.graph import MXDAG
-from repro.core.task import TaskKind
+from repro.core.task import MXTask, TaskKind
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,8 +40,14 @@ class Host:
 
 
 class Cluster:
-    def __init__(self, hosts: list[Host]) -> None:
+    def __init__(self, hosts: list[Host],
+                 topology: Optional[Topology] = None) -> None:
         self.hosts = {h.name: h for h in hosts}
+        self.topology = topology
+        if topology is not None:
+            missing = [h for h in self.hosts if h not in topology.hosts()]
+            if missing:
+                raise ValueError(f"hosts not in topology: {missing}")
 
     @classmethod
     def homogeneous(cls, names: list[str], *, procs: Mapping[str, int] | None = None,
@@ -41,7 +56,8 @@ class Cluster:
                          nic_in=nic, nic_out=nic) for n in names])
 
     @classmethod
-    def for_graph(cls, g: MXDAG, *, nic: float = 1.0) -> "Cluster":
+    def for_graph(cls, g: MXDAG, *, nic: float = 1.0,
+                  topology: Optional[Topology] = None) -> "Cluster":
         """Build a sufficient homogeneous cluster for a graph's placements."""
         names: set[str] = set()
         procs: dict[str, int] = {}
@@ -53,13 +69,52 @@ class Cluster:
                 names.add(t.src)   # type: ignore[arg-type]
                 names.add(t.dst)   # type: ignore[arg-type]
         procs = procs or {"cpu": 1}
+        if topology is not None:
+            if nic != 1.0:
+                raise ValueError("with a topology, NIC capacities come "
+                                 "from its links; don't pass nic")
+            return cls.from_topology(topology, procs=procs).restricted(names)
         return cls.homogeneous(sorted(names), procs=procs, nic=nic)
 
+    @classmethod
+    def from_topology(cls, topology: Topology, *,
+                      procs: Mapping[str, int] | None = None) -> "Cluster":
+        """One host per topology endpoint; NIC caps read off the NIC links."""
+        hosts = [Host(h, procs=dict(procs or {"cpu": 1}),
+                      nic_in=topology.capacity(f"{h}.nic_in"),
+                      nic_out=topology.capacity(f"{h}.nic_out"))
+                 for h in topology.hosts()]
+        return cls(hosts, topology=topology)
+
+    def restricted(self, names: set[str]) -> "Cluster":
+        """The sub-cluster of ``names`` (topology, with its full link set,
+        is kept — other hosts' flows just never appear)."""
+        return Cluster([h for n, h in self.hosts.items() if n in names],
+                       topology=self.topology)
+
+    # ------------------------------------------------------------------
     def slots(self, resource: str) -> int:
         host, pool = resource.rsplit(".", 1)
         return int(self.hosts[host].procs.get(pool, 0))
 
     def bandwidth(self, resource: str) -> float:
+        """Capacity of a NIC or fabric link (topology wins when present)."""
+        if self.topology is not None and resource in self.topology.links:
+            return self.topology.capacity(resource)
         host, direction = resource.rsplit(".", 1)
         h = self.hosts[host]
         return h.nic_out if direction == "nic_out" else h.nic_in
+
+    def resources_for(self, task: MXTask) -> tuple[str, ...]:
+        """The resources ``task`` occupies on *this* cluster.
+
+        Compute tasks: their processor pool.  Flows: the full link path
+        under the cluster's topology, or the two endpoint NICs without one.
+        """
+        if task.kind is TaskKind.COMPUTE or self.topology is None:
+            return task.resources()
+        return task.resources(self.topology)
+
+    def with_topology(self, topology: Optional[Topology]) -> "Cluster":
+        """Same hosts, different fabric (used by what-if queries)."""
+        return Cluster(list(self.hosts.values()), topology=topology)

@@ -309,6 +309,23 @@ class MXDAG:
                 for pair in sorted(npaths)}
 
     # ------------------------------------------------------------------
+    def resource_map(self, cluster=None) -> dict[str, list[str]]:
+        """Resource → tasks occupying it, in task-insertion order.
+
+        With a :class:`~repro.core.cluster.Cluster` carrying a fabric
+        :class:`~repro.core.fabric.Topology`, flows are charged against
+        every link on their path — so schedulers see in-network contention
+        (shared ToR uplinks, spine links) and not just endpoint NICs.
+        """
+        out: dict[str, list[str]] = {}
+        for n, t in self.tasks.items():
+            res = cluster.resources_for(t) if cluster is not None \
+                else t.resources()
+            for r in res:
+                out.setdefault(r, []).append(n)
+        return out
+
+    # ------------------------------------------------------------------
     def network_tasks(self) -> list[MXTask]:
         return [t for t in self.tasks.values() if t.kind is TaskKind.NETWORK]
 

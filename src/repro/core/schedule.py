@@ -216,11 +216,12 @@ class AltruisticMultiScheduler:
                 slack[n] = tm.slack
                 prio[n] = CRITICAL if n in crit else NONCRITICAL
 
-        # altruistic demotion, bounded by slack
-        by_resource: dict[str, list[str]] = {}
-        for n, t in merged.tasks.items():
-            for r in t.resources():
-                by_resource.setdefault(r, []).append(n)
+        # altruistic demotion, bounded by slack; fabric-aware when the
+        # cluster has a Topology (contention on shared uplinks counts too)
+        by_resource = merged.resource_map(cluster)
+        res_of = {n: (cluster.resources_for(t) if cluster is not None
+                      else t.resources())
+                  for n, t in merged.tasks.items()}
         for g in graphs:
             others_crit = set().union(*(critical[o.name] for o in graphs
                                         if o.name != g.name)) \
@@ -229,7 +230,7 @@ class AltruisticMultiScheduler:
                 if prio[n] != NONCRITICAL:
                     continue
                 foreign = 0.0
-                for r in merged.tasks[n].resources():
+                for r in res_of[n]:
                     foreign += sum(merged.tasks[m].size
                                    for m in by_resource[r]
                                    if m in others_crit)

@@ -4,10 +4,12 @@ Models exactly the behaviours the paper reasons about:
 
 - compute tasks occupy processor slots exclusively and non-preemptively
   (compute "can be easily isolated"),
-- network flows share NIC bandwidth under a pluggable allocation policy
-  ("fair" max-min sharing — the network-aware-DAG baseline of Fig. 1(b) —
-  or "priority" — the co-scheduler of Fig. 1(c)); flow rates are
-  preemptible and recomputed at every event,
+- network flows share bandwidth on every link of their path — just the two
+  endpoint NICs on a big-switch cluster, or the full ToR/spine route when
+  the cluster carries a fabric Topology — under a pluggable allocation
+  policy ("fair" max-min sharing — the network-aware-DAG baseline of
+  Fig. 1(b) — or "priority" — the co-scheduler of Fig. 1(c)); flow rates
+  are preemptible and recomputed at every event,
 - pipelined edges stream units: the consumer may process its j-th unit only
   once every streaming predecessor has *delivered* input fraction
   ≥ (j+1)/n_units (unit-granular, as in Fig. 5),
@@ -31,6 +33,56 @@ from repro.core.graph import MXDAG
 from repro.core.task import MXTask, TaskKind
 
 EPS = 1e-9
+
+
+def waterfill(group: list[str], paths, weight, residual: dict[str, float],
+              rates: dict[str, float]) -> None:
+    """Weighted max-min fair allocation of ``group`` over ``residual``.
+
+    ``paths[n]`` is the tuple of links flow n occupies; ``weight(n)`` its
+    share weight.  Progressive filling: repeatedly find the bottleneck link
+    (minimum residual capacity per unit weight), freeze every flow crossing
+    it at its weighted share, subtract along those flows' paths, recurse on
+    the rest.  Mutates ``residual`` and ``rates``.
+    """
+    unfrozen = sorted(group)
+    while unfrozen:
+        best_r, best_ratio = None, float("inf")
+        for r in residual:
+            w = sum(weight(n) for n in unfrozen if r in paths[n])
+            if w > EPS:
+                ratio = residual[r] / w
+                if ratio < best_ratio - EPS:
+                    best_r, best_ratio = r, ratio
+        if best_r is None:
+            for n in unfrozen:
+                rates[n] = 0.0
+            return
+        frozen_now = [n for n in unfrozen if best_r in paths[n]]
+        for n in frozen_now:
+            alloc = weight(n) * best_ratio
+            rates[n] = alloc
+            for r in paths[n]:
+                residual[r] = max(0.0, residual[r] - alloc)
+        unfrozen = [n for n in unfrozen if n not in frozen_now]
+
+
+def max_min_rates(paths, capacity,
+                  weights: Optional[dict[str, float]] = None,
+                  ) -> dict[str, float]:
+    """Weighted max-min fair rates for flows over shared links.
+
+    ``paths``: flow → iterable of links; ``capacity``: link → bandwidth.
+    A pure function of its inputs — the Simulator's per-event allocation
+    reduces to it within each priority class, and the fabric property
+    tests check its invariants directly on random topologies.
+    """
+    p = {n: tuple(ls) for n, ls in paths.items()}
+    residual = {r: float(capacity[r]) for ls in p.values() for r in ls}
+    w = weights or {}
+    rates: dict[str, float] = {}
+    waterfill(sorted(p), p, lambda n: w.get(n, 1.0), residual, rates)
+    return rates
 
 
 @dataclasses.dataclass
@@ -81,6 +133,11 @@ class Simulator:
         self.prio = dict(priorities or {})
         self.releases = dict(releases or {})
         self.coflows = [set(c) for c in (coflows or [])]
+        # resource paths, resolved once: a compute task's processor pool, a
+        # flow's full link path (endpoint NICs only on big-switch clusters)
+        self._res: dict[str, tuple[str, ...]] = {
+            n: self.cluster.resources_for(t)
+            for n, t in graph.tasks.items()}
         self._coflow_of: dict[str, int] = {}
         for i, c in enumerate(self.coflows):
             for n in c:
@@ -260,9 +317,10 @@ class Simulator:
         """Instantaneous rates for all runnable tasks.
 
         Compute tasks: rate 1 while holding a slot and not input-starved.
-        Flows: weighted max-min fair within a priority class, classes served
-        in strict priority order on residual NIC capacity.  Coflow members
-        get weights ∝ remaining work (MADD: finish together).
+        Flows: weighted max-min fair within a priority class over every
+        link on their path, classes served in strict priority order on
+        residual link capacity.  Coflow members get weights ∝ remaining
+        work (MADD: finish together).
 
         Paper semantic (§4.1): a *pipelined* task "enforces the resources to
         be occupied right after the precedent task begins processing, which
@@ -291,7 +349,7 @@ class Simulator:
 
         residual = {}
         for n in flows:
-            for r in g.tasks[n].resources():
+            for r in self._res[n]:
                 residual.setdefault(r, self.cluster.bandwidth(r))
 
         def weight(n: str) -> float:
@@ -318,38 +376,8 @@ class Simulator:
         for cls in classes:
             group = [n for n in flows
                      if cls is None or flow_class(n) == cls]
-            self._waterfill(group, weight, residual, rates)
+            waterfill(group, self._res, weight, residual, rates)
         return rates
-
-    def _waterfill(self, group: list[str], weight, residual: dict[str, float],
-                   rates: dict[str, float]) -> None:
-        """Weighted max-min fair allocation of ``group`` on ``residual``."""
-        g = self.g
-        unfrozen = sorted(group)
-        while unfrozen:
-            # bottleneck NIC: minimizes residual / total weight
-            best_r, best_ratio = None, float("inf")
-            wsum: dict[str, float] = {}
-            for r in residual:
-                w = sum(weight(n) for n in unfrozen
-                        if r in g.tasks[n].resources())
-                if w > EPS:
-                    wsum[r] = w
-                    ratio = residual[r] / w
-                    if ratio < best_ratio - EPS:
-                        best_r, best_ratio = r, ratio
-            if best_r is None:
-                for n in unfrozen:
-                    rates[n] = 0.0
-                return
-            frozen_now = [n for n in unfrozen
-                          if best_r in g.tasks[n].resources()]
-            for n in frozen_now:
-                alloc = weight(n) * best_ratio
-                rates[n] = alloc
-                for r in g.tasks[n].resources():
-                    residual[r] = max(0.0, residual[r] - alloc)
-            unfrozen = [n for n in unfrozen if n not in frozen_now]
 
 
 def simulate(graph: MXDAG, cluster: Optional[Cluster] = None, *,

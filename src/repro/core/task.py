@@ -81,15 +81,19 @@ class MXTask:
         return self.effective_unit / rsrc
 
     # -- resource identity --------------------------------------------
-    def resources(self) -> tuple[str, ...]:
+    def resources(self, topology=None) -> tuple[str, ...]:
         """Names of the resources this task occupies while running.
 
-        Compute tasks occupy one processor pool; network tasks occupy the
-        sender's egress NIC and the receiver's ingress NIC (the flow's rate
-        is capped by the tighter of the two at any instant).
+        Compute tasks occupy one processor pool.  Network tasks occupy the
+        sender's egress NIC and the receiver's ingress NIC — plus, when a
+        :class:`~repro.core.fabric.Topology` is given, every fabric link on
+        the flow's static route (the flow's rate is capped by the tightest
+        link at any instant).
         """
         if self.kind is TaskKind.COMPUTE:
             return (f"{self.host}.{self.proc}",)
+        if topology is not None:
+            return tuple(topology.path(self.src, self.dst))
         return (f"{self.src}.nic_out", f"{self.dst}.nic_in")
 
 

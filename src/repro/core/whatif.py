@@ -8,7 +8,7 @@ network?*  Each query re-evaluates the scheduled DAG in the DES.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Mapping, Optional, Sequence
 
 from repro.core.cluster import Cluster
 from repro.core.graph import MXDAG
@@ -37,9 +37,10 @@ class WhatIf:
         self.cluster = cluster
         self.scheduler = scheduler or MXDAGScheduler(try_pipelining=False)
 
-    def _makespan(self, g: MXDAG) -> float:
-        return self.scheduler.schedule(g, self.cluster) \
-                   .simulate(self.cluster).makespan
+    def _makespan(self, g: MXDAG,
+                  cluster: Optional[Cluster] = None) -> float:
+        cl = cluster if cluster is not None else self.cluster
+        return self.scheduler.schedule(g, cl).simulate(cl).makespan
 
     def baseline(self) -> float:
         return self._makespan(self.graph)
@@ -63,6 +64,25 @@ class WhatIf:
                    ) -> list[tuple[float, float]]:
         """Makespan as a function of the unit size — pick the knee."""
         return [(u, self.set_unit(task, u).variant) for u in units]
+
+    def resize_fabric(self, scale: Optional[float] = None, *,
+                      links: Optional[Mapping[str, float]] = None,
+                      ) -> WhatIfResult:
+        """Would changing fabric link capacities change the makespan?
+
+        ``scale`` multiplies every fabric (non-NIC) link — e.g. ``scale=4``
+        undoes a 4:1 oversubscribed core; ``links`` sets individual link
+        capacities (NICs included) by name.  The answerable question a
+        big-switch model cannot even pose: *is this job actually
+        core-bound, and how much fabric would it take to stop being so?*
+        """
+        if self.cluster is None or self.cluster.topology is None:
+            raise ValueError("resize_fabric needs a cluster with a "
+                             "fabric Topology")
+        topo = self.cluster.topology.resized(scale, links=links)
+        return WhatIfResult(self.baseline(),
+                            self._makespan(self.graph,
+                                           self.cluster.with_topology(topo)))
 
     def repartition(self, changes: dict[str, float]) -> WhatIfResult:
         """Re-size tasks (e.g. move work between compute and network)."""

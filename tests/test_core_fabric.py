@@ -1,0 +1,273 @@
+"""Unit tests: link-level fabric topologies and path-based rate allocation."""
+import pytest
+
+from repro.core import (
+    Cluster, FairShareScheduler, MXDAG, MXDAGScheduler, Topology, WhatIf,
+    flow, max_min_rates, simulate,
+)
+from repro.core import builders
+from repro.core.fabric import ecmp_choice, is_nic_link, nic_in, nic_out
+
+
+def hosts_of(g: MXDAG) -> list[str]:
+    names: set[str] = set()
+    for t in g:
+        if t.host is not None:
+            names.add(t.host)
+        else:
+            names.update((t.src, t.dst))
+    return sorted(names)
+
+
+class TestTopologyBuilders:
+    def test_single_switch_paths_are_endpoint_nics(self):
+        t = Topology.single_switch(["A", "B"], nic=2.0)
+        assert t.path("A", "B") == ("A.nic_out", "B.nic_in")
+        assert t.capacity("A.nic_out") == 2.0
+        assert t.fabric_links() == []
+
+    def test_two_tier_links_and_routes(self):
+        t = Topology.two_tier([["a0", "a1"], ["b0", "b1"]],
+                              oversubscription=2.0)
+        # uplink = 2 hosts * 1.0 nic / 2.0 oversub
+        assert t.capacity("rack0.up") == pytest.approx(1.0)
+        assert t.capacity("rack1.down") == pytest.approx(1.0)
+        # intra-rack: direct; inter-rack: via up+down
+        assert t.path("a0", "a1") == ("a0.nic_out", "a1.nic_in")
+        assert t.path("a0", "b1") == (
+            "a0.nic_out", "rack0.up", "rack1.down", "b1.nic_in")
+
+    def test_two_tier_accepts_int_pair(self):
+        t = Topology.two_tier((3, 2), oversubscription=4.0)
+        assert len(t.hosts()) == 6
+        assert t.capacity("rack2.up") == pytest.approx(0.5)
+
+    def test_leaf_spine_ecmp_static_and_valid(self):
+        t = Topology.leaf_spine((2, 4), 2, oversubscription=2.0)
+        # per-spine uplink = 4 * 1.0 / (2.0 * 2)
+        assert t.capacity("leaf0.up0") == pytest.approx(1.0)
+        t2 = Topology.leaf_spine((2, 4), 2, oversubscription=2.0)
+        for s in t.hosts():
+            for d in t.hosts():
+                if s == d:
+                    continue
+                p = t.path(s, d)
+                assert p == t2.path(s, d)          # deterministic ECMP
+                assert p[0] == nic_out(s) and p[-1] == nic_in(d)
+                assert all(l in t.links for l in p)
+        # with enough pairs, the hash should use more than one spine
+        spines = {t.path(s, d)[1] for s in t.hosts() for d in t.hosts()
+                  if s != d and len(t.path(s, d)) == 4}
+        assert len(spines) > 1
+
+    def test_fat_tree_structure(self):
+        t = Topology.fat_tree(4)
+        assert len(t.hosts()) == 16                # k^3/4
+        # same edge: 2 links; intra-pod: 4; inter-pod: 6
+        assert len(t.path("p0e0h0", "p0e0h1")) == 2
+        assert len(t.path("p0e0h0", "p0e1h0")) == 4
+        assert len(t.path("p0e0h0", "p2e1h1")) == 6
+        for s in t.hosts():
+            for d in t.hosts():
+                if s != d:
+                    assert all(l in t.links for l in t.path(s, d))
+
+    def test_fat_tree_rejects_odd_k(self):
+        with pytest.raises(ValueError):
+            Topology.fat_tree(3)
+
+    def test_ecmp_choice_deterministic(self):
+        assert ecmp_choice("a", "b", 7) == ecmp_choice("a", "b", 7)
+        assert ecmp_choice("x", "y", 1) == 0
+
+    def test_is_nic_link(self):
+        assert is_nic_link("h.nic_out") and is_nic_link("h.nic_in")
+        assert not is_nic_link("rack0.up")
+
+    def test_resized(self):
+        t = Topology.two_tier((2, 2), oversubscription=4.0)
+        r = t.resized(4.0)
+        assert r.capacity("rack0.up") == pytest.approx(2.0)
+        assert r.capacity("r0h0.nic_out") == pytest.approx(1.0)  # NIC kept
+        r2 = t.resized(links={"rack1.down": 9.0})
+        assert r2.capacity("rack1.down") == pytest.approx(9.0)
+        assert r2.capacity("rack0.up") == pytest.approx(0.5)
+        assert r.path("r0h0", "r1h1") == t.path("r0h0", "r1h1")
+
+    def test_resized_rejects_unknown_link(self):
+        t = Topology.two_tier((2, 2))
+        with pytest.raises(KeyError, match="rack0.uplink"):
+            t.resized(links={"rack0.uplink": 4.0})   # typo for rack0.up
+
+    def test_path_rejects_unknown_host(self):
+        t = Topology.two_tier((2, 2))
+        with pytest.raises(KeyError, match="zzz"):
+            t.path("r0h0", "zzz")
+
+    def test_routing_is_lazy(self):
+        # construction must not materialize O(hosts^2) routes
+        t = Topology.fat_tree(8)                   # 128 hosts
+        assert len(t._routes) == 0
+        p = t.path("p0e0h0", "p7e3h3")
+        assert len(p) == 6 and len(t._routes) == 1
+        assert t.path("p0e0h0", "p7e3h3") is p     # memoized
+
+
+class TestCluster:
+    def test_from_topology_reads_nic_caps(self):
+        t = Topology.single_switch(["A", "B"], nic=2.5)
+        cl = Cluster.from_topology(t)
+        assert cl.hosts["A"].nic_out == 2.5
+        assert cl.bandwidth("A.nic_out") == 2.5
+
+    def test_bandwidth_fabric_link(self):
+        t = Topology.two_tier((2, 2), oversubscription=2.0)
+        cl = Cluster.from_topology(t)
+        assert cl.bandwidth("rack0.up") == pytest.approx(1.0)
+
+    def test_resources_for_routes_flows(self):
+        t = Topology.two_tier([["a"], ["b"]])
+        cl = Cluster.from_topology(t)
+        f = flow("f", 1.0, "a", "b")
+        assert cl.resources_for(f) == (
+            "a.nic_out", "rack0.up", "rack1.down", "b.nic_in")
+        # without a topology: endpoint NICs only (seed model)
+        cl0 = Cluster.homogeneous(["a", "b"])
+        assert cl0.resources_for(f) == ("a.nic_out", "b.nic_in")
+
+    def test_rejects_host_missing_from_topology(self):
+        t = Topology.single_switch(["A"])
+        with pytest.raises(ValueError):
+            Cluster.homogeneous(["A", "B"]).with_topology(t)
+
+    def test_for_graph_rejects_nic_with_topology(self):
+        g = builders.fig1_jobs()
+        topo = Topology.single_switch(["A", "B", "C"])
+        with pytest.raises(ValueError, match="topology"):
+            Cluster.for_graph(g, nic=2.0, topology=topo)
+
+
+class TestSingleSwitchEquivalence:
+    """A single-switch Topology must reproduce the seed (endpoint-NIC)
+    simulator results exactly, across policies and features."""
+
+    CASES = [
+        ("fig1", lambda: builders.fig1_jobs(), {}),
+        ("fig2a_coflows", lambda: builders.fig2a(),
+         {"coflows": builders.fig2a_coflows()}),
+        ("fig2b", lambda: builders.fig2b(), {}),
+        ("fig3_pipelined", lambda: builders.fig3_case(3), {}),
+        ("ddl", lambda: builders.ddl(4, push=2.0, pull=2.0,
+                                     unit_frac=0.25), {}),
+    ]
+
+    @pytest.mark.parametrize("name,make,kw",
+                             CASES, ids=[c[0] for c in CASES])
+    @pytest.mark.parametrize("policy", ["fair", "priority"])
+    def test_exact_equivalence(self, name, make, kw, policy):
+        g = make()
+        prio = None
+        if policy == "priority":
+            if kw.get("coflows"):
+                pytest.skip("coflows use fair policy")
+            prio = MXDAGScheduler(try_pipelining=False) \
+                ._priorities(g)
+        seed = simulate(g, policy=policy, priorities=prio, **kw)
+        topo = Topology.single_switch(hosts_of(g))
+        cl = Cluster.for_graph(g, topology=topo)
+        fab = simulate(g, cl, policy=policy, priorities=prio, **kw)
+        assert fab.start == seed.start
+        assert fab.finish == seed.finish
+        assert fab.makespan == seed.makespan
+
+
+class TestFabricContention:
+    def test_hand_computed_two_tier(self):
+        """Exactness on a hand-solved 2-tier case (oversub 2:1, uplink 1).
+
+        f1: a0→b0 (size 2), f2: a1→b1 (1), f3: b0→b1 (1), all released
+        at t=0.  Waterfill: rack0.up is the bottleneck for f1, f2 (rate
+        0.5 each); f3 then gets b1.in's residual 0.5.  At t=2, f2 and f3
+        finish; f1 (1 unit of work left) takes the whole uplink, rate 1,
+        finishing at t=3.
+        """
+        t = Topology.two_tier([["a0", "a1"], ["b0", "b1"]],
+                              oversubscription=2.0)
+        cl = Cluster.from_topology(t)
+        g = MXDAG()
+        g.add(flow("f1", 2.0, "a0", "b0"))
+        g.add(flow("f2", 1.0, "a1", "b1"))
+        g.add(flow("f3", 1.0, "b0", "b1"))
+        r = simulate(g, cl)
+        assert r.finish["f1"] == pytest.approx(3.0)
+        assert r.finish["f2"] == pytest.approx(2.0)
+        assert r.finish["f3"] == pytest.approx(2.0)
+        assert r.makespan == pytest.approx(3.0)
+        # the big-switch model misses the uplink: f1 would finish at 2
+        r0 = simulate(g, Cluster.homogeneous(["a0", "a1", "b0", "b1"]))
+        assert r0.finish["f1"] == pytest.approx(2.0)
+        assert r0.makespan == pytest.approx(2.0)
+
+    def test_priority_beats_fair_on_oversubscribed_core(self):
+        """The acceptance scenario: 4 cross-rack flows on a 4:1 core;
+        MXDAG priorities give the critical flow the whole uplink first."""
+        g, cl = builders.oversubscribed_fanin(
+            n_senders=4, oversubscription=4.0)
+        fair = FairShareScheduler().schedule(g, cl).simulate(cl)
+        mx = MXDAGScheduler(try_pipelining=False) \
+            .schedule(g, cl).simulate(cl)
+        # fair: uplink (cap 1) split 4 ways -> flows done at 4, +8 compute
+        assert fair.makespan == pytest.approx(12.0)
+        # priority: f0 takes the uplink alone -> done at 1, +8 compute
+        assert mx.makespan == pytest.approx(9.0)
+        assert mx.makespan < fair.makespan - 1e-9
+
+    def test_max_min_rates_pure(self):
+        rates = max_min_rates(
+            {"f1": ("a.out", "up"), "f2": ("b.out", "up")},
+            {"a.out": 1.0, "b.out": 1.0, "up": 1.0})
+        assert rates == {"f1": pytest.approx(0.5),
+                         "f2": pytest.approx(0.5)}
+        # weighted: f1 gets 2/3 of the shared bottleneck
+        rates = max_min_rates(
+            {"f1": ("a.out", "up"), "f2": ("b.out", "up")},
+            {"a.out": 1.0, "b.out": 1.0, "up": 1.0},
+            weights={"f1": 2.0})
+        assert rates["f1"] == pytest.approx(2 / 3)
+        assert rates["f2"] == pytest.approx(1 / 3)
+
+    def test_resource_map_fabric_aware(self):
+        g, cl = builders.oversubscribed_fanin(n_senders=2)
+        m = g.resource_map(cl)
+        assert m["rack0.up"] == ["f0", "f1"]       # shared uplink visible
+        m0 = g.resource_map()
+        assert "rack0.up" not in m0                # big-switch: invisible
+
+
+class TestWhatIfResizeFabric:
+    def test_fair_sharing_is_core_bound(self):
+        g, cl = builders.oversubscribed_fanin()
+        w = WhatIf(g, cl, scheduler=FairShareScheduler())
+        r = w.resize_fabric(scale=4.0)
+        assert r.baseline == pytest.approx(12.0)
+        assert r.variant == pytest.approx(9.0)
+        assert r.helps
+
+    def test_coscheduling_already_at_full_bisection(self):
+        g, cl = builders.oversubscribed_fanin()
+        r = WhatIf(g, cl).resize_fabric(scale=4.0)
+        assert r.variant == pytest.approx(r.baseline)
+        assert not r.helps
+
+    def test_individual_link_override(self):
+        g, cl = builders.oversubscribed_fanin()
+        w = WhatIf(g, cl, scheduler=FairShareScheduler())
+        r = w.resize_fabric(links={"rack0.up": 4.0})
+        assert r.variant == pytest.approx(12.0)   # rack1.down still caps at 1
+        r = w.resize_fabric(links={"rack0.up": 4.0, "rack1.down": 4.0})
+        assert r.variant == pytest.approx(9.0)
+
+    def test_requires_topology(self):
+        g = builders.fig1_jobs()
+        with pytest.raises(ValueError):
+            WhatIf(g, Cluster.for_graph(g)).resize_fabric(scale=2.0)

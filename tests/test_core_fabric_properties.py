@@ -1,0 +1,135 @@
+"""Property-based tests (hypothesis): waterfill invariants on random
+topologies.
+
+Weighted max-min fairness has a crisp certificate (the bottleneck
+characterization): an allocation is weighted max-min fair iff every flow
+crosses a *bottleneck* link — one that is saturated and on which the flow's
+normalized rate (rate/weight) is maximal among the link's flows.  These
+tests generate random multi-tier fabrics and flow sets and check that
+certificate plus the safety invariants directly against
+:func:`repro.core.max_min_rates`.
+"""
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed (pip install -e .[test])")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Cluster, MXDAG, Topology, flow, max_min_rates, simulate
+from repro.core.fabric import nic_in, nic_out
+
+TOL = 1e-6
+
+racks_st = st.lists(st.integers(min_value=1, max_value=4),
+                    min_size=2, max_size=4)
+oversub_st = st.floats(min_value=1.0, max_value=8.0,
+                       allow_nan=False, allow_infinity=False)
+weights_st = st.floats(min_value=0.25, max_value=4.0,
+                       allow_nan=False, allow_infinity=False)
+
+
+def build_topology(kind: str, racks: list[int], oversub: float) -> Topology:
+    if kind == "two_tier":
+        return Topology.two_tier([
+            [f"r{r}h{i}" for i in range(n)] for r, n in enumerate(racks)],
+            oversubscription=oversub)
+    return Topology.leaf_spine(
+        [[f"l{r}h{i}" for i in range(n)] for r, n in enumerate(racks)],
+        n_spines=2, oversubscription=oversub)
+
+
+def random_flows(topo: Topology, picks: list[int], ws: list[float]):
+    """Flow name -> (path, weight) over random host pairs of the fabric."""
+    hosts = topo.hosts()
+    pairs = [(s, d) for s in hosts for d in hosts if s != d]
+    paths, weights = {}, {}
+    for k, (pi, w) in enumerate(zip(picks, ws)):
+        s, d = pairs[pi % len(pairs)]
+        paths[f"f{k}"] = topo.path(s, d)
+        weights[f"f{k}"] = w
+    return paths, weights
+
+
+@st.composite
+def fabric_case(draw):
+    kind = draw(st.sampled_from(["two_tier", "leaf_spine"]))
+    racks = draw(racks_st)
+    oversub = draw(oversub_st)
+    n_flows = draw(st.integers(min_value=1, max_value=10))
+    picks = draw(st.lists(st.integers(min_value=0, max_value=10 ** 6),
+                          min_size=n_flows, max_size=n_flows))
+    ws = draw(st.lists(weights_st, min_size=n_flows, max_size=n_flows))
+    topo = build_topology(kind, racks, oversub)
+    paths, weights = random_flows(topo, picks, ws)
+    return topo, paths, weights
+
+
+class TestWaterfillInvariants:
+    @given(case=fabric_case())
+    @settings(max_examples=60, deadline=None)
+    def test_no_link_over_capacity(self, case):
+        topo, paths, weights = case
+        rates = max_min_rates(paths, topo.links, weights)
+        load: dict[str, float] = {}
+        for n, p in paths.items():
+            for l in p:
+                load[l] = load.get(l, 0.0) + rates[n]
+        for l, total in load.items():
+            assert total <= topo.capacity(l) * (1 + TOL) + TOL
+
+    @given(case=fabric_case())
+    @settings(max_examples=60, deadline=None)
+    def test_every_flow_progresses(self, case):
+        topo, paths, weights = case
+        rates = max_min_rates(paths, topo.links, weights)
+        for n in paths:
+            assert rates[n] > 0.0
+
+    @given(case=fabric_case())
+    @settings(max_examples=60, deadline=None)
+    def test_bottleneck_certificate(self, case):
+        """Every flow has a saturated link on its path where its
+        normalized share is maximal — the weighted max-min certificate.
+        A corollary checked with it: each flow's bottleneck is saturated.
+        """
+        topo, paths, weights = case
+        rates = max_min_rates(paths, topo.links, weights)
+        load: dict[str, float] = {}
+        for n, p in paths.items():
+            for l in p:
+                load[l] = load.get(l, 0.0) + rates[n]
+        for n, p in paths.items():
+            norm = rates[n] / weights[n]
+            found = False
+            for l in p:
+                saturated = load[l] >= topo.capacity(l) * (1 - TOL) - TOL
+                is_max = all(rates[m] / weights[m] <= norm * (1 + TOL) + TOL
+                             for m in paths if l in paths[m])
+                if saturated and is_max:
+                    found = True
+                    break
+            assert found, f"{n} has no bottleneck link on its path"
+
+    @given(case=fabric_case())
+    @settings(max_examples=30, deadline=None)
+    def test_des_respects_link_capacity_over_time(self, case):
+        """End-to-end: simulate the random flow set; completion of each
+        link's flow volume can never beat the link's capacity bound."""
+        topo, paths, weights = case
+        cl = Cluster.from_topology(topo)
+        g = MXDAG()
+        endpoints = {}
+        for n, p in paths.items():
+            src = p[0][: -len(".nic_out")]
+            dst = p[-1][: -len(".nic_in")]
+            endpoints[n] = (src, dst)
+            g.add(flow(n, 1.0, src, dst))
+        r = simulate(g, cl)
+        # per-link volume/capacity is a lower bound on the makespan
+        vol: dict[str, float] = {}
+        for n, p in paths.items():
+            for l in p:
+                vol[l] = vol.get(l, 0.0) + 1.0
+        lb = max(v / topo.capacity(l) for l, v in vol.items())
+        assert r.makespan >= lb * (1 - TOL) - TOL

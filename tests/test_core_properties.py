@@ -2,6 +2,10 @@
 import math
 
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed (pip install -e .[test])")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

@@ -7,12 +7,15 @@ import sys
 
 import pytest
 
+pytestmark = [pytest.mark.slow, pytest.mark.jax]
+
 _PROBE = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
 from repro.launch.hlo_cost import analyze_text
 
 out = {}
@@ -43,8 +46,8 @@ out["matmul_flops_xla"] = float(xc["flops"])
 mesh = jax.make_mesh((8,), ("d",))
 def h(xs):
     def body(c, x):
-        y = jax.shard_map(lambda v: jax.lax.psum(v, "d"), mesh=mesh,
-                          in_specs=P("d"), out_specs=P())(x)
+        y = shard_map(lambda v: jax.lax.psum(v, "d"), mesh=mesh,
+                      in_specs=P("d"), out_specs=P())(x)
         return c + y.sum(), None
     return jax.lax.scan(body, 0.0, xs)[0]
 comp3 = jax.jit(h).lower(

@@ -13,6 +13,8 @@ from repro.checkpoint import all_steps, latest_step, restore, save, \
 from repro.data import DataConfig, SyntheticLM
 from repro.optim import AdamW, AdamWConfig, compression, cosine_schedule
 
+pytestmark = [pytest.mark.slow, pytest.mark.jax]
+
 
 class TestCheckpoint:
     def tree(self):
