@@ -1,0 +1,92 @@
+"""CI perf-regression gate: diff a bench JSON against a committed baseline.
+
+Usage::
+
+    python benchmarks/check_perf.py bench.json benchmarks/baseline.json
+
+Compares every wall-time row (``micro.*`` / ``scale.*`` names ending in
+``_us``) present in both files and fails (exit 1) when any row regressed
+by more than ``--threshold`` (default 2x).  Rows under ``--floor-us``
+(default 50µs) are ignored — at that scale the timer and allocator noise
+on shared CI runners dwarfs any real regression.  Rows named
+``*.ref_match`` must equal 1.0 (the event-calendar core diverged from the
+reference slow path — a correctness failure, not a perf one).
+
+Speed-ups are reported but never fail the gate; refresh the baseline by
+committing the new bench JSON when an intentional optimisation lands.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path: str) -> dict[str, float]:
+    with open(path) as f:
+        data = json.load(f)
+    return {r["name"]: float(r["value"]) for r in data}
+
+
+def gated(name: str) -> bool:
+    # *_seed_us rows time the frozen seed implementation: informational
+    # (their drift tracks runner speed, not a code regression), and
+    # optional (the sweep skips them under --no-seed).
+    return (name.startswith(("micro.", "scale."))
+            and name.endswith("_us")
+            and not name.endswith("_seed_us"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("bench", help="freshly produced bench JSON")
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("--threshold", type=float, default=2.0,
+                    help="fail on wall-time regressions beyond this "
+                         "factor (default 2x)")
+    ap.add_argument("--floor-us", type=float, default=50.0,
+                    help="ignore rows faster than this in the baseline")
+    args = ap.parse_args(argv)
+
+    bench = load_rows(args.bench)
+    base = load_rows(args.baseline)
+
+    failures = []
+    for name in sorted(base):
+        if name.endswith(".ref_match"):
+            if name not in bench:
+                failures.append(f"{name}: equivalence row missing from "
+                                f"bench output (check never ran)")
+            elif bench[name] != 1.0:
+                failures.append(f"{name}: event-calendar core diverged "
+                                f"from the reference slow path")
+            continue
+        if not gated(name) or name not in bench:
+            continue
+        old, new = base[name], bench[name]
+        if old < args.floor_us:
+            continue
+        ratio = new / old if old > 0 else float("inf")
+        marker = ""
+        if ratio > args.threshold:
+            marker = "  <-- REGRESSION"
+            failures.append(f"{name}: {old:.0f}us -> {new:.0f}us "
+                            f"({ratio:.2f}x > {args.threshold:g}x)")
+        print(f"{name}: {old:.0f}us -> {new:.0f}us ({ratio:.2f}x){marker}")
+
+    missing = [n for n in base
+               if gated(n) and n not in bench]
+    if missing:
+        failures.append(f"rows missing from bench output: {missing}")
+
+    if failures:
+        print("\nperf gate FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("\nperf gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

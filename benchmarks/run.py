@@ -6,12 +6,16 @@
   core oversubscription ratios),
 - scheduler micro-benchmarks (wall-time of the Principle-1 scheduler and
   the DES on generated DAGs),
+- the scale sweep (scale.py — event-calendar DES + memoized scheduler on
+  large mapreduce/DDL/fat-tree DAGs, with seed-implementation rows),
 - the roofline summary per dry-run cell (roofline.py; populated by
   ``python -m repro.launch.dryrun --all``).
 
 ``--json PATH`` additionally dumps the rows as JSON (the CI smoke step
-uploads it as an artifact); ``--smoke`` skips the roofline section, which
-is only meaningful after a dry-run populated its measurement files.
+uploads it as an artifact and diffs it against benchmarks/baseline.json
+via check_perf.py); ``--smoke`` skips the roofline section, which is only
+meaningful after a dry-run populated its measurement files; ``--no-seed``
+skips the slow seed-implementation rows of the scale sweep.
 """
 from __future__ import annotations
 
@@ -52,17 +56,20 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="skip the roofline section (needs dry-run data)")
+    ap.add_argument("--no-seed", action="store_true",
+                    help="skip the slow seed-implementation scale rows")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write the rows as JSON to PATH")
     args = ap.parse_args(argv)
 
-    from benchmarks import fabric, figures, roofline
+    from benchmarks import fabric, figures, roofline, scale
 
     rows = []
     for fig in figures.ALL:
         rows += fig()
     rows += fabric.bench_rows()
     rows += scheduler_micro()
+    rows += scale.bench_rows(seed_rows=not args.no_seed)
     if not args.smoke:
         rows += roofline.bench_rows()
 

@@ -1,0 +1,201 @@
+"""Scale benchmark: DES + Principle-1 scheduler wall time on large DAGs.
+
+Sweeps ``mapreduce(N, N)`` for N ∈ {8, 16, 32}, ``ddl(L)`` for
+L ∈ {32, 128}, and a ``fat_tree(8)`` cross-pod shuffle, timing both
+``simulate`` and ``MXDAGScheduler.schedule`` (with and without
+pipelining).  Graphs are built outside the timed region — construction
+and simulation are separate costs (and were separate bottlenecks).
+
+Two kinds of extra rows:
+
+- ``*_seed_us`` — the same workload on the *seed implementation*: the
+  original O(links·flows) waterfill scan, the per-event full-rescan
+  simulator loop (retained as ``Simulator._reference_run``), and the
+  scheduler without memoization or the incremental pipelining worklist.
+  ``scale.speedup_*`` rows report seed/new ratios.
+- ``*.ref_match`` — 1.0 iff the event-calendar core reproduces the
+  reference slow path's makespan on that DAG (exact-equivalence check,
+  also enforced by the differential tests).
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+import sys
+
+_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)        # so `python benchmarks/scale.py` works
+
+from benchmarks._util import timeit_us  # noqa: E402
+
+EPS = 1e-9
+
+
+def _seed_waterfill(group, paths, weight, residual, rates):
+    """The seed's waterfill, verbatim: O(links · flows) bottleneck scan
+    and O(n²) frozen-membership test.  Used only to measure the "before"
+    rows; ``weight=None`` (the new unit-weight convention) is adapted to
+    the seed's always-call-the-closure behaviour."""
+    if weight is None:
+        def weight(n):  # noqa: ARG001 - seed called a closure per flow
+            return 1.0
+    unfrozen = sorted(group)
+    seq = []
+    while unfrozen:
+        best_r, best_ratio = None, float("inf")
+        for r in residual:
+            w = sum(weight(n) for n in unfrozen if r in paths[n])
+            if w > EPS:
+                ratio = residual[r] / w
+                if ratio < best_ratio - EPS:
+                    best_r, best_ratio = r, ratio
+        if best_r is None:
+            for n in unfrozen:
+                rates[n] = 0.0
+                seq.append((n, 0.0))
+            return seq
+        frozen_now = [n for n in unfrozen if best_r in paths[n]]
+        for n in frozen_now:
+            alloc = weight(n) * best_ratio
+            rates[n] = alloc
+            seq.append((n, alloc))
+            for r in paths[n]:
+                residual[r] = max(0.0, residual[r] - alloc)
+        unfrozen = [n for n in unfrozen if n not in frozen_now]
+    return seq
+
+
+@contextlib.contextmanager
+def seed_implementation():
+    """Swap in the seed hot paths: original waterfill + the reference
+    per-event rescan loop for every simulate() the scheduler issues."""
+    import repro.core.simulator as simmod
+    import repro.core.schedule as schedmod
+
+    def seed_simulate(graph, cluster=None, **kw):
+        return simmod.Simulator(graph, cluster, **kw)._reference_run()
+
+    saved = (simmod.waterfill, schedmod.simulate)
+    simmod.waterfill = _seed_waterfill
+    schedmod.simulate = seed_simulate
+    try:
+        yield seed_simulate
+    finally:
+        simmod.waterfill, schedmod.simulate = saved
+
+
+def _workloads():
+    from repro.core import Cluster, MXDAG, Topology, builders, compute, flow
+
+    out = {}
+    for n in (8, 16, 32):
+        out[f"mr{n}x{n}"] = (builders.mapreduce("mr", n, n), None)
+    out["ddl32"] = (builders.ddl(32, push=2.0, pull=2.0), None)
+    out["ddl128"] = (builders.ddl(128, push=2.0, pull=2.0), None)
+
+    topo = Topology.fat_tree(8)
+    hosts = topo.hosts()
+    g = MXDAG("ft8_shuffle")
+    senders, receivers = hosts[:16], hosts[16:32]
+    for i, s in enumerate(senders):
+        m = g.add(compute(f"m{i}", 1.0, s))
+        for j, d in enumerate(receivers):
+            f = g.add(flow(f"s{i}_{j}", 1.0 / 16, s, d))
+            g.add_edge(m, f)
+    out["ft8_shuffle"] = (g, Cluster.from_topology(topo))
+    return out
+
+
+def _pipelined_workloads():
+    from repro.core import builders
+    return {
+        "mr8x8": builders.mapreduce("mr", 8, 8, unit_frac=0.125),
+        "mr16x16": builders.mapreduce("mr", 16, 16, unit_frac=0.125),
+        "ddl32": builders.ddl(32, push=2.0, pull=2.0, unit_frac=0.25),
+    }
+
+
+def bench_rows(seed_rows: bool = True):
+    from repro.core import MXDAGScheduler, simulate
+    from repro.core.simulator import Simulator
+
+    rows = []
+    work = _workloads()
+    piped = _pipelined_workloads()
+
+    # -- simulate ------------------------------------------------------
+    new_us = {}
+    for name, (g, cl) in work.items():
+        us = timeit_us(lambda g=g, cl=cl: simulate(g, cl), repeat=3)
+        new_us[f"simulate_{name}"] = us
+        rows.append((f"scale.simulate_{name}_us", us,
+                     f"event-calendar DES, {len(g.tasks)} tasks"))
+        ref = Simulator(g, cl)._reference_run()
+        new = simulate(g, cl)
+        rows.append((f"scale.simulate_{name}.ref_match",
+                     1.0 if abs(ref.makespan - new.makespan) < 1e-9
+                     else 0.0,
+                     f"makespan {new.makespan:g} == reference slow path"))
+
+    # -- schedule (no pipelining) --------------------------------------
+    for name in ("mr8x8", "mr16x16", "ddl32", "ddl128", "ft8_shuffle"):
+        g, cl = work[name]
+        us = timeit_us(
+            lambda g=g, cl=cl: MXDAGScheduler(
+                try_pipelining=False).schedule(g, cl),
+            repeat=1 if len(g.tasks) > 300 else 3)
+        new_us[f"schedule_{name}"] = us
+        rows.append((f"scale.schedule_{name}_us", us,
+                     "Principle-1 scheduling (memoized _best)"))
+
+    # -- schedule (greedy pipelining on) -------------------------------
+    for name, g in piped.items():
+        us = timeit_us(
+            lambda g=g: MXDAGScheduler(try_pipelining=True).schedule(g),
+            repeat=1)
+        new_us[f"schedule_{name}_pipelined"] = us
+        rows.append((f"scale.schedule_{name}_pipelined_us", us,
+                     "greedy pipelining via the incremental worklist"))
+
+    # -- seed-implementation rows (before/after evidence) --------------
+    if seed_rows:
+        with seed_implementation() as seed_simulate:
+            for name in ("mr32x32", "ddl128"):
+                g, cl = work[name]
+                us = timeit_us(lambda g=g, cl=cl: seed_simulate(g, cl),
+                               repeat=3)
+                rows.append((f"scale.simulate_{name}_seed_us", us,
+                             "seed implementation of the same DES"))
+                rows.append((f"scale.speedup_simulate_{name}",
+                             us / new_us[f"simulate_{name}"],
+                             "event-calendar speedup over the seed"))
+            g = piped["mr16x16"]
+            us = timeit_us(
+                lambda: MXDAGScheduler(
+                    try_pipelining=True, memoize=False,
+                    incremental_pipelining=False).schedule(g),
+                repeat=1)
+            rows.append(("scale.schedule_mr16x16_pipelined_seed_us", us,
+                         "seed scheduler (full re-scan, no memo) on the "
+                         "seed DES"))
+            rows.append(("scale.speedup_schedule_mr16x16_pipelined",
+                         us / new_us["schedule_mr16x16_pipelined"],
+                         "scheduling speedup over the seed"))
+    return rows
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--no-seed", action="store_true",
+                    help="skip the (slow) seed-implementation rows")
+    args = ap.parse_args()
+    print("name,value,derived")
+    for name, value, derived in bench_rows(seed_rows=not args.no_seed):
+        print(f"{name},{value:.6g},{str(derived).replace(',', ';')}")
+
+
+if __name__ == "__main__":
+    main()

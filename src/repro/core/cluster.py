@@ -105,6 +105,15 @@ class Cluster:
         h = self.hosts[host]
         return h.nic_out if direction == "nic_out" else h.nic_in
 
+    def bandwidths(self, resources) -> dict[str, float]:
+        """Capacity index for a set of links, resolved once.
+
+        The simulator's event loop rebuilds residual capacities at every
+        rate reallocation; resolving each link's capacity through the
+        topology/NIC lookup there would re-parse resource names per event.
+        """
+        return {r: self.bandwidth(r) for r in set(resources)}
+
     def resources_for(self, task: MXTask) -> tuple[str, ...]:
         """The resources ``task`` occupies on *this* cluster.
 

@@ -54,6 +54,23 @@ def is_nic_link(link: str) -> bool:
     return link.endswith(_NIC_SUFFIXES)
 
 
+def link_flow_index(flows, paths) -> dict[str, list[str]]:
+    """Invert flow→path into link→flows, preserving ``flows`` order.
+
+    The waterfill's bottleneck search needs, per link, the flows crossing
+    it; scanning every flow's path per link is O(links·flows) per
+    iteration, while this index makes it O(flows on the link).  Order
+    preservation matters: weight sums and freeze batches must enumerate
+    flows exactly as the ordered scan would, so allocations (and their
+    floating-point round-off) are unchanged.
+    """
+    by_link: dict[str, list[str]] = {}
+    for n in flows:
+        for r in paths[n]:
+            by_link.setdefault(r, []).append(n)
+    return by_link
+
+
 def ecmp_choice(src: str, dst: str, n: int) -> int:
     """Deterministic ECMP: stable per host pair across processes/runs."""
     if n <= 1:

@@ -17,6 +17,7 @@ Implements:
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Callable, Iterable, Iterator, Optional
 
 from repro.core.task import MXTask, TaskKind
@@ -54,6 +55,10 @@ class MXDAG:
         self.edges: dict[tuple[str, str], Edge] = {}
         self._succ: dict[str, list[str]] = {}
         self._pred: dict[str, list[str]] = {}
+        # bumped by every mutator; keys the signature and simulator-static
+        # caches.  Mutate tasks only through the MXDAG API (or on a fresh
+        # copy()) so cached derived state is never stale.
+        self._version = 0
 
     # ------------------------------------------------------------------
     # construction
@@ -64,6 +69,7 @@ class MXDAG:
         self.tasks[task.name] = task
         self._succ[task.name] = []
         self._pred[task.name] = []
+        self._version += 1
         return task
 
     def add_edge(self, src: str | MXTask, dst: str | MXTask,
@@ -75,11 +81,12 @@ class MXDAG:
                 raise KeyError(f"unknown task {n}")
         if (s, d) in self.edges:
             raise ValueError(f"duplicate edge {s}->{d}")
+        self._check_no_cycle_via(s, d)
         e = Edge(s, d, pipelined)
         self.edges[(s, d)] = e
         self._succ[s].append(d)
         self._pred[d].append(s)
-        self._check_acyclic()
+        self._version += 1
         return e
 
     def chain(self, *tasks: MXTask, pipelined: bool = False) -> None:
@@ -93,6 +100,18 @@ class MXDAG:
     def set_pipelined(self, src: str, dst: str, pipelined: bool) -> None:
         e = self.edges[(src, dst)]
         self.edges[(src, dst)] = Edge(e.src, e.dst, pipelined)
+        self._version += 1
+
+    def replace_task(self, task: MXTask) -> MXTask:
+        """Swap in a new MXTask under its existing name (what-if resizing,
+        monitor re-estimation).  The supported way to mutate a task:
+        assigning ``g.tasks[name]`` directly would leave the version-keyed
+        signature/simulator caches stale."""
+        if task.name not in self.tasks:
+            raise KeyError(f"unknown task {task.name}")
+        self.tasks[task.name] = task
+        self._version += 1
+        return task
 
     def copy(self) -> "MXDAG":
         g = MXDAG(self.name)
@@ -118,23 +137,61 @@ class MXDAG:
         return [n for n in self.tasks if not self._succ[n]]
 
     def topo_order(self) -> list[str]:
+        # heap-based Kahn: lexicographically smallest available task first
+        # (identical order to the seed's re-sorted frontier list, without
+        # its O(V² log V) repeated sorting)
         indeg = {n: len(self._pred[n]) for n in self.tasks}
-        frontier = sorted(n for n, d in indeg.items() if d == 0)
+        frontier = [n for n, d in indeg.items() if d == 0]
+        heapq.heapify(frontier)
         order: list[str] = []
         while frontier:
-            n = frontier.pop(0)
+            n = heapq.heappop(frontier)
             order.append(n)
             for s in self._succ[n]:
                 indeg[s] -= 1
                 if indeg[s] == 0:
-                    frontier.append(s)
-            frontier.sort()
+                    heapq.heappush(frontier, s)
         if len(order) != len(self.tasks):
             raise ValueError("graph has a cycle")
         return order
 
-    def _check_acyclic(self) -> None:
-        self.topo_order()
+    def _check_no_cycle_via(self, src: str, dst: str) -> None:
+        """Adding src→dst creates a cycle iff dst already reaches src.
+
+        Checked *before* mutating, by DFS from dst — O(V+E) worst case but
+        O(1) in the common build order where dst has no successors yet
+        (the seed instead re-ran a full topological sort per edge, making
+        graph construction quadratic in the edge count).
+        """
+        if src == dst:
+            raise ValueError("graph has a cycle")
+        stack = [dst]
+        seen = {dst}
+        while stack:
+            for s in self._succ[stack.pop()]:
+                if s == src:
+                    raise ValueError("graph has a cycle")
+                if s not in seen:
+                    seen.add(s)
+                    stack.append(s)
+
+    def signature(self) -> tuple:
+        """Hashable identity: tasks, edges and their pipelining flags.
+
+        Deliberately insertion-order-sensitive — the DES breaks ties
+        (residual link order, start dispatch) by task order, so graphs
+        with identical content but different construction order are
+        distinct simulation inputs.  Keys the scheduler's and WhatIf's
+        simulation memo caches.  Cached per graph version.
+        """
+        cached = self.__dict__.get("_sig_cache")
+        if cached is not None and cached[0] == self._version:
+            return cached[1]
+        sig = (tuple(self.tasks.values()),
+               tuple((e.src, e.dst, e.pipelined)
+                     for e in self.edges.values()))
+        self._sig_cache = (self._version, sig)
+        return sig
 
     def effective_pipelined(self, e: Edge) -> bool:
         """An edge streams units only if marked AND both endpoints can.
@@ -186,23 +243,27 @@ class MXDAG:
         """
         r = rsrc or {}
         rel = release or {}
+        # per-task times resolved once: t.time()/t.unit_time() validate
+        # their argument per call, which dominates on large DAGs
+        times = {n: t.time(r.get(n, 1.0)) for n, t in self.tasks.items()}
+        utimes = {n: t.unit_time(r.get(n, 1.0))
+                  for n, t in self.tasks.items()}
         out: dict[str, NodeTiming] = {}
         for n in self.topo_order():
-            t = self.tasks[n]
-            f = r.get(n, 1.0)
             ready = rel.get(n, 0.0)
             comp_floor = 0.0
+            ut = utimes[n]
             for p in self._pred[n]:
                 e = self.edges[(p, n)]
                 pt = out[p]
                 if self.effective_pipelined(e):
                     ready = max(ready, pt.first_out)
-                    comp_floor = max(comp_floor, pt.completion + t.unit_time(f))
+                    comp_floor = max(comp_floor, pt.completion + ut)
                 else:
                     ready = max(ready, pt.completion)
-            completion = max(ready + t.time(f), comp_floor)
+            completion = max(ready + times[n], comp_floor)
             out[n] = NodeTiming(ready=ready,
-                                first_out=ready + t.unit_time(f),
+                                first_out=ready + ut,
                                 completion=completion)
         return out
 
@@ -217,24 +278,23 @@ class MXDAG:
         timing = self.evaluate(rsrc)
         ms = max((t.completion for t in timing.values()), default=0.0)
         r = rsrc or {}
+        times = {n: t.time(r.get(n, 1.0)) for n, t in self.tasks.items()}
+        utimes = {n: t.unit_time(r.get(n, 1.0))
+                  for n, t in self.tasks.items()}
         for n in reversed(self.topo_order()):
-            t = self.tasks[n]
-            f = r.get(n, 1.0)
             if not self._succ[n]:
                 timing[n].latest_completion = ms
                 continue
             lc = float("inf")
             for s in self._succ[n]:
-                st = self.tasks[s]
-                sf = r.get(s, 1.0)
                 e = self.edges[(n, s)]
                 if self.effective_pipelined(e):
                     # successor needs our first unit by latest_start(s);
                     # conservative: our completion by its latest_completion
                     # minus one of its units.
-                    lc = min(lc, timing[s].latest_completion - st.unit_time(sf))
+                    lc = min(lc, timing[s].latest_completion - utimes[s])
                 else:
-                    lc = min(lc, timing[s].latest_completion - st.time(sf))
+                    lc = min(lc, timing[s].latest_completion - times[s])
             timing[n].latest_completion = lc
         return timing
 

@@ -97,7 +97,7 @@ class Monitor:
             unit = t.unit
             if unit is not None:
                 unit = unit * new_size / max(t.size, 1e-12)
-            g.tasks[name] = dataclasses.replace(t, size=new_size, unit=unit)
+            g.replace_task(dataclasses.replace(t, size=new_size, unit=unit))
         return g
 
     def replan_critical_path(self) -> list[str]:

@@ -94,28 +94,43 @@ class MXDAGScheduler:
        have longer completion time than the critical path").
     3. Pipelining: greedily enable a pipelineable edge only if the
        simulated makespan shrinks (Fig. 3 cases 1–3 automated).
+
+    ``memoize`` caches DES results within one :meth:`schedule` call, keyed
+    by (graph signature, policy, priorities), so identical what-if queries
+    are simulated once.  ``incremental_pipelining`` replaces the seed's
+    fixpoint re-scan of every candidate edge after each accepted decision
+    with a worklist that re-evaluates only candidates whose endpoints
+    touch resources affected by that decision (a task whose simulated
+    start/finish moved, or the accepted edge itself).  Both default on;
+    benchmarks flip them off to measure the seed behaviour.
     """
 
     def __init__(self, *, try_pipelining: bool = True,
-                 slack_eps: float = 1e-9):
+                 slack_eps: float = 1e-9, memoize: bool = True,
+                 incremental_pipelining: bool = True):
         self.try_pipelining = try_pipelining
         self.slack_eps = slack_eps
+        self.memoize = memoize
+        self.incremental_pipelining = incremental_pipelining
 
-    def _priorities(self, graph: MXDAG) -> dict[str, float]:
-        timing = graph.with_slack()
+    def _priorities(self, graph: MXDAG,
+                    timing: Optional[dict] = None) -> dict[str, float]:
+        timing = timing if timing is not None else graph.with_slack()
         prio: dict[str, float] = {}
         slacks = sorted({round(t.slack, 12) for t in timing.values()})
+        rank = {s: i for i, s in enumerate(slacks)}
+        denom = max(len(slacks), 1)
         for n, tm in timing.items():
             if tm.slack <= self.slack_eps:
                 prio[n] = CRITICAL
             else:
                 # rank-normalized slack keeps classes strictly above CRITICAL
-                rank = slacks.index(round(tm.slack, 12))
-                prio[n] = NONCRITICAL + rank / max(len(slacks), 1)
+                prio[n] = NONCRITICAL + rank[round(tm.slack, 12)] / denom
         return prio
 
-    def _best(self, g: MXDAG, cluster: Optional[Cluster]
-              ) -> tuple[str, dict[str, float], float]:
+    def _best(self, g: MXDAG, cluster: Optional[Cluster],
+              cache: Optional[dict] = None,
+              ) -> tuple[str, dict[str, float], float, SimResult]:
         """Principle 1 with its own caveat enforced.
 
         Strict slack-priority can delay a non-critical path *beyond its
@@ -124,15 +139,33 @@ class MXDAGScheduler:
         critical path").  So: start from strict priority, iteratively
         promote tasks that the DES shows finishing past their analytic
         latest-completion, and never return anything worse than plain fair
-        sharing.
+        sharing.  ``cache`` memoizes DES runs across _best calls.
         """
-        prio = self._priorities(g)
+        if cache is not None:
+            # intern the graph signature: hash the (large) task/edge tuple
+            # once per _best call, not once per memo lookup
+            sig_ids = cache.setdefault("sig_ids", {})
+            sig = sig_ids.setdefault(g.signature(), len(sig_ids))
+        else:
+            sig = None
+
+        def sim(policy: str, prio: dict[str, float]) -> SimResult:
+            if cache is None:
+                return simulate(g, cluster, policy=policy, priorities=prio)
+            key = (sig, policy, tuple(sorted(prio.items())))
+            res = cache.get(key)
+            if res is None:
+                res = simulate(g, cluster, policy=policy, priorities=prio)
+                cache[key] = res
+            return res
+
         timing = g.with_slack()
-        cands: list[tuple[str, dict[str, float], float]] = []
+        prio = self._priorities(g, timing)
+        cands: list[tuple[str, dict[str, float], float, SimResult]] = []
         cur = dict(prio)
         for _ in range(len(g.tasks)):
-            res = simulate(g, cluster, policy="priority", priorities=cur)
-            cands.append(("priority", dict(cur), res.makespan))
+            res = sim("priority", cur)
+            cands.append(("priority", dict(cur), res.makespan, res))
             late = [n for n, tm in timing.items()
                     if cur.get(n, 0.0) > CRITICAL
                     and res.finish[n] > tm.latest_completion + 1e-9]
@@ -140,8 +173,8 @@ class MXDAGScheduler:
                 break
             for n in late:
                 cur[n] = CRITICAL
-        fair = simulate(g, cluster, policy="fair")
-        cands.append(("fair", {}, fair.makespan))
+        fair = sim("fair", {})
+        cands.append(("fair", {}, fair.makespan, fair))
         return min(cands, key=lambda c: (c[2], c[0] == "fair"))
 
     def schedule(self, graph: MXDAG,
@@ -152,7 +185,8 @@ class MXDAGScheduler:
             for (s, d) in list(g.edges):
                 g.set_pipelined(s, d, False)
 
-        policy, prio, best = self._best(g, cluster)
+        cache: Optional[dict] = {} if self.memoize else None
+        policy, prio, best, best_res = self._best(g, cluster, cache)
         decisions: dict[tuple[str, str], bool] = {}
 
         if self.try_pipelining:
@@ -161,25 +195,88 @@ class MXDAGScheduler:
                  if graph.tasks[e.src].pipelineable
                  and graph.tasks[e.dst].pipelineable),
             )
-            improved = True
-            while improved:
-                improved = False
-                for (s, d) in candidates:
-                    if decisions.get((s, d)):
-                        continue
-                    trial = g.copy()
-                    trial.set_pipelined(s, d, True)
-                    tpolicy, tprio, tms = self._best(trial, cluster)
-                    if tms < best - 1e-9:
-                        g, best = trial, tms
-                        policy, prio = tpolicy, tprio
-                        decisions[(s, d)] = True
-                        improved = True
+            if self.incremental_pipelining:
+                g, policy, prio, best, best_res = self._greedy_pipeline(
+                    g, cluster, cache, candidates, decisions,
+                    policy, prio, best, best_res)
+            else:
+                # seed fixpoint: full candidate re-scan after any accept
+                improved = True
+                while improved:
+                    improved = False
+                    for (s, d) in candidates:
+                        if decisions.get((s, d)):
+                            continue
+                        trial = g.copy()
+                        trial.set_pipelined(s, d, True)
+                        tpolicy, tprio, tms, tres = self._best(
+                            trial, cluster, cache)
+                        if tms < best - 1e-9:
+                            g, best, best_res = trial, tms, tres
+                            policy, prio = tpolicy, tprio
+                            decisions[(s, d)] = True
+                            improved = True
         return Schedule(graph=g, policy=policy, priorities=prio,
                         meta={"pipelined": sorted(k for k, v in
                                                   decisions.items() if v),
                               "critical_path": g.critical_path(),
                               "predicted_makespan": best})
+
+    def _greedy_pipeline(self, g: MXDAG, cluster: Optional[Cluster],
+                         cache: Optional[dict],
+                         candidates: list[tuple[str, str]],
+                         decisions: dict[tuple[str, str], bool],
+                         policy: str, prio: dict[str, float],
+                         best: float, best_res: SimResult):
+        """Worklist greedy: each candidate edge is evaluated once; an
+        accepted decision re-enqueues only the rejected candidates whose
+        endpoints touch a resource the decision affected (a task whose
+        simulated start/finish moved, or the accepted edge's endpoints).
+
+        This is a heuristic pruning of the seed's full fixpoint re-scan:
+        a decision can in principle shift analytic slack (and thus _best
+        priorities) for tasks whose simulated timing did not move, so a
+        far-away rejected candidate could become profitable without being
+        requeued.  Makespan monotonicity is unaffected (only improvements
+        are ever accepted); pass ``incremental_pipelining=False`` for the
+        seed's exhaustive behaviour.
+        """
+        res_of = {n: (cluster.resources_for(t) if cluster is not None
+                      else t.resources())
+                  for n, t in g.tasks.items()}
+        queue = list(candidates)
+        queued = set(candidates)
+        rejected: list[tuple[str, str]] = []
+        i = 0
+        while i < len(queue):
+            s, d = queue[i]
+            i += 1
+            queued.discard((s, d))
+            if decisions.get((s, d)):
+                continue
+            trial = g.copy()
+            trial.set_pipelined(s, d, True)
+            tpolicy, tprio, tms, tres = self._best(trial, cluster, cache)
+            if tms >= best - 1e-9:
+                rejected.append((s, d))
+                continue
+            affected = set(res_of[s]) | set(res_of[d])
+            for n in g.tasks:
+                if (abs(best_res.start[n] - tres.start[n]) > 1e-9
+                        or abs(best_res.finish[n] - tres.finish[n]) > 1e-9):
+                    affected.update(res_of[n])
+            g, best, best_res = trial, tms, tres
+            policy, prio = tpolicy, tprio
+            decisions[(s, d)] = True
+            requeue = [c for c in rejected
+                       if c not in queued and not decisions.get(c)
+                       and (affected & set(res_of[c[0]])
+                            or affected & set(res_of[c[1]]))]
+            rejected = [c for c in rejected if c not in requeue]
+            for c in sorted(requeue):
+                queue.append(c)
+                queued.add(c)
+        return g, policy, prio, best, best_res
 
 
 class AltruisticMultiScheduler:

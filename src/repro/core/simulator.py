@@ -21,14 +21,45 @@ The simulator advances by exact rate integration between events; events are
 unit boundaries, task completions, and release times, so no behaviour change
 can occur between events and the result is exact for piecewise-constant
 rates.
+
+Event-calendar invariants (the fast :meth:`Simulator.run` core)
+---------------------------------------------------------------
+Between two consecutive events every rate is constant, so the engine keeps
+a heap of upcoming event times instead of rescanning all tasks:
+
+- A task's rate can change **only** when the set of runnable, unstarved
+  flows in some priority class changes (a start, a completion, or a
+  starvation flip when work catches up with the pipelined input cap), or —
+  for coflow members — when remaining sizes shift the MADD weights.  A
+  unit-boundary event that changes none of those leaves every rate intact,
+  so the waterfill is skipped entirely and the previous rates are reused.
+- Within the "priority" policy, classes are waterfilled in ascending order
+  on residual capacity; class c's allocation depends only on classes < c.
+  When only class c's runnable set changed, classes below c *replay* their
+  logged freeze sequence (bit-identical residual subtraction) and only
+  classes ≥ c are waterfilled afresh.
+- ``work_cap``/``delivered_fraction`` are maintained incrementally from a
+  precomputed streaming-predecessor adjacency: a consumer's cap is
+  recomputed only when a streaming producer crosses one of its own unit
+  boundaries (its event) or completes.
+- Start gating is monotone (done, delivered fraction, coflow completion
+  and release only ever progress), so gating is re-evaluated only for
+  tasks *triggered* by a completion, a first-unit delivery, a release, or
+  a freed compute slot — never by a global rescan.
+
+The retained :meth:`Simulator._reference_run` slow path is the seed
+implementation; the golden differential tests assert the event-calendar
+core reproduces its start/finish/makespan to within EPS on every scenario.
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import math
 from typing import Optional
 
 from repro.core.cluster import Cluster
+from repro.core.fabric import link_flow_index
 from repro.core.graph import MXDAG
 from repro.core.task import MXTask, TaskKind
 
@@ -36,20 +67,38 @@ EPS = 1e-9
 
 
 def waterfill(group: list[str], paths, weight, residual: dict[str, float],
-              rates: dict[str, float]) -> None:
+              rates: dict[str, float]) -> list[tuple[str, float]]:
     """Weighted max-min fair allocation of ``group`` over ``residual``.
 
     ``paths[n]`` is the tuple of links flow n occupies; ``weight(n)`` its
-    share weight.  Progressive filling: repeatedly find the bottleneck link
-    (minimum residual capacity per unit weight), freeze every flow crossing
-    it at its weighted share, subtract along those flows' paths, recurse on
-    the rest.  Mutates ``residual`` and ``rates``.
+    share weight, or ``None`` for unit weights.  Progressive filling:
+    repeatedly find the bottleneck link (minimum residual capacity per unit
+    weight), freeze every flow crossing it at its weighted share, subtract
+    along those flows' paths, recurse on the rest.  Mutates ``residual``
+    and ``rates``; returns the freeze sequence ``[(flow, rate), ...]`` in
+    allocation order so a caller can replay the identical subtraction.
     """
     unfrozen = sorted(group)
+    seq: list[tuple[str, float]] = []
+    if not unfrozen:
+        return seq
+    unfrozen_set = set(unfrozen)
+    # link -> group flows crossing it, in sorted-group order: weight sums
+    # and freeze batches then enumerate flows exactly as the seed's
+    # all-pairs scan did, so the arithmetic is bit-identical.
+    by_link = link_flow_index(unfrozen, paths)
+    if weight is None:
+        counts = {r: float(len(fl)) for r, fl in by_link.items()}
     while unfrozen:
         best_r, best_ratio = None, float("inf")
         for r in residual:
-            w = sum(weight(n) for n in unfrozen if r in paths[n])
+            fl = by_link.get(r)
+            if not fl:
+                continue
+            if weight is None:
+                w = counts[r]
+            else:
+                w = sum(weight(n) for n in fl if n in unfrozen_set)
             if w > EPS:
                 ratio = residual[r] / w
                 if ratio < best_ratio - EPS:
@@ -57,14 +106,20 @@ def waterfill(group: list[str], paths, weight, residual: dict[str, float],
         if best_r is None:
             for n in unfrozen:
                 rates[n] = 0.0
-            return
-        frozen_now = [n for n in unfrozen if best_r in paths[n]]
+                seq.append((n, 0.0))
+            return seq
+        frozen_now = [n for n in by_link[best_r] if n in unfrozen_set]
         for n in frozen_now:
-            alloc = weight(n) * best_ratio
+            alloc = best_ratio if weight is None else weight(n) * best_ratio
             rates[n] = alloc
+            seq.append((n, alloc))
             for r in paths[n]:
                 residual[r] = max(0.0, residual[r] - alloc)
-        unfrozen = [n for n in unfrozen if n not in frozen_now]
+                if weight is None:
+                    counts[r] -= 1.0
+        unfrozen_set.difference_update(frozen_now)
+        unfrozen = [n for n in unfrozen if n in unfrozen_set]
+    return seq
 
 
 def max_min_rates(paths, capacity,
@@ -81,7 +136,8 @@ def max_min_rates(paths, capacity,
     residual = {r: float(capacity[r]) for ls in p.values() for r in ls}
     w = weights or {}
     rates: dict[str, float] = {}
-    waterfill(sorted(p), p, lambda n: w.get(n, 1.0), residual, rates)
+    weight = (lambda n: w.get(n, 1.0)) if w else None
+    waterfill(sorted(p), p, weight, residual, rates)
     return rates
 
 
@@ -96,13 +152,15 @@ class SimResult:
         return self.job_completion[job]
 
 
-@dataclasses.dataclass
 class _State:
-    task: MXTask
-    work: float = 0.0
-    started: Optional[float] = None
-    finished: Optional[float] = None
-    has_slot: bool = False
+    __slots__ = ("task", "work", "started", "finished", "has_slot")
+
+    def __init__(self, task: MXTask) -> None:
+        self.task = task
+        self.work = 0.0
+        self.started: Optional[float] = None
+        self.finished: Optional[float] = None
+        self.has_slot = False
 
     @property
     def done(self) -> bool:
@@ -128,16 +186,30 @@ class Simulator:
         if policy not in ("fair", "priority"):
             raise ValueError(f"unknown policy {policy}")
         self.g = graph
-        self.cluster = cluster or Cluster.for_graph(graph)
+        if cluster is None:
+            # the default cluster is a pure function of the graph; cache
+            # it so scheduler loops don't rebuild it per simulation
+            cached = graph.__dict__.get("_default_cluster")
+            if cached is not None and cached[0] == graph._version:
+                cluster = cached[1]
+            else:
+                cluster = Cluster.for_graph(graph)
+                graph._default_cluster = (graph._version, cluster)
+        self.cluster = cluster
         self.policy = policy
         self.prio = dict(priorities or {})
         self.releases = dict(releases or {})
         self.coflows = [set(c) for c in (coflows or [])]
         # resource paths, resolved once: a compute task's processor pool, a
         # flow's full link path (endpoint NICs only on big-switch clusters)
-        self._res: dict[str, tuple[str, ...]] = {
-            n: self.cluster.resources_for(t)
-            for n, t in graph.tasks.items()}
+        cached = graph.__dict__.get("_res_cache")
+        if cached is not None and cached[0] == graph._version \
+                and cached[1] is cluster:
+            self._res = cached[2]
+        else:
+            self._res = {n: cluster.resources_for(t)
+                         for n, t in graph.tasks.items()}
+            graph._res_cache = (graph._version, cluster, self._res)
         self._coflow_of: dict[str, int] = {}
         for i, c in enumerate(self.coflows):
             for n in c:
@@ -148,7 +220,532 @@ class Simulator:
                 self._coflow_of[n] = i
 
     # ------------------------------------------------------------------
+    # incremental event-calendar core (see module docstring invariants)
+    # ------------------------------------------------------------------
+    def _statics(self) -> dict:
+        """Graph/coflow-derived constants of a run, cached on the graph.
+
+        Everything here is a pure function of (graph version, coflows) —
+        the scheduler simulates the same graph under several priority
+        maps, and what-if sweeps re-simulate scheduled graphs, so the
+        precompute is shared across runs instead of rebuilt per sim.
+        """
+        g = self.g
+        tasks = g.tasks
+        coflows = self.coflows
+        coflow_of = self._coflow_of
+        key = (g._version,
+               tuple(tuple(sorted(c)) for c in coflows))
+        cached = g.__dict__.get("_sim_statics")
+        if cached is not None and cached[0] == key:
+            return cached[1]
+
+        # per-task scalars (size/effective_unit/n_units are properties;
+        # the event loop reads them millions of times)
+        size_of = {n: t.size for n, t in tasks.items()}
+        unit_of = {n: t.effective_unit for n, t in tasks.items()}
+        nu_of = {n: t.n_units for n, t in tasks.items()}
+        is_compute = {n: t.kind is TaskKind.COMPUTE
+                      for n, t in tasks.items()}
+
+        # streaming adjacency for work_cap maintenance (coflow producers
+        # gate at start instead, exactly as the reference's work_cap skip)
+        stream_in: dict[str, list[str]] = {n: [] for n in tasks}
+        stream_out: dict[str, list[str]] = {n: [] for n in tasks}
+        # flows fed by any effectively-pipelined edge (coflow or not):
+        # they contend in the top priority class (paper §4.1)
+        stream_fed: set[str] = set()
+        for (p, n), e in g.edges.items():
+            if g.effective_pipelined(e):
+                stream_fed.add(n)
+                if coflow_of.get(p) is None:
+                    stream_in[n].append(p)
+                    stream_out[p].append(n)
+
+        # start-gating lists, compiled once: barrier preds (must be done),
+        # streaming preds (first-unit fraction), coflow preds (coflow must
+        # be done), plus the member-sync preds of the task's own coflow
+        _empty: tuple = ()
+        gate_barrier: dict[str, tuple] = {}
+        gate_stream: dict[str, tuple] = {}
+        gate_cof: dict[str, tuple] = {}
+        gate_sync: dict[str, tuple] = {}
+        for n in tasks:
+            barrier, stream, cofs = [], [], []
+            for p in g.preds(n):
+                ci = coflow_of.get(p)
+                if ci is not None:
+                    cofs.append(ci)
+                elif g.effective_pipelined(g.edges[(p, n)]):
+                    stream.append(p)
+                else:
+                    barrier.append(p)
+            gate_barrier[n] = tuple(barrier) if barrier else _empty
+            gate_stream[n] = tuple(stream) if stream else _empty
+            gate_cof[n] = tuple(cofs) if cofs else _empty
+            ci = coflow_of.get(n)
+            gate_sync[n] = (tuple(p for m in coflows[ci]
+                                  for p in g.preds(m))
+                            if ci is not None else _empty)
+
+        net_order = [n for n, t in tasks.items()
+                     if t.kind is TaskKind.NETWORK]
+        net_idx = {n: i for i, n in enumerate(net_order)}
+
+        # tasks whose coflow-sync start gate cares about a completion of n
+        coflow_fed_by: dict[str, list[int]] = {}
+        for i, c in enumerate(coflows):
+            for m in c:
+                for p in g.preds(m):
+                    coflow_fed_by.setdefault(p, []).append(i)
+
+        data = dict(size_of=size_of, unit_of=unit_of, nu_of=nu_of,
+                    is_compute=is_compute, stream_in=stream_in,
+                    stream_out=stream_out, stream_fed=stream_fed,
+                    has_streaming=any(stream_out.values()),
+                    gate_barrier=gate_barrier, gate_stream=gate_stream,
+                    gate_cof=gate_cof, gate_sync=gate_sync,
+                    net_order=net_order, net_idx=net_idx,
+                    coflow_fed_by=coflow_fed_by)
+        g._sim_statics = (key, data)
+        return data
+
     def run(self, horizon: float = 1e15) -> SimResult:
+        g = self.g
+        tasks = g.tasks
+        st = {n: _State(t) for n, t in tasks.items()}
+        now = 0.0
+        slots_free = {f"{h}.{p}": k
+                      for h, host in self.cluster.hosts.items()
+                      for p, k in host.procs.items()}
+        coflow_of = self._coflow_of
+        coflows = self.coflows
+        inf = float("inf")
+        prio_get = self.prio.get
+
+        sd = self._statics()
+        size_of = sd["size_of"]
+        unit_of = sd["unit_of"]
+        nu_of = sd["nu_of"]
+        is_compute = sd["is_compute"]
+        stream_in = sd["stream_in"]
+        stream_out = sd["stream_out"]
+        has_streaming = sd["has_streaming"]
+        gate_barrier = sd["gate_barrier"]
+        gate_stream = sd["gate_stream"]
+        gate_cof = sd["gate_cof"]
+        gate_sync = sd["gate_sync"]
+        net_order = sd["net_order"]
+        net_idx = sd["net_idx"]
+        coflow_fed_by = sd["coflow_fed_by"]
+        stream_fed = sd["stream_fed"]
+
+        # flow priority classes are static for a run: the streaming flag
+        # and the priority map never change mid-simulation
+        cls_of = ({n: None for n in net_order} if self.policy == "fair"
+                  else {n: 0.0 if n in stream_fed else prio_get(n, 0.0)
+                        for n in net_order})
+        # dispatch order of the start pass (static: priority, then name)
+        sort_key = {n: (prio_get(n, 0.0), n) for n in tasks}
+
+        bw = self.cluster.bandwidths(
+            r for n in net_order for r in self._res[n])
+
+        # -- dynamic state ---------------------------------------------
+        cap: dict[str, float] = {}       # work_cap, tasks with stream_in
+        d_units: dict[str, int] = {}     # delivered units, stream_out keys
+        starved = {n: False for n in tasks}
+        rates = {n: 0.0 for n in tasks}
+        active: set[str] = set()         # started, unfinished, rate > EPS
+        runnable_net: set[str] = set()   # started, unfinished flows
+        waiting_slot: dict[str, set[str]] = {}
+        dirty_classes: set = set()
+        alloc_log: dict = {}             # class -> freeze sequence
+        heap: list[tuple[float, int, str, int]] = []
+        stamp = {n: 0 for n in tasks}
+        unfinished = len(tasks)
+        heappush = heapq.heappush
+        heappop = heapq.heappop
+        succs_of = g._succ
+
+        def coflow_done(i: int) -> bool:
+            return all(st[m].finished is not None for m in coflows[i])
+
+        def delivered_fraction(p: str) -> float:
+            ps = st[p]
+            if ps.finished is not None:
+                return 1.0
+            size = size_of[p]
+            if size <= 0:
+                return 1.0
+            u = unit_of[p]
+            return min(1.0, math.floor(ps.work / u + EPS) * u / size)
+
+        def pred_satisfied_for_start(n: str) -> bool:
+            """Can task n begin its first unit now?  (Seed semantics.)"""
+            for p in gate_barrier[n]:
+                if st[p].finished is None:
+                    return False
+            for ci in gate_cof[n]:
+                if not coflow_done(ci):            # all-or-nothing gating
+                    return False
+            for p in gate_stream[n]:
+                if delivered_fraction(p) + EPS < 1.0 / nu_of[n]:
+                    return False
+            # coflow synchronized start: every member's preds must be done
+            for p in gate_sync[n]:
+                if st[p].finished is None:
+                    return False
+            return True
+
+        def recompute_cap(n: str) -> float:
+            c = size_of[n]
+            nu = nu_of[n]
+            eu = unit_of[n]
+            for p in stream_in[n]:
+                if st[p].finished is None:
+                    enabled = math.floor(delivered_fraction(p) * nu + EPS)
+                    c = min(c, enabled * eu)
+            return c
+
+        def cap_of(n: str) -> float:
+            return cap.get(n, size_of[n])
+
+        def dirty(n: str) -> None:
+            dirty_classes.add(cls_of[n])
+
+        def schedule_event(n: str) -> None:
+            """(Re)compute task n's next unit-boundary/cap/completion."""
+            ver = stamp[n] + 1
+            stamp[n] = ver
+            s = st[n]
+            r = rates[n]
+            if s.finished is not None or s.started is None or r <= EPS:
+                active.discard(n)
+                return
+            active.add(n)
+            size = size_of[n]
+            w = s.work
+            u = unit_of[n]
+            if u < size:
+                tgt = (math.floor(w / u + EPS) + 1) * u
+                if tgt > size:
+                    tgt = size
+            else:
+                tgt = size
+            best = inf
+            if tgt > w + EPS:
+                best = (tgt - w) / r
+            if size > w + EPS:
+                d = (size - w) / r
+                if d < best:
+                    best = d
+            c = cap.get(n)
+            if c is not None and c > w + EPS:
+                d = (c - w) / r
+                if d < best:
+                    best = d
+            if best < inf:
+                heappush(heap, (now + best, 1, n, ver))
+
+        def weight_for(group_has_coflow: bool):
+            if not group_has_coflow:
+                return None
+            def weight(n: str) -> float:
+                ci = coflow_of.get(n)
+                if ci is None:
+                    return 1.0
+                rem = {m: size_of[m] - st[m].work
+                       for m in coflows[ci] if st[m].finished is None}
+                mx = max(rem.values(), default=1.0)
+                return max(rem.get(n, 0.0) / mx, 1e-6) if mx > 0 else 1.0
+            return weight
+
+        def allocate() -> set[str]:
+            """Waterfill classes from the lowest dirty one up; replay the
+            untouched classes below it (their runnable sets are unchanged,
+            so their rates — and the residual they leave behind — are the
+            ones already logged).  Returns the freshly waterfilled flows."""
+            # task-insertion order, as the seed's full scan produced it
+            flows = sorted((n for n in runnable_net if not starved[n]),
+                           key=net_idx.__getitem__)
+            changed: set[str] = set()
+            residual: dict[str, float] = {}
+            for n in flows:
+                for r in self._res[n]:
+                    if r not in residual:
+                        residual[r] = bw[r]
+            if self.policy == "fair":
+                classes: list = [None]
+                lowest = None            # single class: always waterfill
+            else:
+                classes = sorted({cls_of[n] for n in flows})
+                lowest = min(dirty_classes) if dirty_classes else None
+            new_log: dict = {}
+            for cls in classes:
+                if lowest is None or cls >= lowest or cls not in alloc_log:
+                    group = [n for n in flows if cls_of[n] == cls]
+                    old = [rates[n] for n in group]
+                    seq = waterfill(
+                        group, self._res,
+                        weight_for(any(n in coflow_of for n in group)),
+                        residual, rates)
+                    # an unchanged rate means unchanged absolute event
+                    # times — the existing heap entry stays valid
+                    changed.update(n for n, o in zip(group, old)
+                                   if rates[n] != o)
+                    new_log[cls] = seq
+                else:
+                    # unchanged class: replay the logged freeze sequence —
+                    # identical subtraction order, bit-identical residual
+                    for n, alloc in alloc_log[cls]:
+                        rates[n] = alloc
+                        for r in self._res[n]:
+                            residual[r] = max(0.0, residual[r] - alloc)
+                    new_log[cls] = alloc_log[cls]
+            alloc_log.clear()
+            alloc_log.update(new_log)
+            dirty_classes.clear()
+            return changed
+
+        candidates: set[str] = set()
+        freed: set[str] = set()
+        touched: set[str] = set()        # need schedule_event refresh
+
+        def complete(n: str) -> None:
+            nonlocal unfinished
+            s = st[n]
+            s.finished = now
+            unfinished -= 1
+            active.discard(n)
+            if s.has_slot:
+                r = tasks[n].resources()[0]
+                slots_free[r] += 1
+                s.has_slot = False
+                freed.add(r)
+            if is_compute[n]:
+                rates[n] = 0.0
+            else:
+                runnable_net.discard(n)
+                if rates[n]:
+                    rates[n] = 0.0
+                    dirty_classes.add(cls_of[n])
+            candidates.update(succs_of[n])
+            for c in stream_out[n]:
+                cs = st[c]
+                if cs.started is not None and cs.finished is None:
+                    nc = recompute_cap(c)
+                    if nc != cap.get(c):
+                        cap[c] = nc
+                        touched.add(c)
+            if coflows:
+                ci = coflow_of.get(n)
+                if ci is not None and coflow_done(ci):
+                    for m in coflows[ci]:
+                        candidates.update(succs_of[m])
+                for ci2 in coflow_fed_by.get(n, ()):
+                    candidates.update(coflows[ci2])
+
+        def on_start(n: str) -> None:
+            s = st[n]
+            c = size_of[n]
+            if stream_in[n]:
+                c = cap[n] = recompute_cap(n)
+            if stream_out[n]:
+                d_units[n] = 0
+                for c2 in stream_out[n]:
+                    candidates.add(c2)   # first-unit gate may already pass
+            is_starved = c <= s.work + EPS
+            starved[n] = is_starved
+            if is_compute[n]:
+                rates[n] = 0.0 if is_starved else 1.0
+            else:
+                runnable_net.add(n)
+                dirty_classes.add(cls_of[n])
+            touched.add(n)
+
+        def process_starts() -> None:
+            """Start every gated candidate; cascade zero-size completions
+            (the seed's same-timestamp `continue` loop)."""
+            while True:
+                startable = [n for n in candidates
+                             if st[n].started is None
+                             and self.releases.get(n, 0.0) <= now + EPS
+                             and pred_satisfied_for_start(n)]
+                candidates.clear()
+                if not startable:
+                    return
+                zero_done = False
+                for n in sorted(startable, key=sort_key.__getitem__):
+                    s = st[n]
+                    if is_compute[n]:
+                        r = tasks[n].resources()[0]
+                        if slots_free.get(r, 0) >= 1:
+                            slots_free[r] -= 1
+                            s.has_slot = True
+                            s.started = now
+                            waiting_slot.get(r, set()).discard(n)
+                        else:
+                            waiting_slot.setdefault(r, set()).add(n)
+                            continue
+                    else:
+                        s.started = now
+                    on_start(n)
+                    if size_of[n] <= EPS:
+                        complete(n)
+                        zero_done = True
+                # newly freed slots may admit earlier waiters immediately
+                for r in freed:
+                    candidates.update(waiting_slot.get(r, ()))
+                freed.clear()
+                if not zero_done and not candidates:
+                    return
+
+        # -- initialisation --------------------------------------------
+        for n, rel in self.releases.items():
+            if rel > EPS:
+                heapq.heappush(heap, (rel, 0, n, 0))
+        candidates.update(st)
+        process_starts()
+        if dirty_classes:
+            touched.update(allocate())
+        for n in touched:
+            schedule_event(n)
+        touched.clear()
+
+        # -- main loop -------------------------------------------------
+        guard = 0
+        max_iters = 10000 * (len(tasks) + 1) + sum(nu_of.values())
+        while unfinished:
+            guard += 1
+            if guard > max_iters:
+                raise RuntimeError("simulator did not converge (livelock?)")
+
+            # next event time (skip stale heap entries lazily)
+            t_next = None
+            while heap:
+                tm, kind, n, stp = heap[0]
+                if kind == 1 and (stamp[n] != stp
+                                  or st[n].finished is not None):
+                    heappop(heap)
+                    continue
+                if kind == 0 and st[n].started is not None:
+                    heappop(heap)
+                    continue
+                t_next = tm
+                break
+            if t_next is None:
+                pend = [n for n, s in st.items() if not s.done]
+                raise RuntimeError(f"deadlock at t={now:.6g}: {pend}")
+            if t_next > horizon:
+                t_next = horizon     # seed semantics: never pass horizon;
+                #                      no progress past it trips the guard
+            dt = t_next - now
+            if dt > 0.0:
+                for n in active:
+                    s = st[n]
+                    w = s.work + rates[n] * dt
+                    size = size_of[n]
+                    s.work = size if w > size else w
+            now = t_next
+
+            batch: list[str] = []
+            while heap and heap[0][0] <= t_next:
+                tm, kind, n, stp = heappop(heap)
+                if kind == 1 and stamp[n] == stp \
+                        and st[n].finished is None:
+                    batch.append(n)
+                elif kind == 0 and st[n].started is None:
+                    candidates.add(n)
+
+            # completions (scan active: a task reaching its cap or size is
+            # still rate>0 until this very event)
+            finished_now = [n for n in active
+                            if st[n].work >= size_of[n] - EPS]
+            for n in finished_now:
+                complete(n)
+
+            # unit-boundary crossings feed streaming consumers
+            if has_streaming:
+                for n in batch:
+                    if not stream_out[n] or st[n].finished is not None:
+                        continue
+                    du = math.floor(st[n].work / unit_of[n] + EPS)
+                    if du != d_units[n]:
+                        d_units[n] = du
+                        for c in stream_out[n]:
+                            cs = st[c]
+                            if cs.started is None:
+                                candidates.add(c)
+                            elif cs.finished is None:
+                                nc = recompute_cap(c)
+                                if nc != cap.get(c):
+                                    cap[c] = nc
+                                    touched.add(c)
+
+            for r in freed:
+                candidates.update(waiting_slot.get(r, ()))
+            freed.clear()
+            if candidates:
+                process_starts()
+
+            # starvation flips (cap moved, or work caught up with cap)
+            for n in touched.union(x for x in batch
+                                   if st[x].finished is None):
+                s = st[n]
+                if s.started is None or s.finished is not None:
+                    continue
+                is_starved = cap_of(n) <= s.work + EPS
+                if is_starved != starved[n]:
+                    starved[n] = is_starved
+                    if is_compute[n]:
+                        rates[n] = 0.0 if is_starved else 1.0
+                    else:
+                        if is_starved:
+                            rates[n] = 0.0   # excluded from the waterfill
+                        dirty(n)
+                touched.add(n)
+
+            # MADD weights drift with remaining work: any class holding a
+            # running coflow member reallocates every event
+            if coflows:
+                for i, c in enumerate(coflows):
+                    if any(st[m].started is not None
+                           and st[m].finished is None for m in c):
+                        for m in c:
+                            dirty_classes.add(cls_of[m])
+
+            if dirty_classes:
+                touched.update(allocate())
+
+            for n in touched:
+                schedule_event(n)
+            for n in batch:
+                if n not in touched:
+                    schedule_event(n)
+            touched.clear()
+
+        start = {n: s.started for n, s in st.items()}         # type: ignore
+        finish = {n: s.finished for n, s in st.items()}       # type: ignore
+        jobs: dict[str, float] = {}
+        for n, s in st.items():
+            j = tasks[n].job
+            jobs[j] = max(jobs.get(j, 0.0), s.finished)       # type: ignore
+        return SimResult(start=start, finish=finish,
+                         makespan=max(finish.values(), default=0.0),
+                         job_completion=jobs)
+
+    # ------------------------------------------------------------------
+    # golden slow path: the seed implementation, kept as the differential-
+    # test oracle for the event-calendar core.  Verbatim except for two
+    # crash fixes the fuzzer surfaced (the results on every non-crashing
+    # input are untouched): (1) the zero-size start cascade re-looped on
+    # *any historical* zero-size completion, livelocking whenever one
+    # coexisted with a startable compute task blocked on a busy slot;
+    # (2) a DAG whose final tasks complete inside that cascade fell
+    # through to the deadlock check with nothing pending.
+    # ------------------------------------------------------------------
+    def _reference_run(self, horizon: float = 1e15) -> SimResult:
         g = self.g
         st = {n: _State(t) for n, t in g.tasks.items()}
         now = 0.0
@@ -221,6 +818,7 @@ class Simulator:
                          if s.started is None and release(n) <= now + EPS
                          and pred_satisfied_for_start(n)]
             # compute tasks need a free slot; dispatch by (priority, name)
+            zero_completed = False
             for n in sorted(startable,
                             key=lambda n: (self.prio.get(n, 0.0), n)):
                 t = g.tasks[n]
@@ -234,13 +832,18 @@ class Simulator:
                     st[n].started = now
                 if t.size <= EPS and st[n].started is not None:
                     st[n].finished = now
+                    zero_completed = True
                     if st[n].has_slot:
                         slots_free[t.resources()[0]] += 1
                         st[n].has_slot = False
 
-            # zero-size completions may unlock more starts immediately
-            if any(s.started is not None and s.done and
-                   g.tasks[n].size <= EPS for n, s in st.items()):
+            # zero-size completions may unlock more starts immediately.
+            # Only a completion from *this* pass warrants the re-loop —
+            # the seed keyed this on any historical zero-size completion,
+            # which livelocked whenever one existed alongside a startable
+            # compute task blocked on a busy slot (nothing changes between
+            # passes, so the same-timestamp loop never exits).
+            if zero_completed:
                 # cheap: loop again to re-evaluate gating at same timestamp
                 if any(st[n].started is None and release(n) <= now + EPS
                        and pred_satisfied_for_start(n)
@@ -279,6 +882,10 @@ class Simulator:
                 # could be waiting on a compute slot that frees only at a
                 # completion — but nothing progresses ⇒ deadlock
                 pend = [n for n, s in st.items() if not s.done]
+                if not pend:
+                    break   # a zero-size start cascade finished the DAG
+                    # mid-iteration (seed bug fix: it raised "deadlock"
+                    # with nothing pending)
                 raise RuntimeError(f"deadlock at t={now:.6g}: {pend}")
             dt = max(dt, 0.0)
 
@@ -314,7 +921,7 @@ class Simulator:
     # ------------------------------------------------------------------
     def _allocate_rates(self, st: dict[str, _State],
                         work_cap) -> dict[str, float]:
-        """Instantaneous rates for all runnable tasks.
+        """Instantaneous rates for all runnable tasks (reference path).
 
         Compute tasks: rate 1 while holding a slot and not input-starved.
         Flows: weighted max-min fair within a priority class over every
@@ -368,6 +975,7 @@ class Simulator:
                 return 0.0
             return self.prio.get(n, 0.0)
 
+        has_coflow = bool(self._coflow_of)
         if self.policy == "priority":
             classes = sorted({flow_class(n) for n in flows})
         else:
@@ -376,7 +984,8 @@ class Simulator:
         for cls in classes:
             group = [n for n in flows
                      if cls is None or flow_class(n) == cls]
-            waterfill(group, self._res, weight, residual, rates)
+            waterfill(group, self._res, weight if has_coflow else None,
+                      residual, rates)
         return rates
 
 

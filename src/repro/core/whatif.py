@@ -31,16 +31,40 @@ class WhatIfResult:
 
 
 class WhatIf:
+    """What-if query engine with a shared result cache.
+
+    The baseline is scheduled+simulated once per WhatIf instance, not once
+    per query — a sweep of k variants costs k evaluations instead of 2k.
+    Variant results are also memoized by (graph signature, cluster
+    signature), so repeated or overlapping sweeps re-use earlier answers.
+    """
+
     def __init__(self, graph: MXDAG, cluster: Optional[Cluster] = None,
                  scheduler: Optional[MXDAGScheduler] = None):
         self.graph = graph
         self.cluster = cluster
         self.scheduler = scheduler or MXDAGScheduler(try_pipelining=False)
+        self._cache: dict = {}
+
+    @staticmethod
+    def _cluster_key(cl: Optional[Cluster]):
+        if cl is None:
+            return None
+        topo = cl.topology
+        return (tuple(sorted((h.name, tuple(sorted(h.procs.items())),
+                              h.nic_in, h.nic_out)
+                             for h in cl.hosts.values())),
+                None if topo is None else tuple(sorted(topo.links.items())))
 
     def _makespan(self, g: MXDAG,
                   cluster: Optional[Cluster] = None) -> float:
         cl = cluster if cluster is not None else self.cluster
-        return self.scheduler.schedule(g, cl).simulate(cl).makespan
+        key = (g.signature(), self._cluster_key(cl))
+        ms = self._cache.get(key)
+        if ms is None:
+            ms = self.scheduler.schedule(g, cl).simulate(cl).makespan
+            self._cache[key] = ms
+        return ms
 
     def baseline(self) -> float:
         return self._makespan(self.graph)
@@ -57,7 +81,7 @@ class WhatIf:
         """Change a task's pipeline unit (chunk) size."""
         g = self.graph.copy()
         t = g.tasks[task]
-        g.tasks[task] = dataclasses.replace(t, unit=unit)
+        g.replace_task(dataclasses.replace(t, unit=unit))
         return WhatIfResult(self.baseline(), self._makespan(g))
 
     def sweep_unit(self, task: str, units: Sequence[float],
@@ -90,5 +114,5 @@ class WhatIf:
         for name, size in changes.items():
             t = g.tasks[name]
             unit = t.unit if (t.unit is None or t.unit <= size) else size
-            g.tasks[name] = dataclasses.replace(t, size=size, unit=unit)
+            g.replace_task(dataclasses.replace(t, size=size, unit=unit))
         return WhatIfResult(self.baseline(), self._makespan(g))

@@ -1,0 +1,131 @@
+"""Golden differential tests: the incremental event-calendar core must
+reproduce the retained reference slow path (the seed simulator loop)
+exactly — per-task start/finish, not just makespan — across policies,
+coflows, pipelining, releases and fabric topologies, including every
+scale-sweep DAG the benchmarks time."""
+import pytest
+
+from repro.core import Cluster, MXDAG, Topology, compute, flow
+from repro.core import builders
+from repro.core.simulator import Simulator
+
+
+def assert_equivalent(g, cluster=None, **kw):
+    new = Simulator(g, cluster, **kw).run()
+    ref = Simulator(g, cluster, **kw)._reference_run()
+    for n in g.tasks:
+        assert new.start[n] == pytest.approx(ref.start[n], abs=1e-6), n
+        assert new.finish[n] == pytest.approx(ref.finish[n], abs=1e-6), n
+    assert new.makespan == pytest.approx(ref.makespan, abs=1e-6)
+    assert new.job_completion == pytest.approx(ref.job_completion)
+
+
+class TestPaperFigures:
+    def test_fig1_policies(self):
+        g = builders.fig1_jobs()
+        assert_equivalent(g)
+        assert_equivalent(g, policy="priority",
+                          priorities={"f1": 0, "f3": 1})
+
+    def test_fig2_coflows(self):
+        assert_equivalent(builders.fig2a(),
+                          coflows=builders.fig2a_coflows())
+        g = builders.fig2b()
+        for variant in ("b1", "b2", "b3"):
+            assert_equivalent(g, coflows=builders.fig2b_coflows(variant))
+
+    @pytest.mark.parametrize("case", [0, 1, 2, 3])
+    def test_fig3_pipelining_cases(self, case):
+        g = builders.fig3_case(case)
+        assert_equivalent(g)
+        assert_equivalent(g, policy="priority", priorities={})
+
+    def test_releases_and_zero_size(self):
+        g = MXDAG()
+        g.add(compute("a", 1.0, "A"))
+        g.add(compute("z", 0.0, "A"))
+        g.add(compute("b", 1.0, "A"))
+        g.add_edge("z", "b")
+        assert_equivalent(g, releases={"a": 3.0, "b": 0.5})
+
+    def test_slot_contention_with_priorities(self):
+        g = MXDAG()
+        for i in range(5):
+            g.add(compute(f"c{i}", 1.0 + 0.25 * i, "H"))
+        assert_equivalent(g, policy="priority",
+                          priorities={f"c{i}": (i * 7) % 3
+                                      for i in range(5)})
+
+
+class TestScaleSweepDAGs:
+    """Every DAG the scale benchmark times (identical-makespan contract)."""
+
+    @pytest.mark.parametrize("n", [8, 16, 32])
+    def test_mapreduce(self, n):
+        assert_equivalent(builders.mapreduce("mr", n, n))
+
+    @pytest.mark.parametrize("layers", [32, 128])
+    def test_ddl(self, layers):
+        assert_equivalent(builders.ddl(layers, push=2.0, pull=2.0))
+
+    def test_mapreduce_pipelined_units(self):
+        g = builders.mapreduce("mr", 8, 8, unit_frac=0.125)
+        for (s, d) in list(g.edges):
+            g.set_pipelined(s, d, True)
+        assert_equivalent(g)
+        assert_equivalent(g, policy="priority",
+                          priorities={n: i % 4
+                                      for i, n in enumerate(g.tasks)})
+
+    def test_ddl_pipelined(self):
+        assert_equivalent(
+            builders.ddl(16, push=2.0, pull=2.0, unit_frac=0.25))
+
+    def test_fat_tree_shuffle(self):
+        topo = Topology.fat_tree(4)
+        hosts = topo.hosts()
+        g = MXDAG("ft_shuffle")
+        for i, s in enumerate(hosts[:8]):
+            m = g.add(compute(f"m{i}", 1.0, s))
+            for j, d in enumerate(hosts[8:]):
+                f = g.add(flow(f"s{i}_{j}", 0.125, s, d))
+                g.add_edge(m, f)
+        assert_equivalent(g, Cluster.from_topology(topo))
+
+    def test_oversubscribed_fanin(self):
+        g, cl = builders.oversubscribed_fanin(4, oversubscription=4.0)
+        assert_equivalent(g, cl)
+        assert_equivalent(g, cl, policy="priority",
+                          priorities={"f0": 0.0, "c0": 0.0})
+
+
+class TestLivelockGuard:
+    def test_event_count_guard_trips_on_horizon_livelock(self):
+        """A horizon the work cannot fit inside pins `now` at the horizon
+        forever; the event-count guard must abort instead of spinning."""
+        g = MXDAG()
+        g.chain(compute("a", 1.0, "A", unit=0.25),
+                flow("f", 1.0, "A", "B", unit=0.25), pipelined=True)
+        with pytest.raises(RuntimeError, match="did not converge"):
+            Simulator(g).run(horizon=0.5)
+        with pytest.raises(RuntimeError, match="did not converge"):
+            Simulator(g)._reference_run(horizon=0.5)
+
+    def test_release_jump_matches_reference(self):
+        g = MXDAG()
+        g.add(compute("a", 1.0, "A"))
+        g.add(compute("b", 1.0, "A"))
+        g.add_edge("a", "b")
+        assert_equivalent(g, releases={"a": 2.0})
+
+    def test_deadlock_detected(self):
+        """A task whose processor pool has no slots can never start; both
+        engines must raise the deadlock error instead of hanging."""
+        from repro.core import Host
+        cl = Cluster([Host("A", procs={"cpu": 1})])
+        g = MXDAG()
+        g.add(compute("a", 1.0, "A", proc="gpu"))
+        with pytest.raises(RuntimeError, match="deadlock"):
+            Simulator(g, cl).run()
+        with pytest.raises(RuntimeError, match="deadlock"):
+            Simulator(g, cl)._reference_run()

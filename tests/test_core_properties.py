@@ -134,6 +134,85 @@ class TestSchedulerProperties:
         assert r.makespan <= total + 1e-6
 
 
+@st.composite
+def equivalence_case(draw):
+    """Random DAG + topology + policy for the event-calendar oracle."""
+    from repro.core import Cluster, Topology
+
+    n_hosts = draw(st.integers(min_value=2, max_value=5))
+    hosts = [f"h{i}" for i in range(n_hosts)]
+    topo_kind = draw(st.sampled_from(["none", "two_tier", "leaf_spine"]))
+    if topo_kind == "none":
+        cluster = None
+    else:
+        half = max(1, n_hosts // 2)
+        racks = [hosts[:half], hosts[half:]]
+        if topo_kind == "two_tier":
+            topo = Topology.two_tier(
+                racks,
+                oversubscription=draw(st.sampled_from([1.0, 2.0, 4.0])))
+        else:
+            topo = Topology.leaf_spine(racks, n_spines=2)
+        cluster = Cluster.from_topology(topo)
+
+    size_st = st.sampled_from([0.0, 0.25, 0.5, 1.0, 1.75, 3.0])
+    n_tasks = draw(st.integers(min_value=2, max_value=10))
+    g = MXDAG("rand")
+    names = []
+    for i in range(n_tasks):
+        size = draw(size_st)
+        unit = None
+        if size > 0 and draw(st.booleans()):
+            unit = size * draw(st.sampled_from([0.25, 0.5, 1.0]))
+        if draw(st.booleans()):
+            t = compute(f"t{i}", size, draw(st.sampled_from(hosts)),
+                        unit=unit)
+        else:
+            src = draw(st.sampled_from(hosts))
+            dst = draw(st.sampled_from([h for h in hosts if h != src]))
+            t = flow(f"t{i}", size, src, dst, unit=unit)
+        g.add(t)
+        names.append(t.name)
+    for i in range(1, n_tasks):
+        for j in draw(st.lists(st.integers(0, i - 1), max_size=2,
+                               unique=True)):
+            if (names[j], names[i]) not in g.edges:
+                g.add_edge(names[j], names[i],
+                           pipelined=draw(st.booleans()))
+    policy = draw(st.sampled_from(["fair", "priority"]))
+    prio = {n: draw(st.integers(0, 2)) for n in names
+            if draw(st.booleans())}
+    rel = {n: draw(st.sampled_from([0.5, 1.0, 2.0])) for n in names
+           if not g.preds(n) and draw(st.booleans())}
+    flows = [t.name for t in g.network_tasks() if t.size > 0]
+    coflows = None
+    if len(flows) >= 2 and draw(st.booleans()):
+        coflows = [set(flows[:2])]
+    return g, cluster, policy, prio, rel, coflows
+
+
+class TestEventCalendarEquivalence:
+    """The incremental event-calendar core is a pure optimisation: on any
+    random DAG, topology and policy it must reproduce the retained
+    reference slow path's per-task trajectory."""
+
+    @given(case=equivalence_case())
+    @settings(max_examples=120, deadline=None)
+    def test_matches_reference_on_random_dags(self, case):
+        from repro.core.simulator import Simulator
+
+        g, cluster, policy, prio, rel, coflows = case
+        kw = dict(policy=policy, priorities=prio, releases=rel,
+                  coflows=coflows)
+        new = Simulator(g, cluster, **kw).run()
+        ref = Simulator(g, cluster, **kw)._reference_run()
+        for n in g.tasks:
+            assert new.start[n] == pytest.approx(ref.start[n],
+                                                 abs=1e-6), n
+            assert new.finish[n] == pytest.approx(ref.finish[n],
+                                                  abs=1e-6), n
+
+
 class TestCalculusProperties:
     @given(us=st.lists(sizes, min_size=1, max_size=6))
     @settings(max_examples=40, deadline=None)
