@@ -10,7 +10,9 @@ by more than ``--threshold`` (default 2x).  Rows under ``--floor-us``
 (default 50µs) are ignored — at that scale the timer and allocator noise
 on shared CI runners dwarfs any real regression.  Rows named
 ``*.ref_match`` must equal 1.0 (the event-calendar core diverged from the
-reference slow path — a correctness failure, not a perf one).
+reference slow path — a correctness failure, not a perf one), as must rows
+named ``*.improves`` (a scheduling decision — e.g. placement on the
+fat-tree shuffle — stopped beating its fixed baseline).
 
 Speed-ups are reported but never fail the gate; refresh the baseline by
 committing the new bench JSON when an intentional optimisation lands.
@@ -60,6 +62,14 @@ def main(argv=None) -> int:
             elif bench[name] != 1.0:
                 failures.append(f"{name}: event-calendar core diverged "
                                 f"from the reference slow path")
+            continue
+        if name.endswith(".improves"):
+            if name not in bench:
+                failures.append(f"{name}: claim row missing from bench "
+                                f"output (check never ran)")
+            elif bench[name] != 1.0:
+                failures.append(f"{name}: decision no longer beats its "
+                                f"fixed baseline")
             continue
         if not gated(name) or name not in bench:
             continue

@@ -6,6 +6,13 @@ L ∈ {32, 128}, and a ``fat_tree(8)`` cross-pod shuffle, timing both
 pipelining).  Graphs are built outside the timed region — construction
 and simulation are separate costs (and were separate bottlenecks).
 
+The placement rows time the placement-enabled scheduler on the sparse
+``fat_tree(8)`` shuffle with *logical* reducers (128 candidate hosts,
+16 co-location classes); ``scale.placement_ft8_shuffle.improves`` is the
+acceptance claim — placement-enabled scheduling strictly beats the fixed
+layout, whose static ECMP picks collide on core links — and is enforced
+(must equal 1.0) by check_perf.py.
+
 Two kinds of extra rows:
 
 - ``*_seed_us`` — the same workload on the *seed implementation*: the
@@ -148,6 +155,31 @@ def bench_rows(seed_rows: bool = True):
         new_us[f"schedule_{name}"] = us
         rows.append((f"scale.schedule_{name}_us", us,
                      "Principle-1 scheduling (memoized _best)"))
+
+    # -- placement-enabled scheduling (fat_tree(8) sparse shuffle) -----
+    from repro.core import PlacementScheduler, builders
+    fixed_g, fixed_cl = builders.fat_tree_shuffle(8, stride=2)
+    fixed_ms = MXDAGScheduler(try_pipelining=False) \
+        .schedule(fixed_g, fixed_cl).simulate(fixed_cl).makespan
+    logical_g, logical_cl = builders.fat_tree_shuffle(8, stride=2,
+                                                      placed=False)
+
+    def _place():
+        sched = MXDAGScheduler(
+            try_pipelining=False,
+            placement=PlacementScheduler(des_refine=False),
+        ).schedule(logical_g, logical_cl)
+        return sched.simulate(logical_cl).makespan
+
+    us = timeit_us(_place, repeat=3)
+    placed_ms = _place()
+    rows.append(("scale.schedule_ft8_shuffle_placed_us", us,
+                 f"placement-enabled scheduling, "
+                 f"{len(logical_g.tasks)} tasks / 128 hosts"))
+    rows.append(("scale.placement_ft8_shuffle.improves",
+                 1.0 if placed_ms < fixed_ms - 1e-9 else 0.0,
+                 f"placed makespan {placed_ms:g} < fixed {fixed_ms:g} "
+                 f"(1.0 = validated)"))
 
     # -- schedule (greedy pipelining on) -------------------------------
     for name, g in piped.items():

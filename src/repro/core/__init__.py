@@ -9,6 +9,7 @@ from repro.core.schedule import (
     CoflowConfig,
     FairShareScheduler,
     MXDAGScheduler,
+    PlacementScheduler,
     Schedule,
     auto_coflows,
 )
@@ -22,6 +23,7 @@ __all__ = [
     "Cluster", "Host",
     "SimResult", "Simulator", "max_min_rates", "simulate",
     "FairShareScheduler", "CoflowConfig", "MXDAGScheduler",
-    "AltruisticMultiScheduler", "Schedule", "auto_coflows",
+    "PlacementScheduler", "AltruisticMultiScheduler", "Schedule",
+    "auto_coflows",
     "WhatIf", "WhatIfResult", "Monitor", "Straggler",
 ]

@@ -177,7 +177,8 @@ def ddl(n_layers: int = 4, *,
         push: Sequence[float] | float = 1.0,
         pull: Sequence[float] | float = 1.0,
         unit_frac: Optional[float] = None,
-        worker: str = "W", ps: str = "PS", job: str = "job0") -> MXDAG:
+        worker: str = "W", ps: str = "PS", job: str = "job0",
+        placed: bool = True) -> MXDAG:
     """One boundary iteration of layer-wise data-parallel training.
 
     BP runs top layer → layer 0 on the worker GPU; each BP_i releases
@@ -185,6 +186,12 @@ def ddl(n_layers: int = 4, *,
     runs layer 0 → top and FP_i requires pull_i and FP_{i-1}.  This is the
     MXDAG of Fig. 6; MXDAG scheduling recovers ByteScheduler's
     lower-layer-first flow priority (§4.1.1).
+
+    ``placed=False`` makes the parameter-server side a scheduling
+    decision: push destinations / pull sources are left unbound (each
+    layer's push→pull edge keeps its handoff on one host, so the
+    scheduler may keep one PS or shard it per layer); the worker stays
+    bound — it is where the GPU is.
     """
     def seq(x, default):
         if isinstance(x, (int, float)):
@@ -200,10 +207,11 @@ def ddl(n_layers: int = 4, *,
            for i in range(n_layers)]
     fps = [g.add(compute(f"FP{i}", fp[i], worker, proc="gpu", job=job))
            for i in range(n_layers)]
-    pushes = [g.add(flow(f"push{i}", push[i], worker, ps, job=job,
+    ps_host = ps if placed else None
+    pushes = [g.add(flow(f"push{i}", push[i], worker, ps_host, job=job,
                          unit=None if uf is None else uf * push[i]))
               for i in range(n_layers)]
-    pulls = [g.add(flow(f"pull{i}", pull[i], ps, worker, job=job,
+    pulls = [g.add(flow(f"pull{i}", pull[i], ps_host, worker, job=job,
                         unit=None if uf is None else uf * pull[i]))
              for i in range(n_layers)]
     # BP chain: top layer first
@@ -255,7 +263,8 @@ def oversubscribed_fanin(n_senders: int = 4, *,
                          flow_size: float = 1.0,
                          critical_compute: float = 8.0,
                          other_compute: float = 1.0,
-                         job: str = "job0") -> tuple[MXDAG, Cluster]:
+                         job: str = "job0",
+                         placed: bool = True) -> tuple[MXDAG, Cluster]:
     """Cross-rack fan-in on an oversubscribed two-tier core.
 
     ``n_senders`` hosts in rack 0 each send one flow to a distinct host in
@@ -265,6 +274,12 @@ def oversubscribed_fanin(n_senders: int = 4, *,
     splits the uplink evenly and delays the critical flow by a factor of
     ``n_senders``; MXDAG priority co-scheduling gives it the whole uplink
     first.  Returns ``(graph, cluster)``.
+
+    ``placed=False`` keeps the data where it lives (flow sources stay on
+    the rack-0 senders) but leaves the consuming compute tasks — and
+    hence the flow destinations — logical: a placement-aware scheduler
+    may pull the consumers into rack 0 and never cross the oversubscribed
+    core at all.
     """
     rack0 = [f"s{i}" for i in range(n_senders)]
     rack1 = [f"d{i}" for i in range(n_senders)]
@@ -272,10 +287,54 @@ def oversubscribed_fanin(n_senders: int = 4, *,
                              oversubscription=oversubscription)
     g = MXDAG(f"fanin{n_senders}_{oversubscription:g}to1")
     for i in range(n_senders):
-        f = g.add(flow(f"f{i}", flow_size, f"s{i}", f"d{i}", job=job))
+        f = g.add(flow(f"f{i}", flow_size, f"s{i}",
+                       f"d{i}" if placed else None, job=job))
         size = critical_compute if i == 0 else other_compute
-        c = g.add(compute(f"c{i}", size, f"d{i}", job=job))
+        c = g.add(compute(f"c{i}", size,
+                          f"d{i}" if placed else None, job=job))
         g.add_edge(f, c)
+    return g, Cluster.from_topology(topo)
+
+
+# ----------------------------------------------------------------------
+# fat-tree cross-pod shuffle (placement/routing demonstration scenario)
+# ----------------------------------------------------------------------
+def fat_tree_shuffle(k: int = 8, *, stride: int = 2,
+                     map_time: float = 1.0, reduce_time: float = 1.0,
+                     shuffle_bytes: float = 1.0,
+                     placed: bool = True) -> tuple[MXDAG, Cluster]:
+    """Sparse cross-pod shuffle on a full-bisection ``fat_tree(k)``.
+
+    The first ``k³/32`` hosts (exactly pod 0 for ``k=8``: hosts 0..15)
+    run mappers; each mapper i shuffles
+    ``shuffle_bytes`` split over ``stride`` flows to reducers
+    ``i..i+stride-1`` (mod n) on the *next* ``k²/8`` hosts.  Sparse
+    shuffles make the fabric, not the NICs, the binding constraint:
+    static ECMP hashes several large flows onto the same core link
+    (deterministically — crc32), halving their rates, while every NIC
+    carries exactly ``shuffle_bytes``.  ``placed=False`` leaves the
+    reducers logical: a placement-aware scheduler pulls each reducer
+    next to its mappers and never pays the core collisions.  Returns
+    ``(graph, cluster)``.
+    """
+    if stride < 1:
+        raise ValueError("stride must be >= 1")
+    topo = Topology.fat_tree(k)
+    hosts = topo.hosts()
+    n = len(hosts) // 8
+    g = MXDAG(f"ft{k}_shuffle_s{stride}" + ("" if placed else "_logical"))
+    senders, receivers = hosts[:n], hosts[n:2 * n]
+    reduces = [g.add(compute(f"r{j}", reduce_time,
+                             receivers[j] if placed else None))
+               for j in range(n)]
+    for i, s in enumerate(senders):
+        m = g.add(compute(f"m{i}", map_time, s))
+        for jj in range(stride):
+            j = (i + jj) % n
+            f = g.add(flow(f"s{i}_{j}", shuffle_bytes / stride, s,
+                           receivers[j] if placed else None))
+            g.add_edge(m, f)
+            g.add_edge(f, reduces[j])
     return g, Cluster.from_topology(topo)
 
 
@@ -286,29 +345,37 @@ def mapreduce(name: str, n_map: int, n_reduce: int, *,
               map_time: float = 1.0, shuffle_time: float = 1.0,
               reduce_time: float = 1.0, hosts_per_side: int | None = None,
               unit_frac: Optional[float] = None, job: str | None = None,
-              host_prefix: str | None = None) -> MXDAG:
+              host_prefix: str | None = None,
+              placed: bool = True) -> MXDAG:
     """n_map mappers shuffling all-to-all into n_reduce reducers.
 
     ``host_prefix`` lets multiple jobs share the same physical hosts
-    (multi-job scheduling experiments); default: per-job private hosts."""
+    (multi-job scheduling experiments); default: per-job private hosts.
+    ``placed=False`` leaves every compute task logical and every shuffle
+    flow's endpoints unbound (they follow their mapper/reducer via
+    ``MXDAG.bind`` inference) — the scheduler chooses the hosts."""
     job = job or name
     hp = host_prefix if host_prefix is not None else name
     g = MXDAG(name)
     nm_hosts = hosts_per_side or n_map
     nr_hosts = hosts_per_side or n_reduce
-    maps = [g.add(compute(f"{name}.m{i}", map_time,
-                          f"{hp}.M{i % nm_hosts}", job=job,
+
+    def mh(i: int) -> str | None:
+        return f"{hp}.M{i % nm_hosts}" if placed else None
+
+    def rh(j: int) -> str | None:
+        return f"{hp}.R{j % nr_hosts}" if placed else None
+
+    maps = [g.add(compute(f"{name}.m{i}", map_time, mh(i), job=job,
                           unit=None if unit_frac is None
                           else unit_frac * map_time))
             for i in range(n_map)]
-    reduces = [g.add(compute(f"{name}.r{j}", reduce_time,
-                             f"{hp}.R{j % nr_hosts}", job=job))
+    reduces = [g.add(compute(f"{name}.r{j}", reduce_time, rh(j), job=job))
                for j in range(n_reduce)]
     for i, m in enumerate(maps):
         for j, r in enumerate(reduces):
             f = g.add(flow(f"{name}.s{i}_{j}", shuffle_time / n_reduce,
-                           f"{hp}.M{i % nm_hosts}",
-                           f"{hp}.R{j % nr_hosts}", job=job,
+                           mh(i), rh(j), job=job,
                            unit=None if unit_frac is None
                            else unit_frac * shuffle_time / n_reduce))
             g.add_edge(m, f)

@@ -62,6 +62,11 @@ class Cluster:
         names: set[str] = set()
         procs: dict[str, int] = {}
         for t in g:
+            if not t.bound:
+                raise ValueError(
+                    f"cannot build a cluster for {g.name}: task {t.name} "
+                    f"is unbound (apply a placement with MXDAG.bind, or "
+                    f"let MXDAGScheduler place it on an explicit cluster)")
             if t.kind is TaskKind.COMPUTE:
                 names.add(t.host)  # type: ignore[arg-type]
                 procs[t.proc] = 1
@@ -114,15 +119,36 @@ class Cluster:
         """
         return {r: self.bandwidth(r) for r in set(resources)}
 
-    def resources_for(self, task: MXTask) -> tuple[str, ...]:
+    def resources_for(self, task: MXTask,
+                      route: Optional[tuple[str, ...]] = None,
+                      ) -> tuple[str, ...]:
         """The resources ``task`` occupies on *this* cluster.
 
         Compute tasks: their processor pool.  Flows: the full link path
-        under the cluster's topology, or the two endpoint NICs without one.
+        under the cluster's topology, or the two endpoint NICs without
+        one.  ``route`` overrides a flow's path with an explicit link
+        tuple — a per-flow routing decision (normally one member of
+        :meth:`candidate_routes`) that wins over the topology's static
+        ECMP pick.
         """
+        if route is not None:
+            if task.kind is not TaskKind.NETWORK:
+                raise ValueError(f"{task.name}: only network tasks "
+                                 f"take a route override")
+            return tuple(route)
         if task.kind is TaskKind.COMPUTE or self.topology is None:
             return task.resources()
         return task.resources(self.topology)
+
+    def candidate_routes(self, task: MXTask) -> tuple[tuple[str, ...], ...]:
+        """All routes a flow could take on this cluster (the ECMP group
+        under a fabric topology; just the endpoint-NIC path without one).
+        ``resources_for(task)`` is always a member."""
+        if task.kind is not TaskKind.NETWORK:
+            raise ValueError(f"{task.name}: compute tasks are not routed")
+        if self.topology is None:
+            return (task.resources(),)
+        return self.topology.paths(task.src, task.dst)
 
     def with_topology(self, topology: Optional[Topology]) -> "Cluster":
         """Same hosts, different fabric (used by what-if queries)."""

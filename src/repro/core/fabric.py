@@ -27,9 +27,15 @@ Builders:
 - :meth:`Topology.fat_tree`  — the k-ary Clos of Al-Fares et al.; ECMP
   hashing selects the aggregation and core switch per host pair.
 
-Routing is *static* (hash-based ECMP, as in flow-level fabric simulators):
-the path of a flow is a pure function of its endpoints, so the simulator's
-piecewise-constant-rate integration stays exact.
+Routing *defaults* to static hash-based ECMP (as in flow-level fabric
+simulators): the default path of a flow is a pure function of its
+endpoints, so the simulator's piecewise-constant-rate integration stays
+exact.  But the hash pick is just one member of the candidate set the
+fabric actually offers — :meth:`Topology.paths` exposes the full ECMP
+group (every spine, every (agg, core) pair) per host pair, and the
+scheduler may override a flow's route with any candidate (threaded through
+``Cluster.resources_for(task, route=...)`` and ``Simulator(routes=...)``),
+making routing a per-flow scheduling decision instead of a frozen input.
 """
 from __future__ import annotations
 
@@ -98,11 +104,22 @@ class Topology:
         self._hosts: dict[str, None] = {}          # ordered set
         # explicit routes (add_route) double as the memo cache for _router
         self._routes: dict[tuple[str, str], tuple[str, ...]] = {}
+        # host pairs routed explicitly via add_route (a single-member
+        # candidate set), as opposed to memoized ECMP picks in _routes
+        self._explicit: set[tuple[str, str]] = set()
         # routing function (src, dst) -> fabric via-links, or None for the
         # direct NIC-only path; builders install one so construction stays
         # O(hosts + links) instead of materializing O(hosts^2) routes
         self._router: Optional[
             Callable[[str, str], Optional[Sequence[str]]]] = None
+        # multipath router (src, dst) -> the *candidate* via-link tuples
+        # (the full ECMP group), or None when only the direct NIC path
+        # exists; path() picks member ecmp_choice(src, dst, len) of it, so
+        # installing a multipath router reproduces the single-path hash
+        # pick exactly while exposing every alternative to the scheduler
+        self._multi: Optional[
+            Callable[[str, str],
+                     Optional[Sequence[tuple[str, ...]]]]] = None
 
     # -- construction --------------------------------------------------
     def add_host(self, host: str, *, nic_in_cap: float = 1.0,
@@ -128,6 +145,7 @@ class Topology:
             if l not in self.links:
                 raise KeyError(f"unknown link {l}")
         self._routes[(src, dst)] = (nic_out(src), *via, nic_in(dst))
+        self._explicit.add((src, dst))
 
     # -- queries -------------------------------------------------------
     def hosts(self) -> list[str]:
@@ -136,9 +154,22 @@ class Topology:
     def capacity(self, link: str) -> float:
         return self.links[link]
 
+    def _via_candidates(self, src: str,
+                        dst: str) -> Optional[list[tuple[str, ...]]]:
+        """Candidate via-link tuples for a host pair, or None for direct."""
+        if self._multi is not None:
+            vias = self._multi(src, dst)
+            return None if vias is None else [tuple(v) for v in vias]
+        if self._router is not None:
+            via = self._router(src, dst)
+            return None if via is None else [tuple(via)]
+        return None
+
     def path(self, src: str, dst: str) -> tuple[str, ...]:
-        """Links a src→dst flow occupies (first = egress NIC, last =
-        ingress NIC).  Unrouted pairs use the direct NIC-only path."""
+        """The *default* links a src→dst flow occupies (first = egress
+        NIC, last = ingress NIC): the explicit route if one was added,
+        else the ECMP-hash member of the candidate set.  Unrouted pairs
+        use the direct NIC-only path."""
         route = self._routes.get((src, dst))
         if route is not None:
             return route
@@ -146,10 +177,33 @@ class Topology:
             if h not in self._hosts:
                 raise KeyError(
                     f"unknown host {h!r} in topology {self.name!r}")
-        via = self._router(src, dst) if self._router is not None else None
+        vias = self._via_candidates(src, dst)
+        via = None if vias is None \
+            else vias[ecmp_choice(src, dst, len(vias))]
         route = (nic_out(src), *(via or ()), nic_in(dst))
         self._routes[(src, dst)] = route
         return route
+
+    def paths(self, src: str, dst: str) -> tuple[tuple[str, ...], ...]:
+        """All candidate routes for a host pair (the ECMP group).
+
+        :meth:`path` returns exactly one member of this set (the static
+        hash pick), so ``path(s, d) in paths(s, d)`` always holds.  Pairs
+        routed explicitly via :meth:`add_route` have a single candidate;
+        pairs with no fabric route offer only the direct NIC path.  A
+        scheduler treats this set as the decision space for per-flow route
+        overrides.
+        """
+        if (src, dst) in self._explicit:
+            return (self._routes[(src, dst)],)
+        for h in (src, dst):
+            if h not in self._hosts:
+                raise KeyError(
+                    f"unknown host {h!r} in topology {self.name!r}")
+        vias = self._via_candidates(src, dst)
+        if vias is None:
+            return ((nic_out(src), nic_in(dst)),)
+        return tuple((nic_out(src), *v, nic_in(dst)) for v in vias)
 
     def fabric_links(self) -> list[str]:
         return [l for l in self.links if not is_nic_link(l)]
@@ -167,7 +221,9 @@ class Topology:
         t = Topology(self.name)
         t._hosts = dict(self._hosts)
         t._routes = dict(self._routes)
+        t._explicit = set(self._explicit)
         t._router = self._router
+        t._multi = self._multi
         for l, cap in self.links.items():
             if links is not None and l in links:
                 cap = links[l]
@@ -226,13 +282,13 @@ class Topology:
             for h in hosts:
                 t.add_host(h, nic_in_cap=nic, nic_out_cap=nic)
                 rack_of[h] = r
-        def route(s: str, d: str) -> Optional[tuple[str, ...]]:
+        def routes(s: str, d: str) -> Optional[list[tuple[str, ...]]]:
             rs, rd = rack_of[s], rack_of[d]
             if rs == rd:            # intra-rack: direct NIC-only path
                 return None
-            return (f"rack{rs}.up", f"rack{rd}.down")
+            return [(f"rack{rs}.up", f"rack{rd}.down")]
 
-        t._router = route
+        t._multi = routes
         return t
 
     @classmethod
@@ -261,14 +317,16 @@ class Topology:
             for h in hosts:
                 t.add_host(h, nic_in_cap=nic, nic_out_cap=nic)
                 leaf_of[h] = l
-        def route(s: str, d: str) -> Optional[tuple[str, ...]]:
-            if leaf_of[s] == leaf_of[d]:
+        def routes(s: str, d: str) -> Optional[list[tuple[str, ...]]]:
+            ls, ld = leaf_of[s], leaf_of[d]
+            if ls == ld:
                 return None
-            sp = ecmp_choice(s, d, n_spines)
-            return (f"leaf{leaf_of[s]}.up{sp}",
-                    f"leaf{leaf_of[d]}.down{sp}")
+            # one candidate per spine; path() hash-picks index
+            # ecmp_choice(s, d, n_spines), exactly the old static route
+            return [(f"leaf{ls}.up{sp}", f"leaf{ld}.down{sp}")
+                    for sp in range(n_spines)]
 
-        t._router = route
+        t._multi = routes
         return t
 
     @classmethod
@@ -298,17 +356,20 @@ class Topology:
                 for c in range(a * half, (a + 1) * half):
                     t.add_link(f"p{p}.a{a}c{c}.up", nic)
                     t.add_link(f"p{p}.a{a}c{c}.down", nic)
-        def route(s: str, d: str) -> Optional[tuple[str, ...]]:
+        def routes(s: str, d: str) -> Optional[list[tuple[str, ...]]]:
             (ps, es), (pd, ed) = where[s], where[d]
             if (ps, es) == (pd, ed):                # same edge switch
                 return None
-            if ps == pd:                            # intra-pod via one agg
-                a = ecmp_choice(s, d, half)
-                return (f"p{ps}.e{es}a{a}.up", f"p{ps}.e{ed}a{a}.down")
-            c = ecmp_choice(s, d, half * half)      # inter-pod via one core
-            a = c // half
-            return (f"p{ps}.e{es}a{a}.up", f"p{ps}.a{a}c{c}.up",
-                    f"p{pd}.a{a}c{c}.down", f"p{pd}.e{ed}a{a}.down")
+            if ps == pd:                            # intra-pod: one per agg
+                return [(f"p{ps}.e{es}a{a}.up", f"p{ps}.e{ed}a{a}.down")
+                        for a in range(half)]
+            # inter-pod: one candidate per core c (agg = c // half);
+            # path() hash-picks index ecmp_choice(s, d, half*half)
+            return [(f"p{ps}.e{es}a{c // half}.up",
+                     f"p{ps}.a{c // half}c{c}.up",
+                     f"p{pd}.a{c // half}c{c}.down",
+                     f"p{pd}.e{ed}a{c // half}.down")
+                    for c in range(half * half)]
 
-        t._router = route
+        t._multi = routes
         return t

@@ -122,6 +122,160 @@ class MXDAG:
         return g
 
     # ------------------------------------------------------------------
+    # logical placement (late binding of hosts / flow endpoints)
+    # ------------------------------------------------------------------
+    def unbound(self) -> list[str]:
+        """Names of tasks whose placement is still undecided."""
+        return [n for n, t in self.tasks.items() if not t.bound]
+
+    def _location_vars(self):
+        """Union-find over placement variables, with dataflow constraints.
+
+        Variables: ``("c", task)`` for a compute task's host, ``("s", f)``
+        / ``("d", f)`` for a flow's endpoints.  Edges impose co-location:
+        a compute→flow edge pins the flow's source to the producer's host,
+        flow→compute pins the destination to the consumer's host, and
+        flow→flow means the data lands where the next hop departs from.
+        Returns ``(find, vars)`` where ``find`` maps a variable to its
+        class representative.
+        """
+        parent: dict[tuple, tuple] = {}
+
+        def find(v: tuple) -> tuple:
+            root = v
+            while parent.setdefault(root, root) != root:
+                root = parent[root]
+            while parent[v] != root:            # path compression
+                parent[v], v = root, parent[v]
+            return root
+
+        def union(a: tuple, b: tuple) -> None:
+            ra, rb = find(a), find(b)
+            if ra != rb:
+                parent[max(ra, rb)] = min(ra, rb)
+
+        variables: list[tuple] = []
+        for n, t in self.tasks.items():
+            if t.kind is TaskKind.COMPUTE:
+                variables.append(("c", n))
+            else:
+                variables.append(("s", n))
+                variables.append(("d", n))
+        for (p, n) in self.edges:
+            tp, tn = self.tasks[p], self.tasks[n]
+            if tp.kind is TaskKind.COMPUTE and tn.kind is TaskKind.NETWORK:
+                union(("c", p), ("s", n))
+            elif tp.kind is TaskKind.NETWORK \
+                    and tn.kind is TaskKind.COMPUTE:
+                union(("d", p), ("c", n))
+            elif tp.kind is TaskKind.NETWORK \
+                    and tn.kind is TaskKind.NETWORK:
+                union(("d", p), ("s", n))
+        return find, variables
+
+    def bind(self, assignment: "dict[str, object]") -> "MXDAG":
+        """A copy with the placement ``assignment`` applied.
+
+        ``assignment`` maps task names to placements: a host string for a
+        compute task, or an ``(src, dst)`` pair for a flow (either element
+        may be ``None`` to leave it to inference).  Unassigned endpoints
+        are inferred by co-location: a flow departs from its producing
+        compute task's host, arrives at its consuming compute task's host,
+        and a flow feeding another flow hands its data off at a common
+        host.  Raises if an assignment targets an already-bound task (use
+        :meth:`replace_task` / what-if ``move_task`` for re-placement), if
+        inference meets two conflicting anchors, or if any placement is
+        still undecided after inference.
+        """
+        find, variables = self._location_vars()
+        value: dict[tuple, str] = {}       # class representative -> host
+
+        # classes holding at least one undecided variable; only those are
+        # anchored and consistency-checked, so a fully-bound graph — even
+        # one whose bound endpoints disagree with the co-location rules —
+        # binds to itself untouched
+        open_classes: set[tuple] = set()
+        for n, t in self.tasks.items():
+            if t.kind is TaskKind.COMPUTE:
+                if t.host is None:
+                    open_classes.add(find(("c", n)))
+            else:
+                if t.src is None:
+                    open_classes.add(find(("s", n)))
+                if t.dst is None:
+                    open_classes.add(find(("d", n)))
+
+        def anchor(var: tuple, host: str, why: str) -> None:
+            root = find(var)
+            if root not in open_classes:
+                return
+            old = value.get(root)
+            if old is not None and old != host:
+                raise ValueError(
+                    f"conflicting placement for {why}: {old!r} vs {host!r}")
+            value[root] = host
+
+        for n, t in self.tasks.items():
+            if t.kind is TaskKind.COMPUTE:
+                if t.host is not None:
+                    anchor(("c", n), t.host, f"compute {n}")
+            else:
+                if t.src is not None:
+                    anchor(("s", n), t.src, f"flow {n} src")
+                if t.dst is not None:
+                    anchor(("d", n), t.dst, f"flow {n} dst")
+
+        for name, placement in assignment.items():
+            t = self.tasks.get(name)
+            if t is None:
+                raise KeyError(f"unknown task {name}")
+            if t.bound:
+                raise ValueError(
+                    f"{name} is already bound; bind() only places logical "
+                    f"tasks (use replace_task to re-place)")
+            if t.kind is TaskKind.COMPUTE:
+                if not isinstance(placement, str):
+                    raise ValueError(f"{name}: compute placement must be "
+                                     f"a host name")
+                anchor(("c", name), placement, f"compute {name}")
+            else:
+                src, dst = placement          # type: ignore[misc]
+                # an endpoint that is already bound on the task itself is
+                # not up for (re)assignment — its class may be closed, so
+                # anchor() would silently drop a conflicting value
+                if src is not None:
+                    if t.src is not None and t.src != src:
+                        raise ValueError(
+                            f"flow {name} src is already bound to "
+                            f"{t.src!r}; bind() cannot move it to {src!r}")
+                    anchor(("s", name), src, f"flow {name} src")
+                if dst is not None:
+                    if t.dst is not None and t.dst != dst:
+                        raise ValueError(
+                            f"flow {name} dst is already bound to "
+                            f"{t.dst!r}; bind() cannot move it to {dst!r}")
+                    anchor(("d", name), dst, f"flow {name} dst")
+
+        unresolved = [v for v in variables
+                      if find(v) in open_classes and find(v) not in value]
+        if unresolved:
+            names = sorted({v[1] for v in unresolved})
+            raise ValueError(f"placement still undecided for: {names}")
+
+        g = self.copy()
+        for n, t in self.tasks.items():
+            if t.bound:
+                continue
+            if t.kind is TaskKind.COMPUTE:
+                g.replace_task(dataclasses.replace(
+                    t, host=value[find(("c", n))]))
+            else:
+                src = t.src if t.src is not None else value[find(("s", n))]
+                dst = t.dst if t.dst is not None else value[find(("d", n))]
+                g.replace_task(dataclasses.replace(t, src=src, dst=dst))
+        return g
+
+    # ------------------------------------------------------------------
     # structure
     # ------------------------------------------------------------------
     def preds(self, name: str) -> list[str]:

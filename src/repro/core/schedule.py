@@ -10,7 +10,13 @@
 - :class:`MXDAGScheduler` — Principle 1: prioritize the critical path within
   any copath (without letting non-critical paths exceed the critical path),
   and enable pipelining on an edge only when it shrinks the makespan
-  (the Fig. 3 analysis, automated as a greedy what-if loop).
+  (the Fig. 3 analysis, automated as a greedy what-if loop).  With a
+  :class:`PlacementScheduler` stage, *where* logical tasks run and *which
+  path* each flow takes become further decisions in the same loop.
+
+- :class:`PlacementScheduler` — slack-guided greedy placement of logical
+  (unbound) tasks onto cluster hosts, avoiding oversubscribed uplinks,
+  refined by memoized what-if DES runs.
 
 - :class:`AltruisticMultiScheduler` — Principle 2: a job delays/demotes its
   non-critical tasks, bounded by their slack, to donate resources to other
@@ -22,6 +28,7 @@ import dataclasses
 from typing import Optional
 
 from repro.core.cluster import Cluster
+from repro.core.fabric import nic_in, nic_out
 from repro.core.graph import MXDAG
 from repro.core.simulator import SimResult, simulate
 from repro.core.task import TaskKind
@@ -34,18 +41,45 @@ ALTRUIST_DEMOTED = 2.0
 
 @dataclasses.dataclass
 class Schedule:
-    """Everything needed to execute a scheduling decision in the DES."""
+    """Everything needed to execute a scheduling decision in the DES.
+
+    A Schedule carries every *kind* of decision the co-scheduler can make:
+
+    - **priorities** — per-task priority classes (Principle 1: critical
+      path first; Principle 2: altruistic demotion), consumed by the
+      ``"priority"`` policy's strict-class waterfill;
+    - **pipelining** — edge streaming flags, applied on :attr:`graph`
+      (Fig. 3: enabled only where it shrinks the makespan);
+    - **coflows** — flow groupings with synchronized start, MADD-coupled
+      rates and all-or-nothing gating (the §2.2 baseline);
+    - **releases** — per-task earliest start times (delaying a flow is
+      sometimes the optimal decision, Fig. 2);
+    - **placement** — the host assignment applied to logical tasks;
+      :attr:`graph` is the *bound* graph, and :attr:`placement` records
+      the assignment that produced it;
+    - **routes** — per-flow path overrides (members of the fabric's
+      candidate sets) replacing the static ECMP pick, threaded into the
+      DES via ``Simulator(routes=...)``.
+
+    Default-constructed fields are inert: a Schedule with no placement and
+    no routes executes exactly as one predating those decision kinds.
+    """
     graph: MXDAG                        # with pipelining flags applied
     policy: str = "fair"
     priorities: dict[str, float] = dataclasses.field(default_factory=dict)
     releases: dict[str, float] = dataclasses.field(default_factory=dict)
     coflows: Optional[list[set[str]]] = None
+    placement: dict = dataclasses.field(default_factory=dict)
+    routes: dict[str, tuple[str, ...]] = dataclasses.field(
+        default_factory=dict)
     meta: dict = dataclasses.field(default_factory=dict)
 
-    def simulate(self, cluster: Optional[Cluster] = None) -> SimResult:
+    def simulate(self, cluster: Optional[Cluster] = None,
+                 routes: Optional[dict] = None) -> SimResult:
+        merged = {**self.routes, **(routes or {})}
         return simulate(self.graph, cluster, policy=self.policy,
                         priorities=self.priorities, releases=self.releases,
-                        coflows=self.coflows)
+                        coflows=self.coflows, routes=merged or None)
 
 
 class FairShareScheduler:
@@ -82,6 +116,188 @@ def auto_coflows(graph: MXDAG) -> list[set[str]]:
     return [g for g in groups.values() if len(g) >= 2]
 
 
+class PlacementScheduler:
+    """Slack-guided greedy placement of logical tasks onto cluster hosts.
+
+    A graph's unbound placement fields form co-location classes (see
+    ``MXDAG._location_vars``): a compute task and the endpoints of the
+    flows it produces/consumes must land on one host.  Classes are placed
+    most-urgent first (ascending analytic slack — "do the hard stuff
+    first"), each onto the host minimizing a congestion estimate: for
+    every adjacent flow whose other endpoint is already known, the
+    bottleneck ratio ``(assigned load + flow size) / capacity`` along the
+    candidate route — so oversubscribed uplinks repel placements in
+    proportion to how contended they already are — plus a large penalty
+    for oversubscribing processor slots.
+
+    With ``des_refine`` (default), the greedy result is then improved by
+    what-if DES runs: each class tries its ``max_candidates`` best
+    alternative hosts through the scheduler's memoized ``_best`` cache and
+    keeps strict makespan improvements.
+    """
+
+    def __init__(self, *, max_candidates: int = 4,
+                 des_refine: bool = True):
+        if max_candidates < 1:
+            raise ValueError("max_candidates must be >= 1")
+        self.max_candidates = max_candidates
+        self.des_refine = des_refine
+
+    # -- helpers -------------------------------------------------------
+    @staticmethod
+    def _path_of(cluster: Cluster, src: str, dst: str) -> tuple[str, ...]:
+        if cluster.topology is not None:
+            return cluster.topology.path(src, dst)
+        return (nic_out(src), nic_in(dst))
+
+    def place(self, graph: MXDAG, cluster: Cluster, *,
+              scheduler: "Optional[MXDAGScheduler]" = None,
+              cache: Optional[dict] = None) -> dict:
+        """Choose hosts for every undecided co-location class of
+        ``graph``; returns an assignment for :meth:`MXDAG.bind`."""
+        find, variables = graph._location_vars()
+        classes: dict[tuple, list[tuple]] = {}
+        for v in variables:
+            classes.setdefault(find(v), []).append(v)
+
+        tasks = graph.tasks
+
+        def var_value(v: tuple) -> Optional[str]:
+            t = tasks[v[1]]
+            if v[0] == "c":
+                return t.host
+            return t.src if v[0] == "s" else t.dst
+
+        # decisions = classes where *no* member is anchored by a bound
+        # field (anchored classes are forced; bind() infers them — their
+        # value still counts toward the congestion estimate)
+        free: list[tuple] = []
+        anchored: dict[tuple, str] = {}
+        for root, vs in classes.items():
+            vals = {var_value(v) for v in vs} - {None}
+            if vals:
+                anchored[root] = min(vals)
+            else:
+                free.append(root)
+        if not free:
+            return {}
+
+        # urgency: tightest analytic slack of any task in the class
+        timing = graph.with_slack()
+        slack_of = {root: min(timing[v[1]].slack for v in classes[root])
+                    for root in free}
+        order = sorted(free, key=lambda r: (slack_of[r], r))
+
+        # congestion state from everything already decided
+        load: dict[str, float] = {}
+        slot_load: dict[tuple[str, str], int] = {}
+        placed: dict[tuple, str] = {}
+
+        def loc(v: tuple) -> Optional[str]:
+            val = var_value(v)
+            if val is not None:
+                return val
+            root = find(v)
+            host = placed.get(root)
+            return host if host is not None else anchored.get(root)
+
+        charged: set[str] = set()
+
+        def charge_ready_flows(names) -> None:
+            for n in names:
+                if n in charged or tasks[n].kind is not TaskKind.NETWORK:
+                    continue
+                s, d = loc(("s", n)), loc(("d", n))
+                if s is None or d is None:
+                    continue
+                charged.add(n)
+                for l in self._path_of(cluster, s, d):
+                    load[l] = load.get(l, 0.0) + tasks[n].size
+
+        for n, t in tasks.items():
+            if t.kind is TaskKind.COMPUTE and t.host is not None:
+                slot_load[(t.host, t.proc)] = \
+                    slot_load.get((t.host, t.proc), 0) + 1
+        charge_ready_flows(tasks)
+
+        hosts = list(cluster.hosts)
+        ranked: dict[tuple, list[str]] = {}
+        for root in order:
+            vs = classes[root]
+            computes = [n for (k, n) in vs if k == "c"]
+            flows = [(n, k) for (k, n) in vs if k != "c"]
+            cands = [h for h in hosts
+                     if all(cluster.hosts[h].procs.get(tasks[n].proc, 0)
+                            >= 1 for n in computes)]
+            if not cands:
+                raise ValueError(
+                    f"no host offers the processor pools needed by "
+                    f"{sorted(computes)}")
+            scored: list[tuple[float, str]] = []
+            for h in cands:
+                cost = 0.0
+                for n, k in flows:
+                    other = loc(("d", n)) if k == "s" else loc(("s", n))
+                    if other is None:
+                        continue     # charged when the other class lands
+                    p = self._path_of(cluster, h, other) if k == "s" \
+                        else self._path_of(cluster, other, h)
+                    cost += max((load.get(l, 0.0) + tasks[n].size)
+                                / cluster.bandwidth(l) for l in p)
+                for n in computes:
+                    t = tasks[n]
+                    spare = cluster.hosts[h].procs.get(t.proc, 0) \
+                        - slot_load.get((h, t.proc), 0)
+                    if spare < 1:
+                        cost += 1e6      # queuing on a busy pool
+                scored.append((cost, h))
+            scored.sort()
+            ranked[root] = [h for _, h in scored]
+            placed[root] = ranked[root][0]
+            for n in computes:
+                t = tasks[n]
+                slot_load[(placed[root], t.proc)] = \
+                    slot_load.get((placed[root], t.proc), 0) + 1
+            charge_ready_flows([n for n, _ in flows])
+
+        # -- what-if DES refinement (memoized via the scheduler cache) --
+        if self.des_refine and scheduler is not None:
+            best_ms = scheduler._best(
+                graph.bind(self._assignment(classes, placed)),
+                cluster, cache)[2]
+            for root in order:
+                for h in ranked[root][:self.max_candidates]:
+                    if h == placed[root]:
+                        continue
+                    trial = dict(placed)
+                    trial[root] = h
+                    ms = scheduler._best(
+                        graph.bind(self._assignment(classes, trial)),
+                        cluster, cache)[2]
+                    if ms < best_ms - 1e-9:
+                        best_ms, placed = ms, trial
+        return self._assignment(classes, placed)
+
+    @staticmethod
+    def _assignment(classes: dict, placed: dict) -> dict:
+        """Express per-class host choices as a bind() assignment (one
+        anchor per class is enough — bind() re-derives the same classes
+        and propagates it)."""
+        out: dict = {}
+        flow_ends: dict[str, list] = {}
+        for root, host in placed.items():
+            vs = classes[root]
+            anchor = next((v for v in vs if v[0] == "c"), vs[0])
+            if anchor[0] == "c":
+                out[anchor[1]] = host
+            else:
+                ends = flow_ends.setdefault(anchor[1], [None, None])
+                ends[0 if anchor[0] == "s" else 1] = host
+        for n, (src, dst) in flow_ends.items():
+            out[n] = (src, dst)
+        return out
+
+
 class MXDAGScheduler:
     """Principle 1 (§4.1) — critical-path-first co-scheduling.
 
@@ -94,24 +310,42 @@ class MXDAGScheduler:
        have longer completion time than the critical path").
     3. Pipelining: greedily enable a pipelineable edge only if the
        simulated makespan shrinks (Fig. 3 cases 1–3 automated).
+    4. Placement: a graph with logical (unbound) tasks is first placed on
+       the cluster by the :class:`PlacementScheduler` stage — slack-guided
+       greedy host selection that avoids oversubscribed uplinks, refined
+       by memoized what-if DES runs — and the resulting assignment is
+       recorded on the Schedule.
+    5. Routing (``try_routing=True``, needs a fabric topology): each flow
+       may be moved off its static ECMP path onto any member of the
+       fabric's candidate set when the DES shows a strictly smaller
+       makespan; chosen overrides land in ``Schedule.routes``.
 
     ``memoize`` caches DES results within one :meth:`schedule` call, keyed
-    by (graph signature, policy, priorities), so identical what-if queries
-    are simulated once.  ``incremental_pipelining`` replaces the seed's
+    by (graph signature, policy, priorities, routes), so identical what-if
+    queries are simulated once — the placement and routing stages share
+    the same cache.  ``incremental_pipelining`` replaces the seed's
     fixpoint re-scan of every candidate edge after each accepted decision
     with a worklist that re-evaluates only candidates whose endpoints
     touch resources affected by that decision (a task whose simulated
     start/finish moved, or the accepted edge itself).  Both default on;
     benchmarks flip them off to measure the seed behaviour.
+
+    On a fully-bound graph with ``try_routing`` off (the defaults), the
+    decision pipeline and its outputs are bit-identical to the
+    pre-placement scheduler.
     """
 
     def __init__(self, *, try_pipelining: bool = True,
                  slack_eps: float = 1e-9, memoize: bool = True,
-                 incremental_pipelining: bool = True):
+                 incremental_pipelining: bool = True,
+                 placement: "Optional[PlacementScheduler]" = None,
+                 try_routing: bool = False):
         self.try_pipelining = try_pipelining
         self.slack_eps = slack_eps
         self.memoize = memoize
         self.incremental_pipelining = incremental_pipelining
+        self.placement = placement
+        self.try_routing = try_routing
 
     def _priorities(self, graph: MXDAG,
                     timing: Optional[dict] = None) -> dict[str, float]:
@@ -128,8 +362,29 @@ class MXDAGScheduler:
                 prio[n] = NONCRITICAL + rank[round(tm.slack, 12)] / denom
         return prio
 
+    def _sim(self, g: MXDAG, cluster: Optional[Cluster],
+             cache: Optional[dict], policy: str, prio: dict[str, float],
+             routes: Optional[dict] = None, sig=None) -> SimResult:
+        """One DES run, memoized by (graph signature, policy, priorities,
+        route overrides) when a cache is supplied."""
+        if cache is None:
+            return simulate(g, cluster, policy=policy, priorities=prio,
+                            routes=routes or None)
+        if sig is None:
+            sig_ids = cache.setdefault("sig_ids", {})
+            sig = sig_ids.setdefault(g.signature(), len(sig_ids))
+        key = (sig, policy, tuple(sorted(prio.items())),
+               tuple(sorted(routes.items())) if routes else None)
+        res = cache.get(key)
+        if res is None:
+            res = simulate(g, cluster, policy=policy, priorities=prio,
+                           routes=routes or None)
+            cache[key] = res
+        return res
+
     def _best(self, g: MXDAG, cluster: Optional[Cluster],
               cache: Optional[dict] = None,
+              routes: Optional[dict] = None,
               ) -> tuple[str, dict[str, float], float, SimResult]:
         """Principle 1 with its own caveat enforced.
 
@@ -139,7 +394,8 @@ class MXDAGScheduler:
         critical path").  So: start from strict priority, iteratively
         promote tasks that the DES shows finishing past their analytic
         latest-completion, and never return anything worse than plain fair
-        sharing.  ``cache`` memoizes DES runs across _best calls.
+        sharing.  ``cache`` memoizes DES runs across _best calls;
+        ``routes`` (per-flow path overrides) apply to every run.
         """
         if cache is not None:
             # intern the graph signature: hash the (large) task/edge tuple
@@ -150,14 +406,8 @@ class MXDAGScheduler:
             sig = None
 
         def sim(policy: str, prio: dict[str, float]) -> SimResult:
-            if cache is None:
-                return simulate(g, cluster, policy=policy, priorities=prio)
-            key = (sig, policy, tuple(sorted(prio.items())))
-            res = cache.get(key)
-            if res is None:
-                res = simulate(g, cluster, policy=policy, priorities=prio)
-                cache[key] = res
-            return res
+            return self._sim(g, cluster, cache, policy, prio,
+                             routes, sig=sig)
 
         timing = g.with_slack()
         prio = self._priorities(g, timing)
@@ -180,12 +430,24 @@ class MXDAGScheduler:
     def schedule(self, graph: MXDAG,
                  cluster: Optional[Cluster] = None) -> Schedule:
         g = graph.copy()
+        cache: Optional[dict] = {} if self.memoize else None
+
+        assignment: dict = {}
+        if graph.unbound():
+            if cluster is None:
+                raise ValueError(
+                    f"{graph.name} has logical (unbound) tasks; placing "
+                    f"them needs an explicit cluster to choose hosts from")
+            placer = self.placement or PlacementScheduler()
+            assignment = placer.place(graph, cluster,
+                                      scheduler=self, cache=cache)
+            g = g.bind(assignment)
+
         if self.try_pipelining:
             # start from no pipelining: paper applies it only when it helps
             for (s, d) in list(g.edges):
                 g.set_pipelined(s, d, False)
 
-        cache: Optional[dict] = {} if self.memoize else None
         policy, prio, best, best_res = self._best(g, cluster, cache)
         decisions: dict[tuple[str, str], bool] = {}
 
@@ -216,11 +478,57 @@ class MXDAGScheduler:
                             policy, prio = tpolicy, tprio
                             decisions[(s, d)] = True
                             improved = True
+
+        routes: dict[str, tuple[str, ...]] = {}
+        if self.try_routing and cluster is not None \
+                and cluster.topology is not None:
+            routes, policy, prio, best, best_res = self._route_select(
+                g, cluster, cache, policy, prio, best, best_res)
+
         return Schedule(graph=g, policy=policy, priorities=prio,
+                        placement=assignment, routes=routes,
                         meta={"pipelined": sorted(k for k, v in
                                                   decisions.items() if v),
                               "critical_path": g.critical_path(),
                               "predicted_makespan": best})
+
+    def _route_select(self, g: MXDAG, cluster: Cluster,
+                      cache: Optional[dict], policy: str,
+                      prio: dict[str, float], best: float,
+                      best_res: SimResult):
+        """Greedy per-flow route selection over the fabric's candidate
+        sets (most-urgent flows first).  A flow is moved off its static
+        ECMP path only when the DES shows a strictly smaller makespan
+        given all overrides accepted so far; a final :meth:`_best` pass
+        re-settles priorities under the chosen routes.
+        """
+        topo = cluster.topology
+        routes: dict[str, tuple[str, ...]] = {}
+        order = sorted((t.name for t in g.network_tasks()),
+                       key=lambda n: (prio.get(n, 0.0), n))
+        for n in order:
+            t = g.tasks[n]
+            cands = topo.paths(t.src, t.dst)
+            if len(cands) <= 1:
+                continue
+            cur = routes.get(n, topo.path(t.src, t.dst))
+            chosen = None
+            for p in cands:
+                if p == cur:
+                    continue
+                res = self._sim(g, cluster, cache, policy, prio,
+                                {**routes, n: p})
+                if res.makespan < best - 1e-9:
+                    best, chosen, chosen_res = res.makespan, p, res
+            if chosen is not None:
+                routes[n] = chosen
+                best_res = chosen_res
+        if routes:
+            rpolicy, rprio, rbest, rres = self._best(
+                g, cluster, cache, routes=routes)
+            if rbest <= best + 1e-12:
+                policy, prio, best, best_res = rpolicy, rprio, rbest, rres
+        return routes, policy, prio, best, best_res
 
     def _greedy_pipeline(self, g: MXDAG, cluster: Optional[Cluster],
                          cache: Optional[dict],
@@ -295,8 +603,18 @@ class AltruisticMultiScheduler:
     def schedule(self, graphs: list[MXDAG],
                  cluster: Optional[Cluster] = None) -> Schedule:
         merged = MXDAG("+".join(g.name for g in graphs))
+        owner: dict[str, str] = {}
         for g in graphs:
             for t in g:
+                who = f"{g.name!r} (job {t.job!r})"
+                if t.name in owner:
+                    raise ValueError(
+                        f"cross-job task name collision: {t.name!r} is "
+                        f"defined by both {owner[t.name]} and {who}; "
+                        f"task names must be unique across the jobs "
+                        f"sharing a cluster (prefix them with the job "
+                        f"name, as builders.mapreduce does)")
+                owner[t.name] = who
                 merged.add(t)
             for e in g.edges.values():
                 merged.add_edge(e.src, e.dst, pipelined=e.pipelined)

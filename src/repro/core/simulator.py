@@ -56,10 +56,10 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import math
-from typing import Optional
+from typing import Mapping, Optional, Sequence
 
 from repro.core.cluster import Cluster
-from repro.core.fabric import link_flow_index
+from repro.core.fabric import link_flow_index, nic_in, nic_out
 from repro.core.graph import MXDAG
 from repro.core.task import MXTask, TaskKind
 
@@ -182,9 +182,17 @@ class Simulator:
                  policy: str = "fair",
                  priorities: Optional[dict[str, float]] = None,
                  releases: Optional[dict[str, float]] = None,
-                 coflows: Optional[list[set[str]]] = None) -> None:
+                 coflows: Optional[list[set[str]]] = None,
+                 routes: Optional[Mapping[str, Sequence[str]]] = None,
+                 ) -> None:
         if policy not in ("fair", "priority"):
             raise ValueError(f"unknown policy {policy}")
+        unbound = graph.unbound()
+        if unbound:
+            raise ValueError(
+                f"cannot simulate {graph.name}: unbound tasks {unbound} "
+                f"(apply a placement with MXDAG.bind, or schedule with "
+                f"MXDAGScheduler on an explicit cluster)")
         self.g = graph
         if cluster is None:
             # the default cluster is a pure function of the graph; cache
@@ -205,11 +213,40 @@ class Simulator:
         cached = graph.__dict__.get("_res_cache")
         if cached is not None and cached[0] == graph._version \
                 and cached[1] is cluster:
-            self._res = cached[2]
+            base_res = cached[2]
         else:
-            self._res = {n: cluster.resources_for(t)
-                         for n, t in graph.tasks.items()}
-            graph._res_cache = (graph._version, cluster, self._res)
+            base_res = {n: cluster.resources_for(t)
+                        for n, t in graph.tasks.items()}
+            graph._res_cache = (graph._version, cluster, base_res)
+        # per-flow route overrides (routing as a scheduling decision): an
+        # overlay on a fresh dict, so the version-keyed base cache is
+        # never poisoned by one run's route choices
+        self.routes = {n: tuple(p) for n, p in (routes or {}).items()}
+        if self.routes:
+            topo = cluster.topology
+            for n, p in self.routes.items():
+                t = graph.tasks.get(n)
+                if t is None:
+                    raise KeyError(f"route override for unknown task {n}")
+                if t.kind is not TaskKind.NETWORK:
+                    raise ValueError(f"route override for {n}: only "
+                                     f"network tasks are routed")
+                # a route must connect the flow's actual endpoints — a
+                # path between other hosts would silently uncharge the
+                # real sender/receiver NICs
+                first, last = nic_out(t.src), nic_in(t.dst)
+                if len(p) < 2 or p[0] != first or p[-1] != last:
+                    raise ValueError(
+                        f"route override for {n} must start at {first} "
+                        f"and end at {last}, got {p}")
+                bad = [l for l in p[1:-1]
+                       if topo is None or l not in topo.links]
+                if bad:
+                    raise KeyError(f"route override for {n} uses "
+                                   f"unknown fabric links {bad}")
+            self._res = {**base_res, **self.routes}
+        else:
+            self._res = base_res
         self._coflow_of: dict[str, int] = {}
         for i, c in enumerate(self.coflows):
             for n in c:
@@ -993,6 +1030,8 @@ def simulate(graph: MXDAG, cluster: Optional[Cluster] = None, *,
              policy: str = "fair",
              priorities: Optional[dict[str, float]] = None,
              releases: Optional[dict[str, float]] = None,
-             coflows: Optional[list[set[str]]] = None) -> SimResult:
+             coflows: Optional[list[set[str]]] = None,
+             routes: Optional[Mapping[str, Sequence[str]]] = None,
+             ) -> SimResult:
     return Simulator(graph, cluster, policy=policy, priorities=priorities,
-                     releases=releases, coflows=coflows).run()
+                     releases=releases, coflows=coflows, routes=routes).run()

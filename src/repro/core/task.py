@@ -13,6 +13,14 @@ quantitative annotations the paper defines:
 Completion time under a partial resource assignment ``r ∈ (0, 1]`` is
 ``size / r`` (paper: "the size can be used to estimate the completion time
 when only partial resources are assigned").
+
+Placement is a *decision*, not an intrinsic property: a compute task may be
+constructed with ``host=None`` (a logical task whose executing host is
+chosen by the scheduler) and a flow with ``src``/``dst`` ``None`` (endpoints
+bound late, usually inferred from the placement of the compute tasks it
+connects — see :meth:`~repro.core.graph.MXDAG.bind`).  An unbound task has
+no resource identity yet: :meth:`MXTask.resources` raises until every
+placement field it needs is bound.
 """
 from __future__ import annotations
 
@@ -35,7 +43,7 @@ class MXTask:
     kind: TaskKind
     size: float                      # seconds at full resource
     unit: Optional[float] = None     # pipeline unit; None => not pipelineable
-    # Placement --------------------------------------------------------
+    # Placement (None = logical / unbound; see MXDAG.bind) -------------
     host: Optional[str] = None       # compute tasks: executing host
     src: Optional[str] = None        # network tasks: sender host
     dst: Optional[str] = None        # network tasks: receiver host
@@ -48,12 +56,22 @@ class MXTask:
             raise ValueError(f"{self.name}: size must be >= 0")
         if self.unit is not None and not (0 < self.unit <= self.size or self.size == 0):
             raise ValueError(f"{self.name}: unit must be in (0, size]")
-        if self.kind is TaskKind.COMPUTE and self.host is None:
-            raise ValueError(f"{self.name}: compute task needs a host")
-        if self.kind is TaskKind.NETWORK and (self.src is None or self.dst is None):
-            raise ValueError(f"{self.name}: network task needs src and dst")
+        if self.kind is TaskKind.COMPUTE and (self.src is not None
+                                              or self.dst is not None):
+            raise ValueError(f"{self.name}: compute task takes host, "
+                             f"not src/dst")
+        if self.kind is TaskKind.NETWORK and self.host is not None:
+            raise ValueError(f"{self.name}: network task takes src/dst, "
+                             f"not host")
 
     # -- derived -------------------------------------------------------
+    @property
+    def bound(self) -> bool:
+        """True iff every placement field this task needs is set."""
+        if self.kind is TaskKind.COMPUTE:
+            return self.host is not None
+        return self.src is not None and self.dst is not None
+
     @property
     def pipelineable(self) -> bool:
         return self.unit is not None and self.unit < self.size
@@ -90,6 +108,10 @@ class MXTask:
         the flow's static route (the flow's rate is capped by the tightest
         link at any instant).
         """
+        if not self.bound:
+            raise ValueError(
+                f"{self.name}: unbound task has no resources yet — apply a "
+                f"placement with MXDAG.bind() before simulating")
         if self.kind is TaskKind.COMPUTE:
             return (f"{self.host}.{self.proc}",)
         if topology is not None:
@@ -97,15 +119,19 @@ class MXTask:
         return (f"{self.src}.nic_out", f"{self.dst}.nic_in")
 
 
-def compute(name: str, size: float, host: str, *, unit: float | None = None,
-            proc: str = "cpu", job: str = "job0") -> MXTask:
-    """Convenience constructor for compute MXTasks."""
+def compute(name: str, size: float, host: Optional[str] = None, *,
+            unit: float | None = None, proc: str = "cpu",
+            job: str = "job0") -> MXTask:
+    """Convenience constructor for compute MXTasks (``host=None``: logical,
+    placed later by the scheduler via :meth:`MXDAG.bind`)."""
     return MXTask(name=name, kind=TaskKind.COMPUTE, size=size, unit=unit,
                   host=host, proc=proc, job=job)
 
 
-def flow(name: str, size: float, src: str, dst: str, *,
+def flow(name: str, size: float, src: Optional[str] = None,
+         dst: Optional[str] = None, *,
          unit: float | None = None, job: str = "job0") -> MXTask:
-    """Convenience constructor for network MXTasks."""
+    """Convenience constructor for network MXTasks (``None`` endpoints are
+    bound late, usually inferred from adjacent compute placements)."""
     return MXTask(name=name, kind=TaskKind.NETWORK, size=size, unit=unit,
                   src=src, dst=dst, job=job)

@@ -3,7 +3,11 @@
 MXDAG's explicit network tasks make questions answerable that a traditional
 DAG cannot express: *would pipelining these two tasks help?*, *what unit
 (chunk) size is best?*, *what if we re-partition work between compute and
-network?*  Each query re-evaluates the scheduled DAG in the DES.
+network?* — and, with placement and routing as first-class decisions,
+*what if this task ran on another host?* (:meth:`WhatIf.move_task`) and
+*what if this flow took another path through the fabric?*
+(:meth:`WhatIf.reroute_flow`).  Each query re-evaluates the scheduled DAG
+in the DES.
 """
 from __future__ import annotations
 
@@ -13,7 +17,7 @@ from typing import Mapping, Optional, Sequence
 from repro.core.cluster import Cluster
 from repro.core.graph import MXDAG
 from repro.core.schedule import MXDAGScheduler
-from repro.core.task import MXTask
+from repro.core.task import MXTask, TaskKind
 
 
 @dataclasses.dataclass
@@ -56,13 +60,23 @@ class WhatIf:
                              for h in cl.hosts.values())),
                 None if topo is None else tuple(sorted(topo.links.items())))
 
-    def _makespan(self, g: MXDAG,
-                  cluster: Optional[Cluster] = None) -> float:
+    def _makespan(self, g: MXDAG, cluster: Optional[Cluster] = None,
+                  routes: Optional[Mapping[str, tuple[str, ...]]] = None,
+                  ) -> float:
         cl = cluster if cluster is not None else self.cluster
-        key = (g.signature(), self._cluster_key(cl))
+        base_key = (g.signature(), self._cluster_key(cl))
+        key = (base_key,
+               tuple(sorted(routes.items())) if routes else None)
         ms = self._cache.get(key)
         if ms is None:
-            ms = self.scheduler.schedule(g, cl).simulate(cl).makespan
+            # the Schedule is independent of the routes argument: cache
+            # it on its own key so a route sweep pays one schedule() and
+            # one DES run per candidate, not one full pipeline each
+            sched = self._cache.get(("sched", base_key))
+            if sched is None:
+                sched = self.scheduler.schedule(g, cl)
+                self._cache[("sched", base_key)] = sched
+            ms = sched.simulate(cl, routes=dict(routes or {})).makespan
             self._cache[key] = ms
         return ms
 
@@ -107,6 +121,55 @@ class WhatIf:
         return WhatIfResult(self.baseline(),
                             self._makespan(self.graph,
                                            self.cluster.with_topology(topo)))
+
+    def move_task(self, task: str, host: str) -> WhatIfResult:
+        """Would running ``task`` on ``host`` change the makespan?
+
+        Placement is DAG-derived: moving a compute task moves the flows
+        it produces (their source) and the flows it consumes (their
+        destination) with it — the answerable question of a scheduler
+        where placement is a decision, not a frozen input.  A flow shared
+        with *other* compute producers/consumers keeps its endpoint (its
+        data still lands where the tasks that stay behind are).
+        """
+        g = self.graph.copy()
+        t = g.tasks[task]
+        if t.kind is not TaskKind.COMPUTE:
+            raise ValueError(f"{task}: move_task re-places compute tasks "
+                             f"(use reroute_flow for network tasks)")
+        if self.cluster is not None:
+            h = self.cluster.hosts.get(host)
+            if h is None:
+                raise KeyError(f"unknown host {host!r}")
+            if h.procs.get(t.proc, 0) < 1:
+                raise ValueError(f"host {host!r} has no {t.proc!r} pool "
+                                 f"for {task}")
+        g.replace_task(dataclasses.replace(t, host=host))
+        for s in g.succs(task):
+            ts = g.tasks[s]
+            if ts.kind is TaskKind.NETWORK and all(
+                    g.tasks[p].kind is not TaskKind.COMPUTE or p == task
+                    for p in g.preds(s)):
+                g.replace_task(dataclasses.replace(ts, src=host))
+        for p in g.preds(task):
+            tp = g.tasks[p]
+            if tp.kind is TaskKind.NETWORK and all(
+                    g.tasks[s].kind is not TaskKind.COMPUTE or s == task
+                    for s in g.succs(p)):
+                g.replace_task(dataclasses.replace(tp, dst=host))
+        return WhatIfResult(self.baseline(), self._makespan(g))
+
+    def reroute_flow(self, flow: str,
+                     route: Sequence[str]) -> WhatIfResult:
+        """Would sending ``flow`` over ``route`` (one of the fabric's
+        candidate paths — see :meth:`Cluster.candidate_routes`) change
+        the makespan?"""
+        t = self.graph.tasks[flow]
+        if t.kind is not TaskKind.NETWORK:
+            raise ValueError(f"{flow}: only network tasks are routed")
+        return WhatIfResult(
+            self.baseline(),
+            self._makespan(self.graph, routes={flow: tuple(route)}))
 
     def repartition(self, changes: dict[str, float]) -> WhatIfResult:
         """Re-size tasks (e.g. move work between compute and network)."""

@@ -1,0 +1,139 @@
+"""Unit tests: Cluster construction round-trips and resource resolution.
+
+Satellite coverage for ``Cluster.restricted`` / ``Cluster.from_topology``
+and for ``resources_for`` under every topology builder, including the
+single-switch ≡ endpoint-NIC equivalence claim in the cluster docstring.
+"""
+import pytest
+
+from repro.core import (
+    Cluster, MXDAG, MXDAGScheduler, Topology, compute, flow, simulate,
+)
+from repro.core import builders
+
+
+BUILDERS = {
+    "single_switch": lambda: Topology.single_switch(
+        [f"h{i}" for i in range(6)], nic=2.0),
+    "two_tier": lambda: Topology.two_tier((3, 2), oversubscription=4.0),
+    "leaf_spine": lambda: Topology.leaf_spine((2, 3), 2,
+                                              oversubscription=2.0),
+    "fat_tree": lambda: Topology.fat_tree(4),
+}
+
+
+@pytest.fixture(params=sorted(BUILDERS), name="topo")
+def _topo(request):
+    return BUILDERS[request.param]()
+
+
+class TestFromTopologyRoundTrip:
+    def test_hosts_and_nic_caps_round_trip(self, topo):
+        cl = Cluster.from_topology(topo, procs={"cpu": 2, "gpu": 1})
+        assert sorted(cl.hosts) == sorted(topo.hosts())
+        for h in topo.hosts():
+            assert cl.hosts[h].nic_out == topo.capacity(f"{h}.nic_out")
+            assert cl.hosts[h].nic_in == topo.capacity(f"{h}.nic_in")
+            assert cl.slots(f"{h}.cpu") == 2
+            assert cl.slots(f"{h}.gpu") == 1
+        # bandwidth() resolves NICs and fabric links through the topology
+        for l, cap in topo.links.items():
+            assert cl.bandwidth(l) == cap
+
+    def test_restricted_keeps_topology_and_links(self, topo):
+        cl = Cluster.from_topology(topo)
+        keep = set(topo.hosts()[:2])
+        sub = cl.restricted(keep)
+        assert set(sub.hosts) == keep
+        assert sub.topology is cl.topology
+        # full link set still resolvable (other hosts' flows just never
+        # appear); routed resources of kept hosts are unchanged
+        for l, cap in topo.links.items():
+            assert sub.bandwidth(l) == cap
+        h0, h1 = sorted(keep)
+        f = flow("f", 1.0, h0, h1)
+        assert sub.resources_for(f) == cl.resources_for(f)
+
+    def test_for_graph_restricts_from_topology(self, topo):
+        hs = topo.hosts()
+        g = MXDAG("pair")
+        g.add(compute("a", 1.0, hs[0]))
+        g.add(flow("f", 1.0, hs[0], hs[-1]))
+        g.add(compute("b", 1.0, hs[-1]))
+        g.add_edge("a", "f")
+        g.add_edge("f", "b")
+        cl = Cluster.for_graph(g, topology=topo)
+        assert set(cl.hosts) == {hs[0], hs[-1]}
+        assert cl.resources_for(g.tasks["f"]) == topo.path(hs[0], hs[-1])
+
+
+class TestResourcesFor:
+    def test_compute_resources_ignore_topology(self, topo):
+        h = topo.hosts()[0]
+        cl = Cluster.from_topology(topo, procs={"gpu": 1})
+        t = compute("c", 1.0, h, proc="gpu")
+        assert cl.resources_for(t) == (f"{h}.gpu",)
+
+    def test_flow_resources_follow_the_static_route(self, topo):
+        cl = Cluster.from_topology(topo)
+        hs = topo.hosts()
+        for s, d in [(hs[0], hs[1]), (hs[0], hs[-1]), (hs[-1], hs[0])]:
+            f = flow("f", 1.0, s, d)
+            res = cl.resources_for(f)
+            assert res == topo.path(s, d)
+            assert res[0] == f"{s}.nic_out" and res[-1] == f"{d}.nic_in"
+            assert res in cl.candidate_routes(f)
+
+    def test_cross_rack_crosses_fabric_links(self):
+        cl = Cluster.from_topology(Topology.two_tier((2, 2)))
+        f = flow("f", 1.0, "r0h0", "r1h1")
+        assert cl.resources_for(f) == (
+            "r0h0.nic_out", "rack0.up", "rack1.down", "r1h1.nic_in")
+
+    def test_big_switch_cluster_uses_endpoint_nics(self):
+        cl = Cluster.homogeneous(["a", "b"])
+        f = flow("f", 1.0, "a", "b")
+        assert cl.resources_for(f) == ("a.nic_out", "b.nic_in")
+        assert cl.candidate_routes(f) == (("a.nic_out", "b.nic_in"),)
+
+
+class TestSingleSwitchEquivalence:
+    """The cluster docstring's claim: a single-switch topology reproduces
+    the endpoint-NIC (big switch) results exactly — same resources, same
+    simulation, same scheduling decisions."""
+
+    def test_resources_identical(self):
+        g = builders.fig2b()
+        hosts = sorted({t.host for t in g.compute_tasks()})
+        topo = Topology.single_switch(hosts)
+        with_topo = Cluster.for_graph(g, topology=topo)
+        without = Cluster.for_graph(g)
+        for t in g:
+            assert with_topo.resources_for(t) == without.resources_for(t)
+
+    @pytest.mark.parametrize("policy", ["fair", "priority"])
+    def test_simulation_bit_exact(self, policy):
+        g = builders.fig2b()
+        hosts = sorted({t.host for t in g.compute_tasks()})
+        prio = (MXDAGScheduler(try_pipelining=False)._priorities(g)
+                if policy == "priority" else None)
+        seed = simulate(g, policy=policy, priorities=prio)
+        topo = Topology.single_switch(hosts)
+        fab = simulate(g, Cluster.for_graph(g, topology=topo),
+                       policy=policy, priorities=prio)
+        assert fab.start == seed.start
+        assert fab.finish == seed.finish
+        assert fab.makespan == seed.makespan
+
+    def test_schedule_decisions_identical(self):
+        g = builders.fig3()
+        hosts = sorted({t.host or t.src for t in g} |
+                       {t.dst for t in g.network_tasks()})
+        hosts = sorted(h for h in hosts if h)
+        cl = Cluster.for_graph(g, topology=Topology.single_switch(hosts))
+        s0 = MXDAGScheduler().schedule(g)
+        s1 = MXDAGScheduler().schedule(g, cl)
+        assert s0.priorities == s1.priorities
+        assert s0.policy == s1.policy
+        assert s0.meta["pipelined"] == s1.meta["pipelined"]
+        assert s0.simulate().makespan == s1.simulate(cl).makespan

@@ -1,7 +1,7 @@
 """Unit tests: MXDAG graph structure and the §3.2 path calculus."""
 import pytest
 
-from repro.core import MXDAG, compute, flow
+from repro.core import MXDAG, MXTask, TaskKind, compute, flow
 from repro.core import builders
 
 
@@ -31,8 +31,22 @@ class TestConstruction:
             compute("x", -1.0, "A")
         with pytest.raises(ValueError):
             compute("x", 1.0, "A", unit=2.0)   # unit > size
+        # placement fields must match the task kind
         with pytest.raises(ValueError):
-            flow("f", 1.0, "A", None)          # missing dst
+            MXTask(name="x", kind=TaskKind.COMPUTE, size=1.0, src="A")
+        with pytest.raises(ValueError):
+            MXTask(name="f", kind=TaskKind.NETWORK, size=1.0, host="A")
+
+    def test_logical_tasks_are_unbound(self):
+        # None placements are legal (bound late); resources() refuses
+        # until the task is fully bound
+        c = compute("x", 1.0)
+        assert not c.bound
+        f = flow("f", 1.0, "A", None)          # dst bound late
+        assert not f.bound
+        with pytest.raises(ValueError, match="unbound"):
+            f.resources()
+        assert flow("g", 1.0, "A", "B").bound
 
     def test_topo_order(self):
         g = builders.fig1_jobs()

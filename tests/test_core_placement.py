@@ -1,0 +1,380 @@
+"""Unit tests: placement and routing as first-class scheduling decisions.
+
+Covers the late-binding task/graph layer (logical tasks, ``MXDAG.bind``
+endpoint inference), the fabric candidate-path sets, per-flow route
+overrides through Cluster/Simulator, the ``PlacementScheduler`` stage and
+routing stage of ``MXDAGScheduler``, and the ``move_task`` /
+``reroute_flow`` what-if queries — including the acceptance claims that
+placement-enabled scheduling strictly beats fixed placement on the
+oversubscribed-fanin and fat_tree(8) shuffle scenarios.
+"""
+import pytest
+
+from repro.core import (
+    Cluster, FairShareScheduler, Host, MXDAG, MXDAGScheduler,
+    PlacementScheduler, Topology, WhatIf, compute, flow, simulate,
+)
+from repro.core import builders
+
+
+class TestBind:
+    def test_inference_from_adjacent_computes(self):
+        g = MXDAG()
+        a = g.add(compute("a", 1.0))                 # logical
+        f = g.add(flow("f", 1.0))                    # endpoints unbound
+        b = g.add(compute("b", 1.0))
+        g.add_edge(a, f)
+        g.add_edge(f, b)
+        assert set(g.unbound()) == {"a", "f", "b"}
+        bound = g.bind({"a": "H0", "b": "H1"})
+        assert bound.unbound() == []
+        assert bound.tasks["f"].src == "H0"
+        assert bound.tasks["f"].dst == "H1"
+        # the original graph is untouched
+        assert set(g.unbound()) == {"a", "f", "b"}
+
+    def test_flow_to_flow_handoff_unifies(self):
+        # push -> pull chains through an unplaced relay host
+        g = MXDAG()
+        a = g.add(compute("a", 1.0, "W"))
+        push = g.add(flow("push", 1.0, "W", None))
+        pull = g.add(flow("pull", 1.0, None, "W"))
+        b = g.add(compute("b", 1.0, "W"))
+        g.add_edge(a, push)
+        g.add_edge(push, pull)
+        g.add_edge(pull, b)
+        bound = g.bind({"push": (None, "PS")})
+        assert bound.tasks["push"].dst == "PS"
+        assert bound.tasks["pull"].src == "PS"       # unified handoff
+
+    def test_bind_reproduces_placed_builder_variants(self):
+        cases = [
+            (builders.mapreduce("mr", 2, 2, placed=False),
+             builders.mapreduce("mr", 2, 2),
+             {"mr.m0": "mr.M0", "mr.m1": "mr.M1",
+              "mr.r0": "mr.R0", "mr.r1": "mr.R1"}),
+            (builders.ddl(2, placed=False), builders.ddl(2),
+             {"push0": (None, "PS"), "push1": (None, "PS")}),
+            (builders.oversubscribed_fanin(2, placed=False)[0],
+             builders.oversubscribed_fanin(2)[0],
+             {"c0": "d0", "c1": "d1"}),
+        ]
+        for logical, placed, assignment in cases:
+            assert logical.unbound()
+            assert not placed.unbound()
+            bound = logical.bind(assignment)
+            assert bound.signature() == placed.signature()
+
+    def test_conflicting_anchors_rejected(self):
+        g = MXDAG()
+        a = g.add(compute("a", 1.0))
+        f = g.add(flow("f", 1.0))
+        g.add_edge(a, f)
+        with pytest.raises(ValueError, match="conflicting"):
+            g.bind({"a": "H0", "f": ("H1", "H2")})   # src must equal a's host
+
+    def test_unresolved_placement_rejected(self):
+        g = MXDAG()
+        g.add(compute("a", 1.0))
+        g.add(compute("b", 1.0))
+        with pytest.raises(ValueError, match="undecided.*'b'"):
+            g.bind({"a": "H0"})
+
+    def test_reassigning_bound_endpoint_of_half_bound_flow_rejected(self):
+        # regression: a conflicting value for the already-bound endpoint
+        # of a partially-bound flow must fail loudly, not be dropped
+        g = MXDAG()
+        g.add(flow("f", 1.0, "A", None))
+        with pytest.raises(ValueError, match="already bound"):
+            g.bind({"f": ("B", "H")})
+        assert g.bind({"f": ("A", "H")}).tasks["f"].dst == "H"  # consistent
+
+    def test_rebinding_bound_task_rejected(self):
+        g = MXDAG()
+        g.add(compute("a", 1.0, "H0"))
+        with pytest.raises(ValueError, match="already bound"):
+            g.bind({"a": "H1"})
+
+    def test_fully_bound_graph_binds_to_itself(self):
+        # even one whose endpoints disagree with the co-location rules
+        g = MXDAG()
+        a = g.add(compute("a", 1.0, "A"))
+        f = g.add(flow("f", 1.0, "B", "C"))          # src != a's host
+        g.add_edge(a, f)
+        bound = g.bind({})
+        assert bound.signature() == g.signature()
+
+    def test_simulator_rejects_unbound_graph(self):
+        g, cl = builders.oversubscribed_fanin(2, placed=False)
+        with pytest.raises(ValueError, match="unbound"):
+            simulate(g, cl)
+
+    def test_for_graph_rejects_unbound_graph(self):
+        g = builders.mapreduce("mr", 2, 2, placed=False)
+        with pytest.raises(ValueError, match="unbound"):
+            Cluster.for_graph(g)
+
+
+class TestCandidatePaths:
+    def test_single_switch_and_two_tier_have_one_candidate(self):
+        t = Topology.single_switch(["A", "B"])
+        assert t.paths("A", "B") == (("A.nic_out", "B.nic_in"),)
+        t2 = Topology.two_tier([["a0", "a1"], ["b0"]])
+        assert len(t2.paths("a0", "b0")) == 1
+        assert len(t2.paths("a0", "a1")) == 1        # intra-rack direct
+
+    def test_leaf_spine_offers_every_spine(self):
+        t = Topology.leaf_spine((2, 2), 3)
+        cands = t.paths("l0h0", "l1h1")
+        assert len(cands) == 3
+        assert {p[1] for p in cands} == {
+            "leaf0.up0", "leaf0.up1", "leaf0.up2"}
+
+    def test_fat_tree_offers_aggs_and_cores(self):
+        t = Topology.fat_tree(4)
+        assert len(t.paths("p0e0h0", "p0e1h0")) == 2     # one per agg
+        assert len(t.paths("p0e0h0", "p1e0h0")) == 4     # one per core
+        assert len(t.paths("p0e0h0", "p0e0h1")) == 1     # same edge
+
+    @pytest.mark.parametrize("make", [
+        lambda: Topology.two_tier((2, 2), oversubscription=2.0),
+        lambda: Topology.leaf_spine((2, 2), 2),
+        lambda: Topology.fat_tree(4),
+    ], ids=["two_tier", "leaf_spine", "fat_tree"])
+    def test_default_path_is_a_candidate(self, make):
+        t = make()
+        for s in t.hosts():
+            for d in t.hosts():
+                if s == d:
+                    continue
+                cands = t.paths(s, d)
+                assert t.path(s, d) in cands
+                for p in cands:
+                    assert p[0] == f"{s}.nic_out"
+                    assert p[-1] == f"{d}.nic_in"
+                    assert all(l in t.links for l in p)
+
+    def test_explicit_route_is_sole_candidate(self):
+        t = Topology.leaf_spine((2, 2), 2)
+        t.add_route("l0h0", "l1h0", ("leaf0.up1", "leaf1.down1"))
+        assert t.paths("l0h0", "l1h0") == (
+            ("l0h0.nic_out", "leaf0.up1", "leaf1.down1", "l1h0.nic_in"),)
+
+    def test_resized_keeps_candidates(self):
+        t = Topology.fat_tree(4)
+        r = t.resized(2.0)
+        assert r.paths("p0e0h0", "p1e0h0") == t.paths("p0e0h0", "p1e0h0")
+
+
+class TestRouteOverrides:
+    def test_cluster_resources_for_route(self):
+        t = Topology.leaf_spine((2, 2), 2)
+        cl = Cluster.from_topology(t)
+        f = flow("f", 1.0, "l0h0", "l1h0")
+        default = cl.resources_for(f)
+        alt = next(p for p in cl.candidate_routes(f) if p != default)
+        assert cl.resources_for(f, route=alt) == alt
+        with pytest.raises(ValueError):
+            cl.resources_for(compute("c", 1.0, "l0h0"), route=alt)
+
+    def test_simulator_route_override_changes_contention(self):
+        t = Topology.leaf_spine((2, 4), 2, uplink=1.0)
+        cl = Cluster.from_topology(t)
+        g = MXDAG()
+        g.add(flow("f0", 1.0, "l0h0", "l1h0"))
+        g.add(flow("f1", 1.0, "l0h1", "l1h1"))   # both hash to spine 0
+        assert simulate(g, cl).makespan == pytest.approx(2.0)
+        alt = t.paths("l0h1", "l1h1")[1]
+        r = simulate(g, cl, routes={"f1": alt})
+        assert r.makespan == pytest.approx(1.0)
+
+    def test_simulator_rejects_bad_overrides(self):
+        t = Topology.leaf_spine((2, 2), 2)
+        cl = Cluster.from_topology(t)
+        g = MXDAG()
+        g.add(flow("f", 1.0, "l0h0", "l1h0"))
+        g.add(compute("c", 1.0, "l1h0"))
+        g.add_edge("f", "c")
+        ok = ("l0h0.nic_out", "l1h0.nic_in")
+        with pytest.raises(KeyError, match="unknown task"):
+            simulate(g, cl, routes={"zzz": ok})
+        with pytest.raises(ValueError, match="network"):
+            simulate(g, cl, routes={"c": ok})
+        with pytest.raises(KeyError, match="unknown fabric links"):
+            simulate(g, cl, routes={
+                "f": ("l0h0.nic_out", "nope", "l1h0.nic_in")})
+        # a route between the wrong hosts would uncharge the real NICs
+        with pytest.raises(ValueError, match="must start"):
+            simulate(g, cl, routes={
+                "f": ("l0h1.nic_out", "l1h1.nic_in")})
+
+    def test_route_override_does_not_poison_cache(self):
+        t = Topology.leaf_spine((2, 4), 2, uplink=1.0)
+        cl = Cluster.from_topology(t)
+        g = MXDAG()
+        g.add(flow("f0", 1.0, "l0h0", "l1h0"))
+        g.add(flow("f1", 1.0, "l0h1", "l1h1"))
+        before = simulate(g, cl).makespan
+        simulate(g, cl, routes={"f1": t.paths("l0h1", "l1h1")[1]})
+        assert simulate(g, cl).makespan == before
+
+
+class TestPlacementScheduler:
+    def test_fanin_placement_strictly_beats_fixed(self):
+        """Acceptance: on the oversubscribed fan-in, letting the scheduler
+        place the consumers avoids the oversubscribed core entirely."""
+        fixed_g, cl = builders.oversubscribed_fanin(4, oversubscription=8.0)
+        fixed = MXDAGScheduler(try_pipelining=False) \
+            .schedule(fixed_g, cl).simulate(cl)
+        logical_g, cl2 = builders.oversubscribed_fanin(
+            4, oversubscription=8.0, placed=False)
+        sched = MXDAGScheduler(try_pipelining=False) \
+            .schedule(logical_g, cl2)
+        res = sched.simulate(cl2)
+        assert res.makespan < fixed.makespan - 1e-9
+        assert res.makespan == pytest.approx(9.0)   # 1 (flow) + 8 (compute)
+        assert fixed.makespan == pytest.approx(10.0)
+        # every consumer was pulled into rack 0 (hosts s*)
+        assert all(h.startswith("s") for h in sched.placement.values())
+        # the schedule records the decision and its graph is bound
+        assert sched.graph.unbound() == []
+
+    def test_ft8_shuffle_placement_strictly_beats_fixed(self):
+        """Acceptance: sparse cross-pod shuffle on fat_tree(8) — ECMP
+        core collisions bind the fixed layout; placement avoids them."""
+        fixed_g, cl = builders.fat_tree_shuffle(8, stride=2)
+        fixed = MXDAGScheduler(try_pipelining=False) \
+            .schedule(fixed_g, cl).simulate(cl)
+        logical_g, cl2 = builders.fat_tree_shuffle(8, stride=2,
+                                                   placed=False)
+        placer = PlacementScheduler(des_refine=False)
+        res = MXDAGScheduler(try_pipelining=False, placement=placer) \
+            .schedule(logical_g, cl2).simulate(cl2)
+        assert fixed.makespan == pytest.approx(4.0)
+        assert res.makespan == pytest.approx(3.5)
+        assert res.makespan < fixed.makespan - 1e-9
+
+    def test_des_refinement_never_hurts(self):
+        logical_g, cl = builders.oversubscribed_fanin(
+            3, oversubscription=6.0, placed=False)
+        heur = MXDAGScheduler(
+            try_pipelining=False,
+            placement=PlacementScheduler(des_refine=False)) \
+            .schedule(logical_g, cl).simulate(cl).makespan
+        refined = MXDAGScheduler(
+            try_pipelining=False,
+            placement=PlacementScheduler(des_refine=True)) \
+            .schedule(logical_g, cl).simulate(cl).makespan
+        assert refined <= heur + 1e-9
+
+    def test_placement_needs_cluster(self):
+        g = builders.mapreduce("mr", 2, 2, placed=False)
+        with pytest.raises(ValueError, match="cluster"):
+            MXDAGScheduler(try_pipelining=False).schedule(g)
+
+    def test_slot_pressure_spreads_computes(self):
+        # 4 logical computes, no flows: land on 4 distinct 1-slot hosts
+        g = MXDAG()
+        for i in range(4):
+            g.add(compute(f"c{i}", 1.0))
+        cl = Cluster.homogeneous(["h0", "h1", "h2", "h3"])
+        sched = MXDAGScheduler(try_pipelining=False).schedule(g, cl)
+        assert sorted(sched.placement.values()) == ["h0", "h1", "h2", "h3"]
+        assert sched.simulate(cl).makespan == pytest.approx(1.0)
+
+    def test_proc_pool_constraint_respected(self):
+        g = MXDAG()
+        g.add(compute("c", 1.0, proc="gpu"))
+        cl = Cluster([Host("cpuonly", procs={"cpu": 1}),
+                      Host("gpubox", procs={"cpu": 1, "gpu": 1})])
+        sched = MXDAGScheduler(try_pipelining=False).schedule(g, cl)
+        assert sched.placement == {"c": "gpubox"}
+
+
+class TestRoutingStage:
+    def _collision_case(self):
+        t = Topology.leaf_spine((2, 4), 2, uplink=1.0)
+        cl = Cluster.from_topology(t)
+        g = MXDAG()
+        g.add(flow("f0", 1.0, "l0h0", "l1h0"))
+        g.add(flow("f1", 1.0, "l0h1", "l1h1"))   # both hash to spine 0
+        return g, cl, t
+
+    def test_reroute_resolves_ecmp_collision(self):
+        g, cl, t = self._collision_case()
+        base = MXDAGScheduler(try_pipelining=False).schedule(g, cl)
+        routed = MXDAGScheduler(try_pipelining=False,
+                                try_routing=True).schedule(g, cl)
+        assert base.simulate(cl).makespan == pytest.approx(2.0)
+        assert routed.simulate(cl).makespan == pytest.approx(1.0)
+        assert len(routed.routes) == 1               # one flow moved
+        (moved, path), = routed.routes.items()
+        assert path in t.paths(g.tasks[moved].src, g.tasks[moved].dst)
+
+    def test_routing_off_by_default_and_empty_when_useless(self):
+        g, cl, _ = self._collision_case()
+        assert MXDAGScheduler(try_pipelining=False) \
+            .schedule(g, cl).routes == {}
+        # no topology -> nothing to route
+        g2 = builders.fig1_jobs()
+        assert MXDAGScheduler(try_pipelining=False, try_routing=True) \
+            .schedule(g2).routes == {}
+
+
+def MXDAG_with_gpu_task() -> MXDAG:
+    g = MXDAG()
+    g.add(compute("c", 1.0, "g0", proc="gpu"))
+    return g
+
+
+class TestWhatIfPlacementRouting:
+    def test_move_task(self):
+        g, cl = builders.oversubscribed_fanin(4, oversubscription=8.0)
+        w = WhatIf(g, cl, scheduler=MXDAGScheduler(try_pipelining=False))
+        r = w.move_task("c0", "s1")     # consumer joins the senders' rack
+        assert r.baseline == pytest.approx(10.0)
+        assert r.variant == pytest.approx(9.0)
+        assert r.helps
+        with pytest.raises(ValueError):
+            w.move_task("f0", "s1")     # flows are rerouted, not moved
+        with pytest.raises(KeyError, match="unknown host"):
+            w.move_task("c0", "nowhere")
+        with pytest.raises(ValueError, match="pool"):
+            # hosts in this cluster only have cpu pools
+            WhatIf(MXDAG_with_gpu_task(), Cluster.homogeneous(["h0"]),
+                   scheduler=MXDAGScheduler(try_pipelining=False)) \
+                .move_task("c", "h0")
+
+    def test_move_task_leaves_shared_flows_alone(self):
+        # regression: a flow with other compute consumers keeps its
+        # destination — only flows exclusive to the moved task follow it.
+        # H2's ingress is kept busy, so the buggy rewrite (f.dst -> H2)
+        # would halve f's rate and report 4.0 instead of 3.0.
+        g = MXDAG()
+        a = g.add(compute("a", 1.0, "H0"))
+        f = g.add(flow("f", 1.0, "H0", "H1"))
+        c1 = g.add(compute("c1", 1.0, "H1"))
+        c2 = g.add(compute("c2", 1.0, "H1"))
+        g.add(flow("busy", 2.0, "H3", "H2"))         # occupies H2.nic_in
+        g.add_edge(a, f)
+        g.add_edge(f, c1)
+        g.add_edge(f, c2)                            # f is shared
+        w = WhatIf(g, Cluster.homogeneous(["H0", "H1", "H2", "H3"]),
+                   scheduler=FairShareScheduler())
+        r = w.move_task("c1", "H2")
+        assert g.tasks["f"].dst == "H1"              # original untouched
+        assert r.variant == pytest.approx(3.0)       # f still lands on H1
+
+    def test_reroute_flow(self):
+        t = Topology.leaf_spine((2, 4), 2, uplink=1.0)
+        cl = Cluster.from_topology(t)
+        g = MXDAG()
+        g.add(flow("f0", 1.0, "l0h0", "l1h0"))
+        g.add(flow("f1", 1.0, "l0h1", "l1h1"))
+        w = WhatIf(g, cl, scheduler=MXDAGScheduler(try_pipelining=False))
+        r = w.reroute_flow("f1", t.paths("l0h1", "l1h1")[1])
+        assert r.baseline == pytest.approx(2.0)
+        assert r.variant == pytest.approx(1.0)
+        assert r.helps
+        with pytest.raises(KeyError):
+            w.reroute_flow("zzz", ())

@@ -132,6 +132,16 @@ class TestFig7Altruism:
         assert alt.jct("job2") < naive.jct("job2")
         assert alt.jct("job1") <= naive.jct("job1") + 1e-9
 
+    def test_cross_job_name_collision_rejected(self):
+        """Regression: merging jobs that reuse a task name must fail
+        loudly (naming both jobs), not half-merge the graphs."""
+        a = builders.mapreduce("mr", 2, 2, job="jobA")
+        b = builders.mapreduce("mr", 2, 2, job="jobB")   # same task names
+        with pytest.raises(ValueError) as ei:
+            AltruisticMultiScheduler().schedule([a, b])
+        msg = str(ei.value)
+        assert "collision" in msg and "mr" in msg
+
     def test_altruism_bounded_by_slack(self):
         """A job never demotes a task whose slack can't absorb the delay."""
         j1, j2 = builders.mapreduce_pair()
