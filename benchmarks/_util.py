@@ -1,14 +1,26 @@
 """Shared benchmark helpers."""
 from __future__ import annotations
 
+import gc
 import time
 
 
 def timeit_us(fn, *args, repeat: int = 3) -> float:
-    """Best-of-``repeat`` wall time of ``fn(*args)`` in microseconds."""
+    """Best-of-``repeat`` wall time of ``fn(*args)`` in microseconds.
+
+    The collector is paused during the timed region: large compiled DAGs
+    hold millions of objects, and a collection landing inside one rep is
+    pure inter-run noise for a best-of measurement.
+    """
     best = float("inf")
-    for _ in range(repeat):
-        t0 = time.perf_counter()
-        fn(*args)
-        best = min(best, time.perf_counter() - t0)
+    was_enabled = gc.isenabled()
+    gc.disable()
+    try:
+        for _ in range(repeat):
+            t0 = time.perf_counter()
+            fn(*args)
+            best = min(best, time.perf_counter() - t0)
+    finally:
+        if was_enabled:
+            gc.enable()
     return best * 1e6

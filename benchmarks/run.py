@@ -6,8 +6,9 @@
   core oversubscription ratios),
 - scheduler micro-benchmarks (wall-time of the Principle-1 scheduler and
   the DES on generated DAGs),
-- the scale sweep (scale.py — event-calendar DES + memoized scheduler on
-  large mapreduce/DDL/fat-tree DAGs, with seed-implementation rows),
+- the scale sweep (scale.py — flat-array DES + memoized scheduler on
+  large mapreduce/DDL/fat-tree/layered DAGs up to ~20k tasks, with
+  event-calendar and seed-implementation comparison rows),
 - the roofline summary per dry-run cell (roofline.py; populated by
   ``python -m repro.launch.dryrun --all``).
 

@@ -2,9 +2,13 @@
 
 Sweeps ``mapreduce(N, N)`` for N ∈ {8, 16, 32}, ``ddl(L)`` for
 L ∈ {32, 128}, and a ``fat_tree(8)`` cross-pod shuffle, timing both
-``simulate`` and ``MXDAGScheduler.schedule`` (with and without
-pipelining).  Graphs are built outside the timed region — construction
-and simulation are separate costs (and were separate bottlenecks).
+``simulate`` (the flat-array engine) and ``MXDAGScheduler.schedule``
+(with and without pipelining) — plus a Graphene-scale section:
+``mapreduce(128, 128)`` (16640 tasks), ``ddl(1024)`` and
+``random_layered(20000)``, where ``scale.speedup_array_*`` rows compare
+the flat-array engine against the event-calendar core on the same DAG.
+Graphs are built outside the timed region — construction and simulation
+are separate costs (and were separate bottlenecks).
 
 The placement rows time the placement-enabled scheduler on the sparse
 ``fat_tree(8)`` shuffle with *logical* reducers (128 candidate hosts,
@@ -20,9 +24,14 @@ Two kinds of extra rows:
   simulator loop (retained as ``Simulator._reference_run``), and the
   scheduler without memoization or the incremental pipelining worklist.
   ``scale.speedup_*`` rows report seed/new ratios.
-- ``*.ref_match`` — 1.0 iff the event-calendar core reproduces the
-  reference slow path's makespan on that DAG (exact-equivalence check,
-  also enforced by the differential tests).
+- ``*.ref_match`` — 1.0 iff the engine under test reproduces its oracle's
+  makespan on that DAG: the reference slow path for the classic sweep,
+  the event-calendar core for the ≥10k-task scenarios (where the
+  quadratic reference is unusable).  Enforced by check_perf.py and the
+  differential tests.
+
+``--only PREFIX`` restricts the sweep to matching row stems and
+``--profile`` wraps it in cProfile — see ``--help``.
 """
 from __future__ import annotations
 
@@ -39,11 +48,14 @@ from benchmarks._util import timeit_us  # noqa: E402
 EPS = 1e-9
 
 
-def _seed_waterfill(group, paths, weight, residual, rates):
+def _seed_waterfill(group, paths, weight, residual, rates, prep=None):
     """The seed's waterfill, verbatim: O(links · flows) bottleneck scan
     and O(n²) frozen-membership test.  Used only to measure the "before"
     rows; ``weight=None`` (the new unit-weight convention) is adapted to
-    the seed's always-call-the-closure behaviour."""
+    the seed's always-call-the-closure behaviour, and the ``prep``
+    hoisting hook is accepted and ignored (the seed rebuilt everything
+    per call — that is part of what the rows measure)."""
+    del prep
     if weight is None:
         def weight(n):  # noqa: ARG001 - seed called a closure per flow
             return 1.0
@@ -123,21 +135,45 @@ def _pipelined_workloads():
     }
 
 
-def bench_rows(seed_rows: bool = True):
+def _big_workloads():
+    """≥4k-task scenarios exercising the flat-array engine at scale
+    (name → builder thunk; built lazily so ``--only`` skips the cost)."""
+    from repro.core import builders
+
+    return {
+        "mr128x128": lambda: (builders.mapreduce("mr", 128, 128), None),
+        "ddl1024": lambda: (builders.ddl(1024, push=2.0, pull=2.0), None),
+        "layered20k": lambda: (builders.random_layered(20000), None),
+    }
+
+
+def bench_rows(seed_rows: bool = True, only: str | None = None):
+    """All ``scale.*`` rows; ``only`` restricts to row names (minus the
+    ``scale.`` prefix) starting with that string — perf iteration on one
+    scenario shouldn't pay for the full sweep."""
     from repro.core import MXDAGScheduler, simulate
     from repro.core.simulator import Simulator
+
+    def want(stem: str) -> bool:
+        # a block's stem is a prefix of every row name it produces, so
+        # match in both directions: --only may name a whole block
+        # ("simulate_mr128") or one full row ("simulate_mr8x8_us")
+        return (only is None or stem.startswith(only)
+                or only.startswith(stem))
 
     rows = []
     work = _workloads()
     piped = _pipelined_workloads()
 
-    # -- simulate ------------------------------------------------------
+    # -- simulate (flat-array engine vs the reference oracle) ----------
     new_us = {}
     for name, (g, cl) in work.items():
+        if not want(f"simulate_{name}"):
+            continue
         us = timeit_us(lambda g=g, cl=cl: simulate(g, cl), repeat=3)
         new_us[f"simulate_{name}"] = us
         rows.append((f"scale.simulate_{name}_us", us,
-                     f"event-calendar DES, {len(g.tasks)} tasks"))
+                     f"flat-array DES, {len(g.tasks)} tasks"))
         ref = Simulator(g, cl)._reference_run()
         new = simulate(g, cl)
         rows.append((f"scale.simulate_{name}.ref_match",
@@ -145,8 +181,36 @@ def bench_rows(seed_rows: bool = True):
                      else 0.0,
                      f"makespan {new.makespan:g} == reference slow path"))
 
+    # -- simulate at Graphene scale (array vs event-calendar core) -----
+    # the reference oracle is quadratic and unusable at this size, so
+    # the equivalence row diffs the two fast engines against each other
+    for name, make in _big_workloads().items():
+        if not want(f"simulate_{name}"):
+            continue
+        g, cl = make()
+        sim = Simulator(g, cl)
+        us = timeit_us(sim.run, repeat=3 if len(g.tasks) >= 10000 else 1)
+        rows.append((f"scale.simulate_{name}_us", us,
+                     f"flat-array DES, {len(g.tasks)} tasks"))
+        if len(g.tasks) >= 10000:
+            # best-of-2 so the gated speedup ratio compares two warm
+            # bests (the first calendar rep pays the cold _statics
+            # build, as the first array rep pays the compile)
+            cal_us = timeit_us(sim.calendar_run, repeat=2)
+            rows.append((f"scale.simulate_{name}_cal_us", cal_us,
+                         "event-calendar core, same DAG"))
+            rows.append((f"scale.speedup_array_{name}", cal_us / us,
+                         "flat-array speedup over the event calendar"))
+            rows.append((f"scale.simulate_{name}.ref_match",
+                         1.0 if abs(sim.run().makespan
+                                    - sim.calendar_run().makespan) < 1e-9
+                         else 0.0,
+                         "array engine == event-calendar core makespan"))
+
     # -- schedule (no pipelining) --------------------------------------
     for name in ("mr8x8", "mr16x16", "ddl32", "ddl128", "ft8_shuffle"):
+        if not want(f"schedule_{name}"):
+            continue
         g, cl = work[name]
         us = timeit_us(
             lambda g=g, cl=cl: MXDAGScheduler(
@@ -158,31 +222,34 @@ def bench_rows(seed_rows: bool = True):
 
     # -- placement-enabled scheduling (fat_tree(8) sparse shuffle) -----
     from repro.core import PlacementScheduler, builders
-    fixed_g, fixed_cl = builders.fat_tree_shuffle(8, stride=2)
-    fixed_ms = MXDAGScheduler(try_pipelining=False) \
-        .schedule(fixed_g, fixed_cl).simulate(fixed_cl).makespan
-    logical_g, logical_cl = builders.fat_tree_shuffle(8, stride=2,
-                                                      placed=False)
+    if want("schedule_ft8_shuffle_placed") or want("placement_ft8_shuffle"):
+        fixed_g, fixed_cl = builders.fat_tree_shuffle(8, stride=2)
+        fixed_ms = MXDAGScheduler(try_pipelining=False) \
+            .schedule(fixed_g, fixed_cl).simulate(fixed_cl).makespan
+        logical_g, logical_cl = builders.fat_tree_shuffle(8, stride=2,
+                                                          placed=False)
 
-    def _place():
-        sched = MXDAGScheduler(
-            try_pipelining=False,
-            placement=PlacementScheduler(des_refine=False),
-        ).schedule(logical_g, logical_cl)
-        return sched.simulate(logical_cl).makespan
+        def _place():
+            sched = MXDAGScheduler(
+                try_pipelining=False,
+                placement=PlacementScheduler(des_refine=False),
+            ).schedule(logical_g, logical_cl)
+            return sched.simulate(logical_cl).makespan
 
-    us = timeit_us(_place, repeat=3)
-    placed_ms = _place()
-    rows.append(("scale.schedule_ft8_shuffle_placed_us", us,
-                 f"placement-enabled scheduling, "
-                 f"{len(logical_g.tasks)} tasks / 128 hosts"))
-    rows.append(("scale.placement_ft8_shuffle.improves",
-                 1.0 if placed_ms < fixed_ms - 1e-9 else 0.0,
-                 f"placed makespan {placed_ms:g} < fixed {fixed_ms:g} "
-                 f"(1.0 = validated)"))
+        us = timeit_us(_place, repeat=3)
+        placed_ms = _place()
+        rows.append(("scale.schedule_ft8_shuffle_placed_us", us,
+                     f"placement-enabled scheduling, "
+                     f"{len(logical_g.tasks)} tasks / 128 hosts"))
+        rows.append(("scale.placement_ft8_shuffle.improves",
+                     1.0 if placed_ms < fixed_ms - 1e-9 else 0.0,
+                     f"placed makespan {placed_ms:g} < fixed {fixed_ms:g} "
+                     f"(1.0 = validated)"))
 
     # -- schedule (greedy pipelining on) -------------------------------
     for name, g in piped.items():
+        if not want(f"schedule_{name}_pipelined"):
+            continue
         us = timeit_us(
             lambda g=g: MXDAGScheduler(try_pipelining=True).schedule(g),
             repeat=1)
@@ -194,6 +261,8 @@ def bench_rows(seed_rows: bool = True):
     if seed_rows:
         with seed_implementation() as seed_simulate:
             for name in ("mr32x32", "ddl128"):
+                if f"simulate_{name}" not in new_us:
+                    continue
                 g, cl = work[name]
                 us = timeit_us(lambda g=g, cl=cl: seed_simulate(g, cl),
                                repeat=3)
@@ -201,19 +270,21 @@ def bench_rows(seed_rows: bool = True):
                              "seed implementation of the same DES"))
                 rows.append((f"scale.speedup_simulate_{name}",
                              us / new_us[f"simulate_{name}"],
-                             "event-calendar speedup over the seed"))
-            g = piped["mr16x16"]
-            us = timeit_us(
-                lambda: MXDAGScheduler(
-                    try_pipelining=True, memoize=False,
-                    incremental_pipelining=False).schedule(g),
-                repeat=1)
-            rows.append(("scale.schedule_mr16x16_pipelined_seed_us", us,
-                         "seed scheduler (full re-scan, no memo) on the "
-                         "seed DES"))
-            rows.append(("scale.speedup_schedule_mr16x16_pipelined",
-                         us / new_us["schedule_mr16x16_pipelined"],
-                         "scheduling speedup over the seed"))
+                             "flat-array speedup over the seed"))
+            if "schedule_mr16x16_pipelined" in new_us:
+                g = piped["mr16x16"]
+                us = timeit_us(
+                    lambda: MXDAGScheduler(
+                        try_pipelining=True, memoize=False,
+                        incremental_pipelining=False).schedule(g),
+                    repeat=1)
+                rows.append(("scale.schedule_mr16x16_pipelined_seed_us",
+                             us,
+                             "seed scheduler (full re-scan, no memo) on "
+                             "the seed DES"))
+                rows.append(("scale.speedup_schedule_mr16x16_pipelined",
+                             us / new_us["schedule_mr16x16_pipelined"],
+                             "scheduling speedup over the seed"))
     return rows
 
 
@@ -223,9 +294,29 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--no-seed", action="store_true",
                     help="skip the (slow) seed-implementation rows")
+    ap.add_argument("--only", metavar="PREFIX", default=None,
+                    help="run only rows whose name (minus 'scale.') "
+                         "starts with PREFIX, e.g. simulate_mr128")
+    ap.add_argument("--profile", action="store_true",
+                    help="cProfile the sweep; print top 20 by cumtime")
     args = ap.parse_args()
+
+    def run():
+        return bench_rows(seed_rows=not args.no_seed, only=args.only)
+
+    if args.profile:
+        import cProfile
+        import pstats
+
+        pr = cProfile.Profile()
+        pr.enable()
+        rows = run()
+        pr.disable()
+        pstats.Stats(pr).sort_stats("cumtime").print_stats(20)
+    else:
+        rows = run()
     print("name,value,derived")
-    for name, value, derived in bench_rows(seed_rows=not args.no_seed):
+    for name, value, derived in rows:
         print(f"{name},{value:.6g},{str(derived).replace(',', ';')}")
 
 

@@ -3,6 +3,7 @@ from repro.core.task import MXTask, TaskKind, compute, flow
 from repro.core.graph import MXDAG, Edge, NodeTiming
 from repro.core.fabric import Link, Topology
 from repro.core.cluster import Cluster, Host
+from repro.core.arraysim import vectorized_waterfill
 from repro.core.simulator import SimResult, Simulator, max_min_rates, simulate
 from repro.core.schedule import (
     AltruisticMultiScheduler,
@@ -22,6 +23,7 @@ __all__ = [
     "Link", "Topology",
     "Cluster", "Host",
     "SimResult", "Simulator", "max_min_rates", "simulate",
+    "vectorized_waterfill",
     "FairShareScheduler", "CoflowConfig", "MXDAGScheduler",
     "PlacementScheduler", "AltruisticMultiScheduler", "Schedule",
     "auto_coflows",

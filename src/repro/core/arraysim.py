@@ -1,0 +1,1147 @@
+"""Flat-array DES engine: the compiled fast path behind ``Simulator.run``.
+
+The event-calendar core in :mod:`repro.core.simulator` keys every piece of
+run state by task-name strings in dicts.  At Graphene scale (tens of
+thousands of vertices; Grandl et al., OSDI'16) the hashing, string
+comparisons and per-task Python loops dominate the wall time.  This module
+compiles one (MXDAG, Cluster, coflows, routes) quadruple into
+integer-interned flat arrays, then runs the *same* event-calendar
+algorithm on top of them.
+
+Compiled layout (:class:`CompiledSim`, cached on the graph keyed by graph
+version + cluster identity + coflow/route keys, so scheduler and what-if
+sweeps that vary only priorities/releases compile once per graph version):
+
+- task ids are insertion-order integers; ``names``/``idx`` map back and
+  forth, ``name_rank`` is each task's rank in lexicographic name order
+  (dispatch and waterfill orders sort by name — ranks reproduce the
+  string sorts on ints);
+- per-task scalars ``size``/``unit``/``nu``/``is_compute``/``job`` as flat
+  lists (mirrored as float64/int64 NumPy arrays when NumPy is present);
+- flow→link incidence in CSR form: ``flow_links[p]`` is the interned link
+  tuple of the flow at net position ``p``; ``fl_ptr``/``fl_flat`` are the
+  NumPy CSR mirror used by the vectorized waterfill; ``link_bw`` the
+  per-link capacities;
+- streaming-predecessor adjacency (``stream_in``/``stream_out``) and
+  start-gate structure compiled to one fused *counter* per task:
+  ``init_gate[i]`` counts unmet barrier + coflow + member-sync
+  preconditions (all non-negative and all required, so their sum gates
+  identically), and ``gate_dec``/``cof_dec`` say which counters each
+  completion (or coflow completion) decrements — start gating is
+  monotone, so counter-zero is equivalent to the calendar core's
+  re-scan of its gate lists;
+- coflow membership (``coflow_of``/``coflows``/``coflow_fed_by``) and
+  per-flow priority-class inputs (``stream_fed``).
+
+The run state is float64 ``work``/``rate`` vectors, int heap entries
+``(time, kind, task_id, stamp)``, and integer slot/link indices.  Rate
+(re)allocation per priority class goes through the vectorized waterfill:
+bottleneck search is a NumPy reduction over the link arrays, with the
+scalar scan's first-within-EPS tie-break reproduced exactly by scanning
+only the strict prefix minima of the ratio vector, and whole freeze
+batches are subtracted via bincounts on the incidence CSR.
+
+NumPy-optional policy: ``import numpy`` is guarded at module import.  The
+core CI lane runs pure-stdlib — without NumPy the same compiled engine
+runs list-backed kernels and the waterfill falls back to a scalar
+progressive fill (a port of :func:`repro.core.simulator.waterfill` to the
+interned domain, same freeze order and arithmetic), so results are
+engine-identical either way.  The golden differential tests assert the
+array engine reproduces the calendar core — and hence the retained
+``_reference_run`` seed oracle — on every scenario.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from itertools import chain
+
+try:
+    import numpy as np
+except ImportError:                      # pure-stdlib core lane
+    np = None
+
+from repro.core.task import TaskKind
+
+EPS = 1e-9
+
+
+class CompiledSim:
+    """Flat-array form of one (graph, cluster, coflows, routes)."""
+
+    __slots__ = (
+        "n", "names", "idx", "name_rank", "size", "unit", "nu",
+        "is_compute", "job", "slot_of", "slot_cap", "net_ids", "net_pos",
+        "n_net", "flow_links", "n_links", "link_bw", "succ",
+        "gate_dec", "init_gate", "gate_stream", "stream_in",
+        "stream_out",
+        "has_streaming", "stream_fed", "coflow_of", "coflows", "cof_dec",
+        "coflow_fed_by", "nu_sum", "np_ready", "single_job", "roots",
+        # NumPy mirrors (None when NumPy is absent)
+        "size_a", "name_rank_a", "net_ids_a", "fl_ptr", "fl_flat",
+        "link_bw_a",
+        # precomputed fill structures for the full flow set (the common
+        # fair-mode group: every flow runnable, none starved)
+        "full_sorted_ids", "full_sg_pos", "full_row_links",
+        "full_by_link", "full_counts",
+    )
+
+
+def compile_sim(sim) -> CompiledSim:
+    """Compiled arrays for ``sim``, cached on the graph.
+
+    Key: (graph version, cluster identity) owns a small dict keyed by
+    (coflow grouping, route overrides) — the two Simulator inputs that
+    change the incidence/gating structure.  Priorities, releases and
+    policy are per-run inputs and never invalidate the compile.
+    """
+    g = sim.g
+    sub = (tuple(tuple(sorted(c)) for c in sim.coflows),
+           tuple(sorted(sim.routes.items())) if sim.routes else None)
+    cache = g.__dict__.get("_array_compiled")
+    if cache is not None and cache[0] == g._version \
+            and cache[1] is sim.cluster:
+        comp = cache[2].get(sub)
+        if comp is not None:
+            return comp
+    else:
+        cache = (g._version, sim.cluster, {})
+        g._array_compiled = cache
+    comp = _compile(sim)
+    cache[2][sub] = comp
+    return comp
+
+
+def _compile(sim) -> CompiledSim:
+    g, cluster = sim.g, sim.cluster
+    tasks = g.tasks
+    comp = CompiledSim()
+    names = list(tasks)
+    idx = {nm: i for i, nm in enumerate(names)}
+    n = len(names)
+    comp.n, comp.names, comp.idx = n, names, idx
+
+    rank = [0] * n
+    for r, nm in enumerate(sorted(names)):
+        rank[idx[nm]] = r
+    comp.name_rank = rank
+
+    comp.size = [t.size for t in tasks.values()]
+    comp.unit = [t.effective_unit for t in tasks.values()]
+    comp.nu = [t.n_units for t in tasks.values()]
+    comp.nu_sum = sum(comp.nu)
+    comp.is_compute = [t.kind is TaskKind.COMPUTE for t in tasks.values()]
+    comp.job = [t.job for t in tasks.values()]
+    comp.single_job = len(set(comp.job)) <= 1
+
+    # compute slots (a pool absent from the cluster has 0 slots, exactly
+    # like the calendar core's slots_free.get(r, 0))
+    slot_ids: dict[str, int] = {}
+    comp.slot_of = [-1] * n
+    comp.slot_cap = []
+    # flow→link incidence over interned links
+    link_ids: dict[str, int] = {}
+    comp.flow_links = []
+    comp.net_ids = []
+    comp.net_pos = [-1] * n
+    res = sim._res
+    for i, (nm, t) in enumerate(tasks.items()):
+        if comp.is_compute[i]:
+            r = t.resources()[0]
+            si = slot_ids.get(r)
+            if si is None:
+                si = slot_ids[r] = len(comp.slot_cap)
+                host, pool = r.rsplit(".", 1)
+                h = cluster.hosts.get(host)
+                comp.slot_cap.append(
+                    int(h.procs.get(pool, 0)) if h is not None else 0)
+            comp.slot_of[i] = si
+        else:
+            comp.net_pos[i] = len(comp.net_ids)
+            comp.net_ids.append(i)
+            ids = []
+            for l in res[nm]:
+                li = link_ids.get(l)
+                if li is None:
+                    li = link_ids[l] = len(link_ids)
+                ids.append(li)
+            comp.flow_links.append(tuple(ids))
+    comp.n_net = len(comp.net_ids)
+    comp.n_links = len(link_ids)
+    bw = cluster.bandwidths(link_ids)
+    comp.link_bw = [0.0] * comp.n_links
+    for l, li in link_ids.items():
+        comp.link_bw[li] = float(bw[l])
+
+    # coflows (members in sorted-name order: iteration order never
+    # affects results — membership tests and maxima are commutative)
+    comp.coflows = [[idx[m] for m in sorted(c)] for c in sim.coflows]
+    comp.coflow_of = [-1] * n
+    for ci, c in enumerate(comp.coflows):
+        for m in c:
+            comp.coflow_of[m] = ci
+
+    # streaming adjacency (coflow producers gate at start instead)
+    stream_in: list[list[int]] = [[] for _ in range(n)]
+    stream_out: list[list[int]] = [[] for _ in range(n)]
+    comp.stream_fed = [False] * n
+    for (p, d), e in g.edges.items():
+        if g.effective_pipelined(e):
+            pi, di = idx[p], idx[d]
+            comp.stream_fed[di] = True
+            if comp.coflow_of[pi] < 0:
+                stream_in[di].append(pi)
+                stream_out[pi].append(di)
+    comp.stream_in = [tuple(v) for v in stream_in]
+    comp.stream_out = [tuple(v) for v in stream_out]
+    comp.has_streaming = any(stream_out)
+
+    # start gating compiled to counters + decrement lists
+    # one fused start-gate counter per task: unmet barrier preds +
+    # coflow preconditions + member-sync preds (all non-negative and all
+    # required to reach zero, so their sum gates identically)
+    comp.init_gate = [0] * n
+    gate_dec: list[list[int]] = [[] for _ in range(n)]
+    cof_dec: list[list[int]] = [[] for _ in range(len(comp.coflows))]
+    gate_stream: list[tuple[int, ...]] = [()] * n
+    for i, nm in enumerate(names):
+        stream = []
+        for p in g.preds(nm):
+            pi = idx[p]
+            ci = comp.coflow_of[pi]
+            if ci >= 0:
+                comp.init_gate[i] += 1
+                cof_dec[ci].append(i)
+            elif g.effective_pipelined(g.edges[(p, nm)]):
+                stream.append(pi)
+            else:
+                comp.init_gate[i] += 1
+                gate_dec[pi].append(i)
+        if stream:
+            gate_stream[i] = tuple(stream)
+        ci = comp.coflow_of[i]
+        if ci >= 0:
+            # synchronized start: every member's preds must be done
+            for m in comp.coflows[ci]:
+                for p in g.preds(names[m]):
+                    comp.init_gate[i] += 1
+                    gate_dec[idx[p]].append(i)
+    comp.gate_dec = [tuple(v) for v in gate_dec]
+    comp.cof_dec = [tuple(v) for v in cof_dec]
+    comp.gate_stream = gate_stream
+
+    coflow_fed_by: list[list[int]] = [[] for _ in range(n)]
+    for ci, c in enumerate(comp.coflows):
+        for m in c:
+            for p in g.preds(names[m]):
+                coflow_fed_by[idx[p]].append(ci)
+    comp.coflow_fed_by = [tuple(v) for v in coflow_fed_by]
+
+    comp.succ = [tuple(idx[s] for s in g.succs(nm)) for nm in names]
+    # tasks whose start-gate counters begin at zero: the only candidates
+    # that can possibly pass the t=0 gating filter (everything else is
+    # re-enqueued by the completion that decrements its counter)
+    comp.roots = [i for i in range(n) if not comp.init_gate[i]]
+
+    comp.np_ready = np is not None
+    if comp.np_ready:
+        comp.size_a = np.array(comp.size, dtype=np.float64)
+        comp.name_rank_a = np.array(comp.name_rank, dtype=np.int64)
+        comp.net_ids_a = np.array(comp.net_ids, dtype=np.int64)
+        ptr = [0]
+        flat: list[int] = []
+        for links in comp.flow_links:
+            flat.extend(links)
+            ptr.append(len(flat))
+        comp.fl_ptr = np.array(ptr, dtype=np.int64)
+        comp.fl_flat = np.array(flat, dtype=np.int64)
+        comp.link_bw_a = np.array(comp.link_bw, dtype=np.float64)
+        # full-group fill structures: sorted rows / incidence / link
+        # index for the group "every flow", bit-identical to what the
+        # fill would build for it per call
+        order = sorted(range(comp.n_net),
+                       key=lambda p: comp.name_rank[comp.net_ids[p]])
+        comp.full_sg_pos = np.array(order, dtype=np.int64)
+        comp.full_sorted_ids = [comp.net_ids[p] for p in order]
+        comp.full_row_links = [list(comp.flow_links[p]) for p in order]
+        by_link: dict[int, list[int]] = {}
+        for r, links in enumerate(comp.full_row_links):
+            for l in links:
+                by_link.setdefault(l, []).append(r)
+        comp.full_by_link = by_link
+        comp.full_counts = np.bincount(
+            _gather(comp.fl_ptr, comp.fl_flat, comp.full_sg_pos),
+            minlength=comp.n_links).astype(np.float64)
+    else:
+        comp.size_a = comp.name_rank_a = comp.net_ids_a = None
+        comp.fl_ptr = comp.fl_flat = comp.link_bw_a = None
+        comp.full_sorted_ids = comp.full_sg_pos = None
+        comp.full_row_links = comp.full_by_link = comp.full_counts = None
+    return comp
+
+
+def _gather(ptr, flat, pos):
+    """Concatenate CSR segments ``flat[ptr[p]:ptr[p+1]]`` for ``pos``."""
+    lens = ptr[pos + 1] - ptr[pos]
+    total = int(lens.sum())
+    if total == 0:
+        return np.empty(0, dtype=flat.dtype)
+    prefix = np.concatenate(([0], np.cumsum(lens)[:-1]))
+    out_idx = np.repeat(ptr[pos] - prefix, lens) \
+        + np.arange(total, dtype=np.int64)
+    return flat[out_idx]
+
+
+def _pick_bottleneck(ratio, eps=EPS):
+    """The scalar waterfill's bottleneck scan, batched.
+
+    The scalar loop keeps the first link whose ratio beats the running
+    best by more than EPS; every accepted update is a strict prefix
+    minimum of the ratio sequence, so scanning only those (a handful —
+    ~H(n) of a random order) reproduces the selection bit-exactly.
+    """
+    pm = np.minimum.accumulate(ratio)
+    cmask = np.empty(len(ratio), dtype=bool)
+    cmask[0] = True
+    cmask[1:] = ratio[1:] < pm[:-1]
+    best_ratio, best = math.inf, -1
+    for j in np.nonzero(cmask)[0].tolist():
+        rj = ratio[j]
+        if rj < best_ratio - eps:
+            best_ratio, best = rj, j
+    return best, float(best_ratio)
+
+
+def _wf_core_np(sg_ids, fl_ptr, fl_flat, sg_pos, link_order, residual,
+                rate, weights, seq, prep=None):
+    """Vectorized progressive fill of one sorted flow group.
+
+    ``sg_ids[r]`` is the id written into ``rate``/``seq`` for sorted row
+    ``r``; ``sg_pos[r]`` its CSR row.  ``link_order`` fixes the bottleneck
+    iteration order (the calendar core's residual insertion order) and
+    ``residual`` is the full per-link array, mutated in place.  Freeze
+    order is identical to the scalar waterfill: batches come off the
+    bottleneck link's flow list in sorted-group order.  ``rate`` may be a
+    list or an array — frozen batches write scalars.  ``seq`` may be
+    None when the caller never replays the freeze log (fair policy).
+    ``prep`` optionally supplies precomputed ``(row_links, by_link,
+    counts)`` for this exact group (the compile-level full-flow-set
+    structures), skipping the per-call incidence builds.
+    """
+    k = len(sg_pos)
+    if k == 0:
+        return
+    L = len(residual)
+    if prep is not None and weights is None:
+        row_links, by_link, counts0 = prep
+        wsum = counts0.copy()
+    else:
+        cat = _gather(fl_ptr, fl_flat, sg_pos)
+        lens = fl_ptr[sg_pos + 1] - fl_ptr[sg_pos]
+        if weights is None:
+            wsum = np.bincount(cat, minlength=L).astype(np.float64)
+        else:
+            row = np.repeat(np.arange(k, dtype=np.int64), lens)
+            wsum = np.zeros(L)
+            np.add.at(wsum, cat, weights[row])
+        cat_list = cat.tolist()
+        ptr_list = np.concatenate(([0], np.cumsum(lens))).tolist()
+        row_links = [cat_list[ptr_list[r]:ptr_list[r + 1]]
+                     for r in range(k)]
+        by_link = {}
+        for r in range(k):             # row order == sorted-group order
+            for l in row_links[r]:
+                by_link.setdefault(l, []).append(r)
+    unfrozen = [True] * k
+    remaining = k
+
+    def rows_on(link: int) -> list[int]:
+        fl = by_link.get(link)
+        if not fl:
+            return []
+        return [r for r in fl if unfrozen[r]]
+
+    def freeze_unit(rows: list[int], alloc: float) -> int:
+        if seq is None:
+            for r in rows:
+                rate[sg_ids[r]] = alloc
+                unfrozen[r] = False
+        else:
+            for r in rows:
+                fid = sg_ids[r]
+                rate[fid] = alloc
+                seq.append((fid, alloc))
+                unfrozen[r] = False
+        if len(rows) >= 32:
+            sub = _gather(fl_ptr, fl_flat,
+                          sg_pos[np.array(rows, dtype=np.int64)])
+            delta = np.bincount(sub, minlength=L).astype(np.float64)
+            tl = np.nonzero(delta)[0]
+            residual[tl] = np.maximum(residual[tl] - alloc * delta[tl],
+                                      0.0)
+            wsum[tl] -= delta[tl]
+        else:
+            for r in rows:
+                for l in row_links[r]:
+                    v = residual[l] - alloc
+                    residual[l] = v if v > 0.0 else 0.0
+                    wsum[l] -= 1.0
+        return len(rows)
+
+    while remaining:
+        rsel = residual[link_order]
+        wsel = wsum[link_order]
+        vidx = np.nonzero(wsel > EPS)[0]
+        if len(vidx) == 0:
+            for r in range(k):
+                if unfrozen[r]:
+                    fid = sg_ids[r]
+                    rate[fid] = 0.0
+                    if seq is not None:
+                        seq.append((fid, 0.0))
+            return
+        ratio = rsel[vidx] / wsel[vidx]
+        bj, best_ratio = _pick_bottleneck(ratio)
+        if weights is None:
+            # Freeze the whole run of links tied bitwise with the pick,
+            # in link order.  After freezing a bottleneck at ratio a,
+            # every remaining link's ratio stays >= a, and an exactly
+            # tied link stays exactly tied under exact arithmetic — the
+            # scalar fill would select precisely these links on its next
+            # iterations.  Each link is re-checked before freezing; any
+            # floating-point drift breaks out to a full rescan, which
+            # re-derives the scalar scan's choice.
+            froze_any = False
+            for t in np.nonzero(ratio == best_ratio)[0].tolist():
+                if t < bj:
+                    continue
+                link = int(link_order[vidx[t]])
+                w_t = wsum[link]
+                if w_t <= EPS:
+                    continue
+                if not froze_any:
+                    froze_any = True       # the pick itself: no recheck
+                elif residual[link] / w_t != best_ratio:
+                    break
+                rows = rows_on(link)
+                if len(rows) == 0:         # numerical guard; wsum tracks
+                    wsum[link] = 0.0       # unfrozen, so normally nonzero
+                    continue
+                remaining -= freeze_unit(rows, best_ratio)
+                if not remaining:
+                    break
+            if not froze_any:              # guard: stale wsum on the pick
+                wsum[int(link_order[vidx[bj]])] = 0.0
+            continue
+        best_link = int(link_order[vidx[bj]])
+        rows = rows_on(best_link)
+        if not rows:                       # numerical guard (see above)
+            wsum[best_link] = 0.0
+            continue
+        for r in rows:
+            fid = sg_ids[r]
+            alloc = float(weights[r]) * best_ratio
+            rate[fid] = alloc
+            if seq is not None:
+                seq.append((fid, alloc))
+            unfrozen[r] = False
+            for l in row_links[r]:
+                v = residual[l] - alloc
+                residual[l] = v if v > 0.0 else 0.0
+        remaining -= len(rows)
+        if remaining:
+            # the scalar fill re-sums weights per iteration — recompute
+            # (not decrement) so the accumulation order matches
+            um = np.array(unfrozen, dtype=bool)[row]
+            wsum = np.zeros(L)
+            np.add.at(wsum, cat[um], weights[row[um]])
+
+
+def _wf_core_py(sg_ids, flow_links, sg_pos, link_order, residual, rate,
+                weights, seq):
+    """Pure-stdlib fallback: simulator.waterfill ported to interned ids.
+
+    Same freeze order and per-flow sequential subtraction as the scalar
+    string-domain fill; ``link_order`` plays the residual dict's
+    insertion-order role.
+    """
+    k = len(sg_pos)
+    if k == 0:
+        return
+    unfrozen = list(range(k))
+    unfrozen_set = set(unfrozen)
+    by_link: dict[int, list[int]] = {}
+    for r in unfrozen:
+        for l in flow_links[sg_pos[r]]:
+            by_link.setdefault(l, []).append(r)
+    if weights is None:
+        counts = {l: float(len(fl)) for l, fl in by_link.items()}
+    while unfrozen:
+        best_l, best_ratio = None, math.inf
+        for l in link_order:
+            fl = by_link.get(l)
+            if not fl:
+                continue
+            if weights is None:
+                w = counts[l]
+            else:
+                w = sum(weights[r] for r in fl if r in unfrozen_set)
+            if w > EPS:
+                ratio = residual[l] / w
+                if ratio < best_ratio - EPS:
+                    best_l, best_ratio = l, ratio
+        if best_l is None:
+            for r in unfrozen:
+                fid = sg_ids[r]
+                rate[fid] = 0.0
+                if seq is not None:
+                    seq.append((fid, 0.0))
+            return
+        best_ratio = float(best_ratio)   # residual may be an ndarray —
+        #             keep rates/seq native floats for the event loop
+        frozen_now = [r for r in by_link[best_l] if r in unfrozen_set]
+        for r in frozen_now:
+            alloc = best_ratio if weights is None \
+                else weights[r] * best_ratio
+            fid = sg_ids[r]
+            rate[fid] = alloc
+            if seq is not None:
+                seq.append((fid, alloc))
+            for l in flow_links[sg_pos[r]]:
+                v = residual[l] - alloc
+                residual[l] = v if v > 0.0 else 0.0
+                if weights is None:
+                    counts[l] -= 1.0
+        unfrozen_set.difference_update(frozen_now)
+        unfrozen = [r for r in unfrozen if r in unfrozen_set]
+
+
+def vectorized_waterfill(group, paths, weight, residual, rates):
+    """Drop-in vectorized :func:`repro.core.simulator.waterfill`.
+
+    Same contract: mutates ``residual`` (a dict whose insertion order is
+    the bottleneck iteration order) and ``rates``; returns the freeze
+    sequence in identical order.  Values agree with the scalar fill to
+    within EPS (batched subtraction associates differently at the last
+    ulp); the freeze order is identical.  Falls back to the scalar fill
+    when NumPy is absent.
+    """
+    if np is None:
+        from repro.core.simulator import waterfill
+        return waterfill(group, paths, weight, residual, rates)
+    names_sorted = sorted(group)
+    k = len(names_sorted)
+    if k == 0:
+        return []
+    link_ids = {l: i for i, l in enumerate(residual)}
+    res_arr = np.array([float(v) for v in residual.values()])
+    ptr = [0]
+    flat: list[int] = []
+    for nm in names_sorted:
+        for l in paths[nm]:
+            flat.append(link_ids[l])
+        ptr.append(len(flat))
+    fl_ptr = np.array(ptr, dtype=np.int64)
+    fl_flat = np.array(flat, dtype=np.int64)
+    sg_ids = list(range(k))
+    sg_pos = np.arange(k, dtype=np.int64)
+    link_order = np.arange(len(link_ids), dtype=np.int64)
+    rate_arr = [0.0] * k
+    weights = None if weight is None \
+        else np.array([float(weight(nm)) for nm in names_sorted])
+    seq_ids: list[tuple[int, float]] = []
+    _wf_core_np(sg_ids, fl_ptr, fl_flat, sg_pos, link_order, res_arr,
+                rate_arr, weights, seq_ids)
+    for l, li in link_ids.items():
+        residual[l] = float(res_arr[li])
+    seq = [(names_sorted[i], float(a)) for i, a in seq_ids]
+    for nm, a in seq:
+        rates[nm] = a
+    return seq
+
+
+def array_run(sim, horizon: float = 1e15):
+    """Run ``sim`` to completion on the compiled flat arrays.
+
+    A faithful translation of ``Simulator.calendar_run`` — same event
+    structure, gating semantics, allocation and tie-breaking orders — on
+    integer-indexed state.  See the module docstring for where the two
+    may differ in floating-point association (last-ulp only).
+    """
+    from repro.core.simulator import SimResult
+
+    comp = compile_sim(sim)
+    use_np = comp.np_ready and np is not None
+    n = comp.n
+    names = comp.names
+    size, unit, nu = comp.size, comp.unit, comp.nu
+    is_comp = comp.is_compute
+    net_pos, net_ids = comp.net_pos, comp.net_ids
+    flow_links = comp.flow_links
+    stream_in, stream_out = comp.stream_in, comp.stream_out
+    gate_stream = comp.gate_stream
+    coflow_of, coflows = comp.coflow_of, comp.coflows
+    succ = comp.succ
+    policy = sim.policy
+    prio_get = sim.prio.get
+    inf = math.inf
+    heappush, heappop = heapq.heappush, heapq.heappop
+
+    # -- per-run priority/release arrays -------------------------------
+    if policy == "fair":
+        cls_net: list = [None] * comp.n_net
+    else:
+        cls_net = [0.0 if comp.stream_fed[i] else prio_get(names[i], 0.0)
+                   for i in net_ids]
+    prio_arr = [prio_get(nm, 0.0) for nm in names]
+    if use_np:
+        order = np.lexsort((comp.name_rank_a, np.array(prio_arr)))
+        dr = np.empty(n, dtype=np.int64)
+        dr[order] = np.arange(n, dtype=np.int64)
+        dispatch_rank = dr.tolist()
+    else:
+        order = sorted(range(n),
+                       key=lambda i: (prio_arr[i], comp.name_rank[i]))
+        dispatch_rank = [0] * n
+        for r, i in enumerate(order):
+            dispatch_rank[i] = r
+    rel = [0.0] * n
+    for nm, v in sim.releases.items():
+        rel[comp.idx[nm]] = v
+
+    # -- dynamic state (flat lists of float64/int; scalar access in the
+    # branchy event code is list-speed, batch math converts on demand) --
+    work = [0.0] * n
+    rate = [0.0] * n
+    cap = list(size)                 # cap_of default = size
+    runnable_set: set[int] = set()   # net positions, started & unfinished
+    starved_net = [False] * comp.n_net
+    started: list = [None] * n
+    finished: list = [None] * n
+    has_slot = [False] * n
+    starved = [False] * n
+    d_units = [0] * n
+    slots_free = list(comp.slot_cap)
+    cof_left = [len(c) for c in coflows]
+    n_gate = list(comp.init_gate)
+    active: set[int] = set()
+    waiting_slot: dict[int, set[int]] = {}
+    candidates: set[int] = set()
+    freed: set[int] = set()
+    touched: set[int] = set()        # needs a starvation re-check
+    touched_sched: set[int] = set()  # only needs schedule_event (fresh
+    #   capless starts, rate changes: their starvation state provably
+    #   cannot have flipped, so the re-check loop skips them)
+    dirty_classes: set = set()
+    alloc_log: dict = {}
+    heap: list = []
+    stamp = [0] * n
+    unfinished = n
+    now = 0.0
+
+    def delivered_fraction(p: int) -> float:
+        if finished[p] is not None:
+            return 1.0
+        sz = size[p]
+        if sz <= 0:
+            return 1.0
+        u = unit[p]
+        return min(1.0, math.floor(work[p] / u + EPS) * u / sz)
+
+    def start_gate_ok(i: int) -> bool:
+        if n_gate[i]:
+            return False
+        for p in gate_stream[i]:
+            if delivered_fraction(p) + EPS < 1.0 / nu[i]:
+                return False
+        return True
+
+    def recompute_cap(i: int) -> float:
+        c = size[i]
+        nui = nu[i]
+        eu = unit[i]
+        for p in stream_in[i]:
+            if finished[p] is None:
+                enabled = math.floor(delivered_fraction(p) * nui + EPS)
+                c2 = enabled * eu
+                if c2 < c:
+                    c = c2
+        return c
+
+    pending: list = []               # kind-1 entries awaiting the heap
+    _defer = pending.append
+
+    def schedule_event(i: int) -> None:
+        stamp[i] += 1
+        r = rate[i]
+        if finished[i] is not None or started[i] is None or r <= EPS:
+            active.discard(i)
+            return
+        active.add(i)
+        sz = size[i]
+        w = work[i]
+        u = unit[i]
+        if u >= sz and cap[i] >= sz:
+            # common case: no unit boundaries, cap at size — the sole
+            # target is completion (bit-identical to the general fold)
+            if sz > w + EPS:
+                _defer((float(now + (sz - w) / r), 1, i, stamp[i]))
+            return
+        if u < sz:
+            tgt = (math.floor(w / u + EPS) + 1) * u
+            if tgt > sz:
+                tgt = sz
+        else:
+            tgt = sz
+        best = inf
+        if tgt > w + EPS:
+            best = (tgt - w) / r
+        if sz > w + EPS:
+            d = (sz - w) / r
+            if d < best:
+                best = d
+        c = cap[i]
+        if c > w + EPS:
+            d = (c - w) / r
+            if d < best:
+                best = d
+        if best < inf:
+            _defer((float(now + best), 1, i, stamp[i]))
+
+    def flush_events() -> None:
+        """Move deferred entries into the heap: one heapify for a mega-
+        batch (same entry set, so the event calendar is unchanged —
+        only the arbitrary pop order of equal-time entries may differ,
+        which batch collection absorbs), individual pushes otherwise."""
+        if len(pending) > 1024 and len(pending) * 2 > len(heap):
+            heap.extend(pending)
+            heapq.heapify(heap)
+        else:
+            for e in pending:
+                heappush(heap, e)
+        pending.clear()
+
+    slot_of = comp.slot_of
+    gate_dec = comp.gate_dec
+
+    def complete(i: int) -> None:
+        nonlocal unfinished
+        finished[i] = now
+        unfinished -= 1
+        active.discard(i)
+        if has_slot[i]:
+            si = slot_of[i]
+            slots_free[si] += 1
+            has_slot[i] = False
+            freed.add(si)
+        if is_comp[i]:
+            rate[i] = 0.0
+        else:
+            pos = net_pos[i]
+            runnable_set.discard(pos)
+            if rate[i]:
+                rate[i] = 0.0
+                dirty_classes.add(cls_net[pos])
+        candidates.update(succ[i])
+        for s in gate_dec[i]:
+            n_gate[s] -= 1
+        for c in stream_out[i]:
+            if started[c] is not None and finished[c] is None:
+                nc = recompute_cap(c)
+                if nc != cap[c]:
+                    cap[c] = nc
+                    touched.add(c)
+        if coflows:
+            ci = coflow_of[i]
+            if ci >= 0:
+                cof_left[ci] -= 1
+                if cof_left[ci] == 0:
+                    for t in comp.cof_dec[ci]:
+                        n_gate[t] -= 1
+                    for m in coflows[ci]:
+                        candidates.update(succ[m])
+            for ci2 in comp.coflow_fed_by[i]:
+                candidates.update(coflows[ci2])
+
+    def complete_bulk(ids: list[int]) -> None:
+        """complete() over a large batch: per-task effects are identical
+        (each is independent of the others' — see complete()), but the
+        set-membership bookkeeping is batched through C-level updates."""
+        nonlocal unfinished
+        unfinished -= len(ids)
+        active.difference_update(ids)
+        gone_pos: list[int] = []
+        succs: list[tuple] = []
+        for i in ids:
+            finished[i] = now
+            if has_slot[i]:
+                si = slot_of[i]
+                slots_free[si] += 1
+                has_slot[i] = False
+                freed.add(si)
+            if is_comp[i]:
+                rate[i] = 0.0
+            else:
+                pos = net_pos[i]
+                gone_pos.append(pos)
+                if rate[i]:
+                    rate[i] = 0.0
+                    dirty_classes.add(cls_net[pos])
+            if succ[i]:
+                succs.append(succ[i])
+            for s in gate_dec[i]:
+                n_gate[s] -= 1
+            for c in stream_out[i]:
+                if started[c] is not None and finished[c] is None:
+                    nc = recompute_cap(c)
+                    if nc != cap[c]:
+                        cap[c] = nc
+                        touched.add(c)
+            if coflows:
+                ci = coflow_of[i]
+                if ci >= 0:
+                    cof_left[ci] -= 1
+                    if cof_left[ci] == 0:
+                        for t in comp.cof_dec[ci]:
+                            n_gate[t] -= 1
+                        for m in coflows[ci]:
+                            candidates.update(succ[m])
+                for ci2 in comp.coflow_fed_by[i]:
+                    candidates.update(coflows[ci2])
+        runnable_set.difference_update(gone_pos)
+        candidates.update(chain.from_iterable(succs))
+
+    def on_start(i: int) -> None:
+        c = size[i]
+        if stream_in[i]:
+            c = recompute_cap(i)
+            cap[i] = c
+        if stream_out[i]:
+            d_units[i] = 0
+            for c2 in stream_out[i]:
+                candidates.add(c2)   # first-unit gate may already pass
+        is_starved = c <= work[i] + EPS
+        starved[i] = is_starved
+        if is_comp[i]:
+            rate[i] = 0.0 if is_starved else 1.0
+        else:
+            pos = net_pos[i]
+            starved_net[pos] = is_starved
+            runnable_set.add(pos)
+            dirty_classes.add(cls_net[pos])
+        # only a pipelined-input cap can move between now and the
+        # starvation pass — capless tasks can't flip
+        (touched if stream_in[i] else touched_sched).add(i)
+
+    def process_starts() -> None:
+        while True:
+            # gate counters inlined; stream-fraction gates (rare) go
+            # through start_gate_ok
+            startable = [i for i in candidates
+                         if started[i] is None
+                         and rel[i] <= now + EPS
+                         and not n_gate[i]
+                         and (not gate_stream[i] or start_gate_ok(i))]
+            candidates.clear()
+            if not startable:
+                return
+            zero_done = False
+            if not any(map(is_comp.__getitem__, startable)):
+                # flow-only pass: no slot contention, so dispatch order
+                # is immaterial (all effects are commutative set/flag
+                # updates) — skip the sort, inline the common case and
+                # batch the set bookkeeping
+                fresh_pos: list[int] = []
+                for i in startable:
+                    started[i] = now
+                    if stream_in[i] or stream_out[i] or size[i] <= EPS:
+                        on_start(i)
+                        if size[i] <= EPS:
+                            complete(i)
+                            zero_done = True
+                        continue
+                    pos = net_pos[i]
+                    starved[i] = False
+                    starved_net[pos] = False
+                    fresh_pos.append(pos)
+                    dirty_classes.add(cls_net[pos])
+                    touched_sched.add(i)
+                runnable_set.update(fresh_pos)
+            else:
+                for i in sorted(startable, key=dispatch_rank.__getitem__):
+                    if is_comp[i]:
+                        si = slot_of[i]
+                        if slots_free[si] >= 1:
+                            slots_free[si] -= 1
+                            has_slot[i] = True
+                            started[i] = now
+                            w = waiting_slot.get(si)
+                            if w is not None:
+                                w.discard(i)
+                        else:
+                            waiting_slot.setdefault(si, set()).add(i)
+                            continue
+                    else:
+                        started[i] = now
+                    on_start(i)
+                    if size[i] <= EPS:
+                        complete(i)
+                        zero_done = True
+            for si in freed:
+                candidates.update(waiting_slot.get(si, ()))
+            freed.clear()
+            if not zero_done and not candidates:
+                return
+
+    def group_weights(fids):
+        """MADD weights (∝ remaining work) for a coflow-bearing group."""
+        out = []
+        for fid in fids:
+            ci = coflow_of[fid]
+            if ci < 0:
+                out.append(1.0)
+                continue
+            rem = {m: size[m] - work[m] for m in coflows[ci]
+                   if finished[m] is None}
+            mx = max(rem.values(), default=1.0)
+            out.append(max(rem.get(fid, 0.0) / mx, 1e-6)
+                       if mx > 0 else 1.0)
+        return out
+
+    any_coflow = bool(coflows)
+
+    def allocate() -> set:
+        """Waterfill classes from the lowest dirty one up (replaying the
+        logged freeze sequences of unchanged classes below), exactly as
+        the calendar core's allocate().  Groups of ≥48 flows use the
+        vectorized fill; smaller groups stay on the scalar port, whose
+        constant factors beat NumPy-call overhead at that size."""
+        changed: set[int] = set()
+        flows_pos = [p for p in sorted(runnable_set)
+                     if not starved_net[p]]
+        residual = comp.link_bw_a.copy() if use_np \
+            else list(comp.link_bw)
+        seen: set[int] = set()
+        link_order: list[int] = []
+        for p in flows_pos:
+            for l in flow_links[p]:
+                if l not in seen:
+                    seen.add(l)
+                    link_order.append(l)
+        lo_arr = None
+        if policy == "fair":
+            classes: list = [None]
+            lowest = None
+        else:
+            classes = sorted({cls_net[p] for p in flows_pos})
+            lowest = min(dirty_classes) if dirty_classes else None
+        new_log: dict = {}
+        for cls in classes:
+            if lowest is None or cls >= lowest or cls not in alloc_log:
+                # the freeze log is only ever replayed under the
+                # priority policy (fair always refills) — skip building
+                # it when it can never be read
+                seq = None if policy == "fair" else []
+                gpos = flows_pos if cls is None else \
+                    [p for p in flows_pos if cls_net[p] == cls]
+                # vector fill only when both the flow group and the link
+                # set are wide enough to amortize the NumPy call overhead
+                # (few shared links ⇒ few freeze iterations ⇒ the scalar
+                # port's O(links·iters) scan is already cheap)
+                big = use_np and len(gpos) >= 48 and len(link_order) >= 48
+                full = big and len(gpos) == comp.n_net
+                if full:
+                    sg_pos_a = comp.full_sg_pos
+                    sg_ids = comp.full_sorted_ids
+                elif big:
+                    ga = np.array(gpos, dtype=np.int64)
+                    o = np.argsort(comp.name_rank_a[comp.net_ids_a[ga]],
+                                   kind="stable")
+                    sg_pos_a = ga[o]
+                    sg_ids = comp.net_ids_a[sg_pos_a].tolist()
+                else:
+                    sg_pos = sorted(
+                        gpos, key=lambda p: comp.name_rank[net_ids[p]])
+                    sg_ids = [net_ids[p] for p in sg_pos]
+                gids = [net_ids[p] for p in gpos]
+                old = [rate[f] for f in gids]
+                weights = None
+                if any_coflow and any(coflow_of[f] >= 0 for f in sg_ids):
+                    weights = group_weights(sg_ids)
+                if big:
+                    if lo_arr is None:
+                        lo_arr = np.array(link_order, dtype=np.int64)
+                    _wf_core_np(sg_ids, comp.fl_ptr, comp.fl_flat,
+                                sg_pos_a, lo_arr, residual, rate,
+                                None if weights is None
+                                else np.array(weights), seq,
+                                prep=((comp.full_row_links,
+                                       comp.full_by_link,
+                                       comp.full_counts)
+                                      if full and weights is None
+                                      else None))
+                else:
+                    _wf_core_py(sg_ids, flow_links, sg_pos, link_order,
+                                residual, rate, weights, seq)
+                changed.update(f for f, o in zip(gids, old)
+                               if rate[f] != o)
+                new_log[cls] = seq
+            else:
+                # unchanged class: replay the logged freeze sequence
+                for fid, alloc in alloc_log[cls]:
+                    rate[fid] = alloc
+                    for l in flow_links[net_pos[fid]]:
+                        v = residual[l] - alloc
+                        residual[l] = v if v > 0.0 else 0.0
+                new_log[cls] = alloc_log[cls]
+        alloc_log.clear()
+        alloc_log.update(new_log)
+        dirty_classes.clear()
+        return changed
+
+    # -- initialisation ------------------------------------------------
+    for nm, v in sim.releases.items():
+        if v > EPS:
+            heappush(heap, (float(v), 0, comp.idx[nm], 0))
+    candidates.update(comp.roots)
+    process_starts()
+    if dirty_classes:
+        touched_sched.update(allocate())
+    for i in touched:
+        schedule_event(i)
+    for i in touched_sched:
+        if i not in touched:
+            schedule_event(i)
+    flush_events()
+    touched.clear()
+    touched_sched.clear()
+
+    # -- main loop -----------------------------------------------------
+    guard = 0
+    max_iters = 10000 * (n + 1) + comp.nu_sum
+    while unfinished:
+        guard += 1
+        if guard > max_iters:
+            raise RuntimeError("simulator did not converge (livelock?)")
+
+        t_next = None
+        while heap:
+            tm, kind, i, stp = heap[0]
+            if kind == 1 and (stamp[i] != stp or finished[i] is not None):
+                heappop(heap)
+                continue
+            if kind == 0 and started[i] is not None:
+                heappop(heap)
+                continue
+            t_next = tm
+            break
+        if t_next is None:
+            pend = [names[i] for i in range(n) if finished[i] is None]
+            raise RuntimeError(f"deadlock at t={now:.6g}: {pend}")
+        if t_next > horizon:
+            t_next = horizon
+        dt = t_next - now
+        if dt > 0.0:
+            for i in active:
+                w = work[i] + rate[i] * dt
+                sz = size[i]
+                work[i] = sz if w > sz else w
+        now = t_next
+
+        batch: list[int] = []
+        while heap and heap[0][0] <= t_next:
+            tm, kind, i, stp = heappop(heap)
+            if kind == 1 and stamp[i] == stp and finished[i] is None:
+                batch.append(i)
+            elif kind == 0 and started[i] is None:
+                candidates.add(i)
+
+        # completions (a task reaching its cap/size keeps rate > 0 until
+        # this very event — scan the active set)
+        finished_now = [i for i in active if work[i] >= size[i] - EPS]
+        if len(finished_now) >= 128:
+            complete_bulk(finished_now)
+        else:
+            for i in finished_now:
+                complete(i)
+
+        # unit-boundary crossings feed streaming consumers
+        if comp.has_streaming:
+            for i in batch:
+                if not stream_out[i] or finished[i] is not None:
+                    continue
+                du = math.floor(work[i] / unit[i] + EPS)
+                if du != d_units[i]:
+                    d_units[i] = du
+                    for c in stream_out[i]:
+                        if started[c] is None:
+                            candidates.add(c)
+                        elif finished[c] is None:
+                            nc = recompute_cap(c)
+                            if nc != cap[c]:
+                                cap[c] = nc
+                                touched.add(c)
+
+        for si in freed:
+            candidates.update(waiting_slot.get(si, ()))
+        freed.clear()
+        if candidates:
+            process_starts()
+
+        # starvation flips (cap moved, or work caught up with cap)
+        for i in touched.union(x for x in batch
+                               if finished[x] is None):
+            if started[i] is None or finished[i] is not None:
+                continue
+            is_starved = cap[i] <= work[i] + EPS
+            if is_starved != starved[i]:
+                starved[i] = is_starved
+                if is_comp[i]:
+                    rate[i] = 0.0 if is_starved else 1.0
+                else:
+                    pos = net_pos[i]
+                    starved_net[pos] = is_starved
+                    if is_starved:
+                        rate[i] = 0.0
+                    dirty_classes.add(cls_net[pos])
+            touched.add(i)
+
+        # MADD weights drift with remaining work
+        if coflows:
+            for ci, c in enumerate(coflows):
+                if any(started[m] is not None and finished[m] is None
+                       for m in c):
+                    for m in c:
+                        dirty_classes.add(cls_net[net_pos[m]])
+
+        if dirty_classes:
+            touched_sched.update(allocate())
+
+        for i in touched:
+            schedule_event(i)
+        for i in touched_sched:
+            if i not in touched:
+                schedule_event(i)
+        for i in batch:
+            if finished[i] is None and i not in touched \
+                    and i not in touched_sched:
+                schedule_event(i)
+        flush_events()
+        touched.clear()
+        touched_sched.clear()
+
+    # started/finished already hold native floats (heap event times)
+    start = dict(zip(names, started))
+    finish = dict(zip(names, finished))
+    makespan = max(finished, default=0.0)
+    if comp.single_job:
+        jobs = {comp.job[0]: makespan} if n else {}
+    else:
+        jobs = {}
+        for i in range(n):
+            j = comp.job[i]
+            f = finished[i]
+            if f > jobs.get(j, -1.0):   # f >= 0, so first visit always sets
+                jobs[j] = f
+    return SimResult(start=start, finish=finish, makespan=makespan,
+                     job_completion=jobs)

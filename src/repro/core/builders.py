@@ -18,12 +18,13 @@ tests can validate the claims numerically:
 """
 from __future__ import annotations
 
+import random
 from typing import Optional, Sequence
 
 from repro.core.cluster import Cluster
 from repro.core.fabric import Topology
 from repro.core.graph import MXDAG
-from repro.core.task import compute, flow
+from repro.core.task import MXTask, compute, flow
 
 
 # ----------------------------------------------------------------------
@@ -336,6 +337,85 @@ def fat_tree_shuffle(k: int = 8, *, stride: int = 2,
             g.add_edge(m, f)
             g.add_edge(f, reduces[j])
     return g, Cluster.from_topology(topo)
+
+
+# ----------------------------------------------------------------------
+# Graphene-style random layered DAG (cluster-scale synthetic workload)
+# ----------------------------------------------------------------------
+def random_layered(n_tasks: int = 20000, *, n_hosts: int = 256,
+                   min_width: int = 64, max_width: int = 256,
+                   fanout: int = 2, seed: int = 0,
+                   job: str = "job0") -> MXDAG:
+    """Random layered MXDAG of roughly ``n_tasks`` tasks (Graphene scale).
+
+    Graphene ("Do the Hard Stuff First", Grandl et al.) schedules
+    production DAGs with tens of thousands of vertices; this generator
+    produces comparable synthetic inputs: a chain of stages whose widths
+    and task sizes are drawn from a seeded RNG, where every task reads
+    from ``fanout`` tasks of the previous stage through an explicit
+    shuffle flow.  The randomness is *stage-structured*, mirroring
+    production DAGs: each layer draws its width (within
+    ``[min_width, max_width]``), one compute size and one flow size
+    (stages run many clones of one task), and a random rotation of the
+    strided producer→consumer shuffle — rather than sampling every edge
+    independently, which would desynchronize every flow completion into
+    its own rate-reallocation event and bears no resemblance to staged
+    cluster jobs.  Tasks are spread over ``n_hosts`` hosts (one CPU slot
+    each); the graph is a pure function of its arguments.
+
+    Stage widths follow production shape: jobs start wide (ingest) and
+    narrow through aggregation stages, with occasional re-expansions
+    (a new wide input joining).  Mostly non-increasing widths also keep
+    the simulation event-dense rather than event-degenerate: a stage no
+    wider than its producer keeps per-consumer fan-in the binding
+    constraint, so stage flows finish in a bounded number of waves
+    instead of splintering into per-flow completion events.
+
+    Total task count is computes + flows ≈ ``n_tasks`` (one compute
+    contributes ``1 + fanout`` tasks beyond the first layer).
+    """
+    if n_tasks < 2 or fanout < 1 or min_width < 1 \
+            or max_width < min_width or n_hosts < max_width:
+        raise ValueError("need n_tasks >= 2, fanout >= 1, "
+                         "1 <= min_width <= max_width <= n_hosts")
+    rng = random.Random(seed)
+    g = MXDAG(f"layered{n_tasks}_s{seed}")
+    hosts = [f"h{i}" for i in range(n_hosts)]
+    prev: list[MXTask] = []
+    total = 0
+    layer = 0
+    width = 0
+    while total < n_tasks:
+        if not prev or rng.random() < 0.15:
+            width = max_width                    # ingest / re-expansion
+        elif rng.random() < 0.5:
+            pass                                 # plateau: width persists
+        else:
+            width = rng.randint(min_width, width)   # aggregation narrows
+        csize = round(rng.uniform(0.5, 2.0), 6)
+        fsize = round(rng.uniform(0.25, 1.0), 6)
+        rot = rng.randrange(len(prev)) if prev else 0
+        cur: list[MXTask] = []
+        for i in range(width):
+            if total >= n_tasks:
+                break
+            c = g.add(compute(f"L{layer}c{i}", csize, hosts[i], job=job))
+            total += 1
+            cur.append(c)
+            if prev:
+                for j in range(min(fanout, len(prev))):
+                    k = (rot + i * fanout + j) % len(prev)
+                    p = prev[k]
+                    f = g.add(flow(f"L{layer}c{i}f{k}", fsize,
+                                   p.host, c.host, job=job))
+                    total += 1
+                    g.add_edge(p, f)
+                    g.add_edge(f, c)
+        if not cur:
+            break
+        prev = cur
+        layer += 1
+    return g
 
 
 # ----------------------------------------------------------------------

@@ -153,3 +153,15 @@ class Cluster:
     def with_topology(self, topology: Optional[Topology]) -> "Cluster":
         """Same hosts, different fabric (used by what-if queries)."""
         return Cluster(list(self.hosts.values()), topology=topology)
+
+    def signature(self) -> tuple:
+        """Hashable identity: hosts (with pools and NIC caps) and fabric
+        links.  Two clusters with equal signatures produce identical
+        simulations for any graph; keys what-if memo caches (and any
+        other cache that must distinguish cluster variants, e.g. resized
+        fabrics, without holding object identity)."""
+        topo = self.topology
+        return (tuple(sorted((h.name, tuple(sorted(h.procs.items())),
+                              h.nic_in, h.nic_out)
+                             for h in self.hosts.values())),
+                None if topo is None else tuple(sorted(topo.links.items())))

@@ -75,11 +75,13 @@ class Schedule:
     meta: dict = dataclasses.field(default_factory=dict)
 
     def simulate(self, cluster: Optional[Cluster] = None,
-                 routes: Optional[dict] = None) -> SimResult:
+                 routes: Optional[dict] = None,
+                 engine: str = "array") -> SimResult:
         merged = {**self.routes, **(routes or {})}
         return simulate(self.graph, cluster, policy=self.policy,
                         priorities=self.priorities, releases=self.releases,
-                        coflows=self.coflows, routes=merged or None)
+                        coflows=self.coflows, routes=merged or None,
+                        engine=engine)
 
 
 class FairShareScheduler:
@@ -339,13 +341,28 @@ class MXDAGScheduler:
                  slack_eps: float = 1e-9, memoize: bool = True,
                  incremental_pipelining: bool = True,
                  placement: "Optional[PlacementScheduler]" = None,
-                 try_routing: bool = False):
+                 try_routing: bool = False, engine: str = "auto"):
         self.try_pipelining = try_pipelining
         self.slack_eps = slack_eps
         self.memoize = memoize
         self.incremental_pipelining = incremental_pipelining
         self.placement = placement
         self.try_routing = try_routing
+        # DES engine for every what-if run this scheduler issues.  The
+        # default "auto" picks per graph: the flat-array engine's compile
+        # (re-done per pipelining trial, since each trial is a graph
+        # copy) and per-run setup only pay off from a few hundred tasks
+        # up, while on small graphs the calendar core's constants win —
+        # the two are differentially-tested equivalent, so the choice is
+        # a pure time optimisation.
+        if engine not in ("auto", "array", "calendar", "reference"):
+            raise ValueError(f"unknown engine {engine}")
+        self.engine = engine
+
+    def _engine_for(self, g: MXDAG) -> str:
+        if self.engine != "auto":
+            return self.engine
+        return "array" if len(g.tasks) >= 256 else "calendar"
 
     def _priorities(self, graph: MXDAG,
                     timing: Optional[dict] = None) -> dict[str, float]:
@@ -369,7 +386,8 @@ class MXDAGScheduler:
         route overrides) when a cache is supplied."""
         if cache is None:
             return simulate(g, cluster, policy=policy, priorities=prio,
-                            routes=routes or None)
+                            routes=routes or None,
+                            engine=self._engine_for(g))
         if sig is None:
             sig_ids = cache.setdefault("sig_ids", {})
             sig = sig_ids.setdefault(g.signature(), len(sig_ids))
@@ -378,7 +396,8 @@ class MXDAGScheduler:
         res = cache.get(key)
         if res is None:
             res = simulate(g, cluster, policy=policy, priorities=prio,
-                           routes=routes or None)
+                           routes=routes or None,
+                           engine=self._engine_for(g))
             cache[key] = res
         return res
 

@@ -50,6 +50,36 @@ a heap of upcoming event times instead of rescanning all tasks:
 The retained :meth:`Simulator._reference_run` slow path is the seed
 implementation; the golden differential tests assert the event-calendar
 core reproduces its start/finish/makespan to within EPS on every scenario.
+
+Engines
+-------
+:meth:`Simulator.run` dispatches on the ``engine`` argument:
+
+- ``"array"`` (default) — the flat-array engine in
+  :mod:`repro.core.arraysim`.  The (MXDAG, Cluster, coflows, routes)
+  quadruple is compiled once into integer-interned arrays, cached on the
+  graph keyed by (graph version, cluster identity, coflow grouping,
+  route overrides) — so scheduler ``_best`` loops and what-if sweeps
+  that vary only priorities/releases/policy compile once per graph
+  version.  Compiled layout: insertion-order task ids with a
+  lexicographic ``name_rank`` (reproducing every name-ordered tie-break
+  on ints); per-task ``size``/``unit``/``n_units``/kind/job scalars;
+  flow→link incidence as interned link-id tuples plus a CSR
+  (``fl_ptr``/``fl_flat``) mirror for the vectorized waterfill;
+  start-gating compiled to *counters* (unmet barrier / coflow /
+  member-sync preconditions, with per-completion decrement lists —
+  equivalent to the calendar's gate re-scan because gating is
+  monotone); streaming-predecessor adjacency; coflow membership and
+  slot-pool interning.  Run state is flat float64 work/rate vectors and
+  int heap entries.  NumPy is optional and import-guarded: with it, the
+  waterfill's bottleneck search and batch freezing run as array
+  reductions over the incidence CSR; without it (the pure-stdlib core
+  CI lane) the same compiled engine runs list-backed kernels with a
+  scalar progressive fill, producing identical results.
+- ``"calendar"`` — :meth:`Simulator.calendar_run`, the dict-based
+  event-calendar core above (pure stdlib; the differential oracle for
+  the array engine, and the "before" timing in the scale benchmarks).
+- ``"reference"`` — :meth:`Simulator._reference_run`, the seed loop.
 """
 from __future__ import annotations
 
@@ -66,8 +96,22 @@ from repro.core.task import MXTask, TaskKind
 EPS = 1e-9
 
 
+def waterfill_prep(group, paths) -> tuple[list[str], dict[str, list[str]]]:
+    """The (sorted group, link→flows index) pair :func:`waterfill` scans.
+
+    Both are pure functions of ``(group, paths)`` and are never mutated by
+    the fill, so a caller replaying the same flow group per event (every
+    priority-class pass of :meth:`Simulator._allocate_rates`, most events
+    of the calendar core) computes them once and passes ``prep=`` instead
+    of re-sorting and re-inverting the paths on every call.
+    """
+    unfrozen = sorted(group)
+    return unfrozen, link_flow_index(unfrozen, paths)
+
+
 def waterfill(group: list[str], paths, weight, residual: dict[str, float],
-              rates: dict[str, float]) -> list[tuple[str, float]]:
+              rates: dict[str, float],
+              prep: Optional[tuple] = None) -> list[tuple[str, float]]:
     """Weighted max-min fair allocation of ``group`` over ``residual``.
 
     ``paths[n]`` is the tuple of links flow n occupies; ``weight(n)`` its
@@ -77,16 +121,17 @@ def waterfill(group: list[str], paths, weight, residual: dict[str, float],
     along those flows' paths, recurse on the rest.  Mutates ``residual``
     and ``rates``; returns the freeze sequence ``[(flow, rate), ...]`` in
     allocation order so a caller can replay the identical subtraction.
+    ``prep`` is an optional cached :func:`waterfill_prep` result for this
+    exact ``(group, paths)`` pair.
     """
-    unfrozen = sorted(group)
+    if prep is None:
+        prep = waterfill_prep(group, paths)
+    unfrozen, by_link = prep
+    unfrozen = list(unfrozen)
     seq: list[tuple[str, float]] = []
     if not unfrozen:
         return seq
     unfrozen_set = set(unfrozen)
-    # link -> group flows crossing it, in sorted-group order: weight sums
-    # and freeze batches then enumerate flows exactly as the seed's
-    # all-pairs scan did, so the arithmetic is bit-identical.
-    by_link = link_flow_index(unfrozen, paths)
     if weight is None:
         counts = {r: float(len(fl)) for r, fl in by_link.items()}
     while unfrozen:
@@ -184,9 +229,13 @@ class Simulator:
                  releases: Optional[dict[str, float]] = None,
                  coflows: Optional[list[set[str]]] = None,
                  routes: Optional[Mapping[str, Sequence[str]]] = None,
+                 engine: str = "array",
                  ) -> None:
         if policy not in ("fair", "priority"):
             raise ValueError(f"unknown policy {policy}")
+        if engine not in ("array", "calendar", "reference"):
+            raise ValueError(f"unknown engine {engine}")
+        self.engine = engine
         unbound = graph.unbound()
         if unbound:
             raise ValueError(
@@ -255,6 +304,15 @@ class Simulator:
                 if self.g.tasks[n].kind is not TaskKind.NETWORK:
                     raise ValueError(f"coflow member {n} must be a flow")
                 self._coflow_of[n] = i
+
+    def run(self, horizon: float = 1e15) -> SimResult:
+        """Simulate to completion with the configured engine."""
+        if self.engine == "calendar":
+            return self.calendar_run(horizon)
+        if self.engine == "reference":
+            return self._reference_run(horizon)
+        from repro.core.arraysim import array_run
+        return array_run(self, horizon)
 
     # ------------------------------------------------------------------
     # incremental event-calendar core (see module docstring invariants)
@@ -347,7 +405,7 @@ class Simulator:
         g._sim_statics = (key, data)
         return data
 
-    def run(self, horizon: float = 1e15) -> SimResult:
+    def calendar_run(self, horizon: float = 1e15) -> SimResult:
         g = self.g
         tasks = g.tasks
         st = {n: _State(t) for n, t in tasks.items()}
@@ -498,6 +556,8 @@ class Simulator:
                 return max(rem.get(n, 0.0) / mx, 1e-6) if mx > 0 else 1.0
             return weight
 
+        wf_prep: dict = {}           # (cls, group) -> waterfill_prep
+
         def allocate() -> set[str]:
             """Waterfill classes from the lowest dirty one up; replay the
             untouched classes below it (their runnable sets are unchanged,
@@ -523,10 +583,20 @@ class Simulator:
                 if lowest is None or cls >= lowest or cls not in alloc_log:
                     group = [n for n in flows if cls_of[n] == cls]
                     old = [rates[n] for n in group]
+                    # an unchanged class group re-fills with the identical
+                    # sorted order and link index: cache the prep per
+                    # (class, group) instead of rebuilding it every event
+                    pkey = (cls, tuple(group))
+                    prep = wf_prep.get(pkey)
+                    if prep is None:
+                        if len(wf_prep) > 512:
+                            wf_prep.clear()
+                        prep = wf_prep[pkey] = waterfill_prep(
+                            group, self._res)
                     seq = waterfill(
                         group, self._res,
                         weight_for(any(n in coflow_of for n in group)),
-                        residual, rates)
+                        residual, rates, prep=prep)
                     # an unchanged rate means unchanged absolute event
                     # times — the existing heap entry stays valid
                     changed.update(n for n, o in zip(group, old)
@@ -1018,11 +1088,22 @@ class Simulator:
         else:
             classes = [None]
 
+        # hoisted waterfill prep: the reference loop reallocates every
+        # event, but a class whose runnable group did not change replays
+        # the same (sorted group, link index) — cache it per (cls, group)
+        # instead of re-sorting and re-inverting paths per event
+        prep_cache = self.__dict__.setdefault("_wf_prep_cache", {})
         for cls in classes:
             group = [n for n in flows
                      if cls is None or flow_class(n) == cls]
+            pkey = (cls, tuple(group))
+            prep = prep_cache.get(pkey)
+            if prep is None:
+                if len(prep_cache) > 512:
+                    prep_cache.clear()
+                prep = prep_cache[pkey] = waterfill_prep(group, self._res)
             waterfill(group, self._res, weight if has_coflow else None,
-                      residual, rates)
+                      residual, rates, prep=prep)
         return rates
 
 
@@ -1032,6 +1113,8 @@ def simulate(graph: MXDAG, cluster: Optional[Cluster] = None, *,
              releases: Optional[dict[str, float]] = None,
              coflows: Optional[list[set[str]]] = None,
              routes: Optional[Mapping[str, Sequence[str]]] = None,
+             engine: str = "array",
              ) -> SimResult:
     return Simulator(graph, cluster, policy=policy, priorities=priorities,
-                     releases=releases, coflows=coflows, routes=routes).run()
+                     releases=releases, coflows=coflows, routes=routes,
+                     engine=engine).run()

@@ -52,13 +52,7 @@ class WhatIf:
 
     @staticmethod
     def _cluster_key(cl: Optional[Cluster]):
-        if cl is None:
-            return None
-        topo = cl.topology
-        return (tuple(sorted((h.name, tuple(sorted(h.procs.items())),
-                              h.nic_in, h.nic_out)
-                             for h in cl.hosts.values())),
-                None if topo is None else tuple(sorted(topo.links.items())))
+        return None if cl is None else cl.signature()
 
     def _makespan(self, g: MXDAG, cluster: Optional[Cluster] = None,
                   routes: Optional[Mapping[str, tuple[str, ...]]] = None,

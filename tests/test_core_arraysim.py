@@ -1,0 +1,201 @@
+"""Flat-array engine tests: golden differentials against the calendar
+core (per-task start/finish, makespan, job completion) across policies,
+coflows, pipelining, releases, fabrics and Graphene-style random DAGs;
+compile caching; and the pure-stdlib fallback with numpy stubbed out.
+"""
+import importlib
+import sys
+
+import pytest
+
+from repro.core import Cluster, MXDAG, Topology, compute, flow
+from repro.core import builders
+from repro.core import arraysim
+from repro.core.simulator import Simulator
+
+
+def assert_engines_agree(g, cluster=None, **kw):
+    a = Simulator(g, cluster, **kw).run()
+    c = Simulator(g, cluster, **kw).calendar_run()
+    for n in g.tasks:
+        assert a.start[n] == pytest.approx(c.start[n], abs=1e-9), n
+        assert a.finish[n] == pytest.approx(c.finish[n], abs=1e-9), n
+    assert a.makespan == pytest.approx(c.makespan, abs=1e-9)
+    assert a.job_completion == pytest.approx(c.job_completion)
+    return a
+
+
+class TestDifferential:
+    def test_paper_figures(self):
+        assert_engines_agree(builders.fig1_jobs())
+        assert_engines_agree(builders.fig1_jobs(), policy="priority",
+                             priorities={"f1": 0, "f3": 1})
+        assert_engines_agree(builders.fig2a(),
+                             coflows=builders.fig2a_coflows())
+        for variant in ("b1", "b2", "b3"):
+            assert_engines_agree(builders.fig2b(),
+                                 coflows=builders.fig2b_coflows(variant))
+        for case in range(4):
+            assert_engines_agree(builders.fig3_case(case))
+            assert_engines_agree(builders.fig3_case(case),
+                                 policy="priority", priorities={})
+
+    def test_mapreduce_and_ddl(self):
+        assert_engines_agree(builders.mapreduce("mr", 8, 8))
+        assert_engines_agree(builders.ddl(32, push=2.0, pull=2.0))
+
+    def test_pipelined_with_priorities(self):
+        g = builders.mapreduce("mr", 8, 8, unit_frac=0.125)
+        for (s, d) in list(g.edges):
+            g.set_pipelined(s, d, True)
+        assert_engines_agree(g)
+        assert_engines_agree(g, policy="priority",
+                             priorities={n: i % 4
+                                         for i, n in enumerate(g.tasks)})
+
+    def test_releases_zero_size_and_slots(self):
+        g = MXDAG()
+        g.add(compute("a", 1.0, "A"))
+        g.add(compute("z", 0.0, "A"))
+        g.add(compute("b", 1.0, "A"))
+        g.add_edge("z", "b")
+        assert_engines_agree(g, releases={"a": 3.0, "b": 0.5})
+        g = MXDAG()
+        for i in range(5):
+            g.add(compute(f"c{i}", 1.0 + 0.25 * i, "H"))
+        assert_engines_agree(g, policy="priority",
+                             priorities={f"c{i}": (i * 7) % 3
+                                         for i in range(5)})
+
+    def test_fabrics_and_routes(self):
+        g, cl = builders.oversubscribed_fanin(4, oversubscription=4.0)
+        assert_engines_agree(g, cl)
+        assert_engines_agree(g, cl, policy="priority",
+                             priorities={"f0": 0.0})
+        g, cl = builders.fat_tree_shuffle(8, stride=2)
+        assert_engines_agree(g, cl)
+        t = g.tasks["s0_1"]
+        alt = cl.candidate_routes(t)[-1]
+        assert_engines_agree(g, cl, routes={"s0_1": alt})
+
+    def test_random_layered(self):
+        g = builders.random_layered(1200, n_hosts=32, min_width=8,
+                                    max_width=32, seed=7)
+        res = assert_engines_agree(g)
+        ref = Simulator(g)._reference_run()
+        assert res.makespan == pytest.approx(ref.makespan, abs=1e-6)
+
+    def test_multi_job_completion_map(self):
+        j1, j2 = builders.mapreduce_pair()
+        merged = MXDAG("both")
+        for j in (j1, j2):
+            for t in j:
+                merged.add(t)
+            for e in j.edges.values():
+                merged.add_edge(e.src, e.dst, pipelined=e.pipelined)
+        res = assert_engines_agree(merged)
+        assert set(res.job_completion) == {"job1", "job2"}
+
+    def test_horizon_and_deadlock_semantics(self):
+        g = MXDAG()
+        g.add(compute("a", 1.0, "A", unit=0.25))
+        with pytest.raises(RuntimeError, match="did not converge"):
+            Simulator(g).run(horizon=0.5)
+        g = MXDAG()
+        g.add(compute("a", 1.0, "A", proc="gpu"))
+        cl = Cluster.homogeneous(["A"])          # no gpu pool anywhere
+        with pytest.raises(RuntimeError, match="deadlock"):
+            Simulator(g, cl).run()
+
+
+class TestEngineSelection:
+    def test_engine_argument(self):
+        g = builders.fig1_jobs()
+        for engine in ("array", "calendar", "reference"):
+            assert Simulator(g, engine=engine).run().makespan == 6.0
+        with pytest.raises(ValueError, match="unknown engine"):
+            Simulator(g, engine="quantum")
+
+    def test_compile_cached_per_graph_version(self):
+        g = builders.mapreduce("mr", 4, 4)
+        s1 = Simulator(g)
+        c1 = arraysim.compile_sim(s1)
+        assert arraysim.compile_sim(Simulator(g)) is c1   # same version
+        g.set_pipelined(*next(iter(g.edges)), True)
+        assert arraysim.compile_sim(Simulator(g)) is not c1
+
+    def test_compile_keyed_by_coflows_and_routes(self):
+        g = builders.fig2a()
+        base = arraysim.compile_sim(Simulator(g))
+        cofl = arraysim.compile_sim(
+            Simulator(g, coflows=builders.fig2a_coflows()))
+        assert cofl is not base
+        assert arraysim.compile_sim(Simulator(g)) is base  # still cached
+
+
+class TestNumpyFallback:
+    def test_stubbed_numpy_import_falls_back(self):
+        """The array engine must run pure-stdlib when numpy is absent
+        (core CI lane) and produce identical results.  With numpy
+        installed, the numpy and stubbed runs are compared against each
+        other; either way the stubbed run is diffed against the
+        calendar oracle."""
+        g = builders.mapreduce("mr", 6, 6, unit_frac=0.25)
+        for (s, d) in list(g.edges):
+            g.set_pipelined(s, d, True)
+        g2, cl2 = builders.oversubscribed_fanin(4, oversubscription=2.0)
+        g3 = builders.fig2a()
+        cases = [
+            (g, None, {}),
+            (g2, cl2, dict(policy="priority", priorities={"f0": 0.0})),
+            (g3, None, dict(coflows=builders.fig2a_coflows())),
+        ]
+        had_np = arraysim.np is not None
+        with_np = [Simulator(gg, cl, **kw).run()
+                   for gg, cl, kw in cases] if had_np else None
+        saved = sys.modules.get("numpy")
+        sys.modules["numpy"] = None      # import numpy raises ImportError
+        try:
+            importlib.reload(arraysim)
+            assert arraysim.np is None
+            without_np = [Simulator(gg.copy(), cl, **kw).run()
+                          for gg, cl, kw in cases]
+            calendar = [Simulator(gg.copy(), cl, **kw).calendar_run()
+                        for gg, cl, kw in cases]
+        finally:
+            if saved is None:
+                del sys.modules["numpy"]
+            else:
+                sys.modules["numpy"] = saved
+            importlib.reload(arraysim)
+        assert (arraysim.np is not None) == had_np
+        for b, c in zip(without_np, calendar):
+            assert b.start == pytest.approx(c.start, abs=1e-9)
+            assert b.finish == pytest.approx(c.finish, abs=1e-9)
+        if with_np is not None:
+            for a, b in zip(with_np, without_np):
+                assert a.start == pytest.approx(b.start, abs=1e-9)
+                assert a.finish == pytest.approx(b.finish, abs=1e-9)
+                assert a.makespan == pytest.approx(b.makespan, abs=1e-12)
+
+    def test_vectorized_waterfill_delegates_without_numpy(self):
+        from repro.core.simulator import waterfill
+        paths = {"f1": ("A.nic_out", "B.nic_in"),
+                 "f2": ("A.nic_out", "C.nic_in")}
+        saved = sys.modules.get("numpy")
+        sys.modules["numpy"] = None
+        try:
+            importlib.reload(arraysim)
+            res1 = {l: 1.0 for ls in paths.values() for l in ls}
+            res2 = dict(res1)
+            r1, r2 = {}, {}
+            seq1 = arraysim.vectorized_waterfill(
+                list(paths), paths, None, res1, r1)
+            seq2 = waterfill(list(paths), paths, None, res2, r2)
+            assert seq1 == seq2 and r1 == r2 and res1 == res2
+        finally:
+            if saved is None:
+                del sys.modules["numpy"]
+            else:
+                sys.modules["numpy"] = saved
+            importlib.reload(arraysim)

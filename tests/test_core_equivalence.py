@@ -98,6 +98,17 @@ class TestScaleSweepDAGs:
         assert_equivalent(g, cl, policy="priority",
                           priorities={"f0": 0.0, "c0": 0.0})
 
+    def test_random_layered(self):
+        """The Graphene-style generator, small enough for the quadratic
+        reference oracle (the ≥10k bench instances diff array vs
+        calendar instead — see scale.py)."""
+        g = builders.random_layered(800, n_hosts=16, min_width=8,
+                                    max_width=16, seed=11)
+        assert_equivalent(g)
+        assert_equivalent(g, policy="priority",
+                          priorities={n: i % 3
+                                      for i, n in enumerate(g.tasks)})
+
 
 class TestLivelockGuard:
     def test_event_count_guard_trips_on_horizon_livelock(self):

@@ -1,0 +1,132 @@
+"""Property-based tests (hypothesis): the vectorized waterfill is
+equivalent to the scalar progressive fill.
+
+:func:`repro.core.arraysim.vectorized_waterfill` shares the scalar
+:func:`repro.core.simulator.waterfill`'s contract: same freeze *order*
+(identical ``(flow, rate)`` sequence ordering — the simulator's replay
+machinery depends on it), rates and mutated residuals within EPS (batched
+subtraction may associate differently in the last ulp).  Checked here on
+random multi-tier fabrics, random flow subsets, and random weighted
+groups (the coflow MADD case).
+"""
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed (pip install -e .[test])")
+np = pytest.importorskip(
+    "numpy", reason="vectorized waterfill needs numpy (full lane)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Topology, flow
+from repro.core.arraysim import vectorized_waterfill
+from repro.core.simulator import waterfill, waterfill_prep
+
+TOL = 1e-6
+
+racks_st = st.lists(st.integers(min_value=1, max_value=4),
+                    min_size=2, max_size=4)
+oversub_st = st.floats(min_value=1.0, max_value=8.0,
+                       allow_nan=False, allow_infinity=False)
+weight_st = st.floats(min_value=0.25, max_value=4.0,
+                      allow_nan=False, allow_infinity=False)
+
+
+def build_case(kind, racks, oversub, n_flows, rng_pairs):
+    if kind == "two_tier":
+        topo = Topology.two_tier(
+            [[f"r{r}h{i}" for i in range(n)]
+             for r, n in enumerate(racks)], oversubscription=oversub)
+    else:
+        topo = Topology.leaf_spine(
+            [[f"l{r}h{i}" for i in range(n)]
+             for r, n in enumerate(racks)],
+            n_spines=2, oversubscription=oversub)
+    hosts = topo.hosts()
+    paths = {}
+    for k in range(n_flows):
+        a, b = rng_pairs[k]
+        src = hosts[a % len(hosts)]
+        dst = hosts[b % len(hosts)]
+        if src == dst:
+            dst = hosts[(b + 1) % len(hosts)]
+            if src == dst:
+                continue
+        paths[f"f{k}"] = topo.path(src, dst)
+    residual = {}
+    for p in paths.values():
+        for l in p:
+            residual.setdefault(l, topo.capacity(l))
+    return paths, residual
+
+
+case_st = st.tuples(
+    st.sampled_from(["two_tier", "leaf_spine"]),
+    racks_st, oversub_st,
+    st.integers(min_value=1, max_value=12),
+    st.lists(st.tuples(st.integers(0, 63), st.integers(0, 63)),
+             min_size=12, max_size=12),
+)
+
+
+class TestVectorizedEquivalence:
+    @given(case=case_st)
+    @settings(max_examples=60, deadline=None)
+    def test_unit_weights(self, case):
+        kind, racks, oversub, n_flows, pairs = case
+        paths, residual = build_case(kind, racks, oversub, n_flows, pairs)
+        if not paths:
+            return
+        group = sorted(paths)
+        res_s, res_v = dict(residual), dict(residual)
+        rates_s, rates_v = {}, {}
+        seq_s = waterfill(group, paths, None, res_s, rates_s)
+        seq_v = vectorized_waterfill(group, paths, None, res_v, rates_v)
+        # identical freeze order, values within EPS
+        assert [n for n, _ in seq_v] == [n for n, _ in seq_s]
+        for (n1, a1), (n2, a2) in zip(seq_v, seq_s):
+            assert a1 == pytest.approx(a2, abs=TOL), n1
+        assert rates_v == pytest.approx(rates_s, abs=TOL)
+        assert res_v == pytest.approx(res_s, abs=TOL)
+
+    @given(case=case_st,
+           ws=st.lists(weight_st, min_size=12, max_size=12))
+    @settings(max_examples=60, deadline=None)
+    def test_weighted_groups(self, case, ws):
+        kind, racks, oversub, n_flows, pairs = case
+        paths, residual = build_case(kind, racks, oversub, n_flows, pairs)
+        if not paths:
+            return
+        group = sorted(paths)
+        w = {n: ws[i % len(ws)] for i, n in enumerate(group)}
+        weight = w.__getitem__
+        res_s, res_v = dict(residual), dict(residual)
+        rates_s, rates_v = {}, {}
+        seq_s = waterfill(group, paths, weight, res_s, rates_s)
+        seq_v = vectorized_waterfill(group, paths, weight, res_v, rates_v)
+        assert [n for n, _ in seq_v] == [n for n, _ in seq_s]
+        for (n1, a1), (n2, a2) in zip(seq_v, seq_s):
+            assert a1 == pytest.approx(a2, abs=TOL), n1
+        assert rates_v == pytest.approx(rates_s, abs=TOL)
+        assert res_v == pytest.approx(res_s, abs=TOL)
+
+    @given(case=case_st)
+    @settings(max_examples=20, deadline=None)
+    def test_prep_hoisting_is_pure(self, case):
+        """waterfill(prep=...) ≡ waterfill() — the cached (sorted group,
+        link index) pair must not change results or be mutated."""
+        kind, racks, oversub, n_flows, pairs = case
+        paths, residual = build_case(kind, racks, oversub, n_flows, pairs)
+        if not paths:
+            return
+        group = sorted(paths)
+        prep = waterfill_prep(group, paths)
+        snap = (list(prep[0]), {k: list(v) for k, v in prep[1].items()})
+        for _ in range(2):          # replay twice off the same prep
+            res_a, res_b = dict(residual), dict(residual)
+            ra, rb = {}, {}
+            assert waterfill(group, paths, None, res_a, ra, prep=prep) \
+                == waterfill(group, paths, None, res_b, rb)
+            assert ra == rb and res_a == res_b
+        assert snap == (list(prep[0]),
+                        {k: list(v) for k, v in prep[1].items()})
