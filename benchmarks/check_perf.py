@@ -13,10 +13,19 @@ on shared CI runners dwarfs any real regression.  Rows named
 oracle — a correctness failure, not a perf one), as must rows named
 ``*.improves`` (a scheduling decision — e.g. placement on the fat-tree
 shuffle — stopped beating its fixed baseline).  ``scale.speedup_array_*``
-rows (flat-array engine vs the event-calendar core on the ≥10k-task
-scenarios) must stay above ``--speedup-floor`` (default 3x — the
-committed numbers are >5x; the floor leaves room for runner noise while
-still catching the array engine losing its edge).
+rows (flat-array engine vs the event-calendar core on the Graphene-scale
+scenarios, including the ddl(1024) serial-chain trickle that
+component-level reallocation + coalesced completion events lifted from
+~1.2x) must stay above ``--speedup-floor`` (default 3x — the committed
+numbers are 3.8–7.9x, ddl1024 being the tightest; the floor leaves
+room for runner noise while still catching the array engine losing its
+edge).  Likewise
+``scale.speedup_analytic_*`` (compiled analytic passes vs the dict
+implementation, committed ≥10x) is floored at 3x and
+``scale.speedup_schedule_mr128x128`` (end-to-end schedule() with
+compiled analytics vs the dict pipeline) at 2x;
+``scale.speedup_schedule_layered20k`` stays informational — that
+workload is DES-bound, so its analytic win is real but small.
 
 Wall-time speed-ups never fail the gate; refresh the baseline with
 ``--update-baseline`` (regenerates the baseline file in place from the
@@ -38,12 +47,12 @@ def load_rows(path: str) -> dict[str, float]:
 
 
 def gated(name: str) -> bool:
-    # *_seed_us rows time the frozen seed implementation: informational
-    # (their drift tracks runner speed, not a code regression), and
-    # optional (the sweep skips them under --no-seed).
+    # *_seed_us / *_dict_us rows time frozen "before" implementations
+    # (the seed hot paths, the dict analytic passes): informational —
+    # their drift tracks runner speed, not a code regression.
     return (name.startswith(("micro.", "scale."))
             and name.endswith("_us")
-            and not name.endswith("_seed_us"))
+            and not name.endswith(("_seed_us", "_dict_us")))
 
 
 def main(argv=None) -> int:
@@ -88,6 +97,17 @@ def main(argv=None) -> int:
     bench = load_rows(args.bench)
     base = load_rows(args.baseline)
 
+    def speedup_floor(name: str):
+        """Gated speedup-claim rows and their floors (None = not a
+        gated speedup row)."""
+        if name.startswith("scale.speedup_array_"):
+            return args.speedup_floor
+        if name.startswith("scale.speedup_analytic_"):
+            return 3.0
+        if name == "scale.speedup_schedule_mr128x128":
+            return 2.0
+        return None
+
     failures = []
     for name in sorted(base):
         if name.endswith(".ref_match"):
@@ -106,14 +126,15 @@ def main(argv=None) -> int:
                 failures.append(f"{name}: decision no longer beats its "
                                 f"fixed baseline")
             continue
-        if name.startswith("scale.speedup_array_"):
+        floor = speedup_floor(name)
+        if floor is not None:
             if name not in bench:
                 failures.append(f"{name}: speedup row missing from bench "
                                 f"output (check never ran)")
-            elif bench[name] < args.speedup_floor:
+            elif bench[name] < floor:
                 failures.append(
-                    f"{name}: flat-array speedup {bench[name]:.2f}x "
-                    f"below the {args.speedup_floor:g}x floor")
+                    f"{name}: speedup {bench[name]:.2f}x below the "
+                    f"{floor:g}x floor")
             continue
         if not gated(name) or name not in bench:
             continue

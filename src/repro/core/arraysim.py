@@ -41,6 +41,32 @@ scalar scan's first-within-EPS tie-break reproduced exactly by scanning
 only the strict prefix minima of the ratio vector, and whole freeze
 batches are subtracted via bincounts on the incidence CSR.
 
+Two compile-time structures keep reallocation local (the fix for the
+ddl-style serial-chain trickle, which previously saw only ~1.2x from
+the arrays because every completion re-filled and re-heaped every
+runnable flow):
+
+- **contention components** — union-find over the flow→link incidence;
+  flows in different components share no links, so ``allocate()``
+  refills only *dirty* components (per-component lowest-dirty-class
+  replay logs included) and untouched components' rates — provably what
+  a global refill would recompute, since fills only read their own
+  links — are skipped outright.  Coflows collapse the split into one
+  component: MADD weights couple every rate and re-dirty every event.
+- **coalesced completion events** — a flow with no streaming role and
+  no unit boundaries (``unit >= size``) can only ever complete, so each
+  component carries *one* heap entry (min next-completion over its
+  runnable "simple" flows, kind 2, stamped per component) instead of
+  one entry per flow per rate change.  The entry's time is exactly the
+  min of the per-flow times schedule_event would have pushed, so the
+  event calendar — and therefore every result — is unchanged; only the
+  stale-entry volume drops from O(flows) to O(1) per reallocation.
+
+The analytic compile (:mod:`repro.core.arrayanalytic`) shares this
+module's interning: ``_compile`` reuses its name table, per-task
+scalars and int adjacency, so one per-task/per-edge traversal per graph
+version serves both the scheduler's slack passes and the DES.
+
 NumPy-optional policy: ``import numpy`` is guarded at module import.  The
 core CI lane runs pure-stdlib — without NumPy the same compiled engine
 runs list-backed kernels and the waterfill falls back to a scalar
@@ -61,6 +87,7 @@ try:
 except ImportError:                      # pure-stdlib core lane
     np = None
 
+from repro.core.arrayanalytic import compile_analytic
 from repro.core.task import TaskKind
 
 EPS = 1e-9
@@ -77,6 +104,12 @@ class CompiledSim:
         "stream_out",
         "has_streaming", "stream_fed", "coflow_of", "coflows", "cof_dec",
         "coflow_fed_by", "nu_sum", "np_ready", "single_job", "roots",
+        # contention components: union-find over the flow→link incidence
+        # (disjoint link/flow sets fill independently); ``simple`` marks
+        # tasks whose only possible event is completion (flows with no
+        # streaming role, no unit boundaries) — their events coalesce
+        # into one per-component next-completion entry
+        "n_comps", "comp_of_net", "simple",
         # NumPy mirrors (None when NumPy is absent)
         "size_a", "name_rank_a", "net_ids_a", "fl_ptr", "fl_flat",
         "link_bw_a",
@@ -116,62 +149,87 @@ def _compile(sim) -> CompiledSim:
     g, cluster = sim.g, sim.cluster
     tasks = g.tasks
     comp = CompiledSim()
-    names = list(tasks)
-    idx = {nm: i for i, nm in enumerate(names)}
-    n = len(names)
+    # the analytic compile (arrayanalytic) interns the same graph for
+    # the scheduler's forward/reverse passes; reuse its name table,
+    # per-task scalars and int adjacency so the two compiles share one
+    # per-task/per-edge traversal per graph version
+    an = compile_analytic(g)
+    names, idx, n = an.names, an.idx, an.n
     comp.n, comp.names, comp.idx = n, names, idx
-
-    rank = [0] * n
-    for r, nm in enumerate(sorted(names)):
-        rank[idx[nm]] = r
-    comp.name_rank = rank
-
-    comp.size = [t.size for t in tasks.values()]
-    comp.unit = [t.effective_unit for t in tasks.values()]
-    comp.nu = [t.n_units for t in tasks.values()]
-    comp.nu_sum = sum(comp.nu)
-    comp.is_compute = [t.kind is TaskKind.COMPUTE for t in tasks.values()]
-    comp.job = [t.job for t in tasks.values()]
-    comp.single_job = len(set(comp.job)) <= 1
+    comp.name_rank = an.name_rank
+    comp.size = an.size
+    comp.unit = an.eunit
+    comp.nu = an.nu
+    comp.nu_sum = sum(an.nu)
+    comp.is_compute = an.is_compute
+    comp.job = an.job
+    comp.single_job = len(set(an.job)) <= 1
+    comp.succ = an.succ_lists
 
     # compute slots (a pool absent from the cluster has 0 slots, exactly
     # like the calendar core's slots_free.get(r, 0))
-    slot_ids: dict[str, int] = {}
+    slot_ids: dict[tuple, int] = {}
     comp.slot_of = [-1] * n
     comp.slot_cap = []
-    # flow→link incidence over interned links
-    link_ids: dict[str, int] = {}
+    hosts = cluster.hosts
+    is_compute = an.is_compute
+    for i, t in enumerate(tasks.values()):
+        if is_compute[i]:
+            key = (t.host, t.proc)
+            si = slot_ids.get(key)
+            if si is None:
+                si = slot_ids[key] = len(comp.slot_cap)
+                h = hosts.get(t.host)
+                comp.slot_cap.append(
+                    int(h.procs.get(t.proc, 0)) if h is not None else 0)
+            comp.slot_of[i] = si
+    # flow→link incidence over interned links.  Without a fabric or
+    # route overrides a flow's path is exactly (src NIC-out, dst NIC-in)
+    # — intern those from the task fields directly, skipping the
+    # string-keyed resource map (same first-seen interning order, same
+    # capacities as Cluster.bandwidth on the NIC names).
+    link_ids: dict = {}
     comp.flow_links = []
     comp.net_ids = []
     comp.net_pos = [-1] * n
-    res = sim._res
-    for i, (nm, t) in enumerate(tasks.items()):
-        if comp.is_compute[i]:
-            r = t.resources()[0]
-            si = slot_ids.get(r)
-            if si is None:
-                si = slot_ids[r] = len(comp.slot_cap)
-                host, pool = r.rsplit(".", 1)
-                h = cluster.hosts.get(host)
-                comp.slot_cap.append(
-                    int(h.procs.get(pool, 0)) if h is not None else 0)
-            comp.slot_of[i] = si
-        else:
-            comp.net_pos[i] = len(comp.net_ids)
-            comp.net_ids.append(i)
-            ids = []
-            for l in res[nm]:
-                li = link_ids.get(l)
-                if li is None:
-                    li = link_ids[l] = len(link_ids)
-                ids.append(li)
-            comp.flow_links.append(tuple(ids))
+    if cluster.topology is None and not sim.routes:
+        link_bw: list[float] = []
+        for i, t in enumerate(tasks.values()):
+            if not is_compute[i]:
+                comp.net_pos[i] = len(comp.net_ids)
+                comp.net_ids.append(i)
+                ko = ("o", t.src)
+                lo = link_ids.get(ko)
+                if lo is None:
+                    lo = link_ids[ko] = len(link_bw)
+                    link_bw.append(float(hosts[t.src].nic_out))
+                kd = ("i", t.dst)
+                ld = link_ids.get(kd)
+                if ld is None:
+                    ld = link_ids[kd] = len(link_bw)
+                    link_bw.append(float(hosts[t.dst].nic_in))
+                comp.flow_links.append((lo, ld))
+        comp.n_links = len(link_bw)
+        comp.link_bw = link_bw
+    else:
+        res = sim._res
+        for i, (nm, t) in enumerate(tasks.items()):
+            if not is_compute[i]:
+                comp.net_pos[i] = len(comp.net_ids)
+                comp.net_ids.append(i)
+                ids = []
+                for l in res[nm]:
+                    li = link_ids.get(l)
+                    if li is None:
+                        li = link_ids[l] = len(link_ids)
+                    ids.append(li)
+                comp.flow_links.append(tuple(ids))
+        comp.n_links = len(link_ids)
+        bw = cluster.bandwidths(link_ids)
+        comp.link_bw = [0.0] * comp.n_links
+        for l, li in link_ids.items():
+            comp.link_bw[li] = float(bw[l])
     comp.n_net = len(comp.net_ids)
-    comp.n_links = len(link_ids)
-    bw = cluster.bandwidths(link_ids)
-    comp.link_bw = [0.0] * comp.n_links
-    for l, li in link_ids.items():
-        comp.link_bw[li] = float(bw[l])
 
     # coflows (members in sorted-name order: iteration order never
     # affects results — membership tests and maxima are commutative)
@@ -181,67 +239,131 @@ def _compile(sim) -> CompiledSim:
         for m in c:
             comp.coflow_of[m] = ci
 
-    # streaming adjacency (coflow producers gate at start instead)
-    stream_in: list[list[int]] = [[] for _ in range(n)]
-    stream_out: list[list[int]] = [[] for _ in range(n)]
-    comp.stream_fed = [False] * n
-    for (p, d), e in g.edges.items():
-        if g.effective_pipelined(e):
-            pi, di = idx[p], idx[d]
-            comp.stream_fed[di] = True
-            if comp.coflow_of[pi] < 0:
-                stream_in[di].append(pi)
-                stream_out[pi].append(di)
-    comp.stream_in = [tuple(v) for v in stream_in]
-    comp.stream_out = [tuple(v) for v in stream_out]
-    comp.has_streaming = any(stream_out)
-
-    # start gating compiled to counters + decrement lists
-    # one fused start-gate counter per task: unmet barrier preds +
-    # coflow preconditions + member-sync preds (all non-negative and all
-    # required to reach zero, so their sum gates identically)
-    comp.init_gate = [0] * n
-    gate_dec: list[list[int]] = [[] for _ in range(n)]
-    cof_dec: list[list[int]] = [[] for _ in range(len(comp.coflows))]
-    gate_stream: list[tuple[int, ...]] = [()] * n
-    for i, nm in enumerate(names):
-        stream = []
-        for p in g.preds(nm):
-            pi = idx[p]
-            ci = comp.coflow_of[pi]
-            if ci >= 0:
-                comp.init_gate[i] += 1
-                cof_dec[ci].append(i)
-            elif g.effective_pipelined(g.edges[(p, nm)]):
-                stream.append(pi)
-            else:
-                comp.init_gate[i] += 1
-                gate_dec[pi].append(i)
-        if stream:
-            gate_stream[i] = tuple(stream)
-        ci = comp.coflow_of[i]
-        if ci >= 0:
-            # synchronized start: every member's preds must be done
-            for m in comp.coflows[ci]:
-                for p in g.preds(names[m]):
+    pred_lists, pred_pipe = an.pred_lists, an.pred_pipe
+    if not comp.coflows and not an.any_pipe:
+        # barrier-only fast path: every edge gates at completion, so the
+        # fused counter is the in-degree and the decrement list is
+        # exactly the successor list (aliased, read-only)
+        empty: tuple = ()
+        comp.stream_in = [empty] * n
+        comp.stream_out = [empty] * n
+        comp.stream_fed = [False] * n
+        comp.has_streaming = False
+        comp.init_gate = [len(pl) for pl in pred_lists]
+        comp.gate_dec = an.succ_lists
+        comp.cof_dec = []
+        comp.gate_stream = [empty] * n
+        comp.coflow_fed_by = [empty] * n
+    else:
+        # streaming adjacency (coflow producers gate at start instead)
+        stream_in: list[list[int]] = [[] for _ in range(n)]
+        stream_out: list[list[int]] = [[] for _ in range(n)]
+        comp.stream_fed = [False] * n
+        # start gating compiled to counters + decrement lists: one fused
+        # start-gate counter per task — unmet barrier preds + coflow
+        # preconditions + member-sync preds (all non-negative and all
+        # required to reach zero, so their sum gates identically)
+        comp.init_gate = [0] * n
+        gate_dec: list[list[int]] = [[] for _ in range(n)]
+        cof_dec: list[list[int]] = [[] for _ in range(len(comp.coflows))]
+        gate_stream: list[tuple[int, ...]] = [()] * n
+        coflow_of = comp.coflow_of
+        for i in range(n):
+            stream = []
+            for pi, pipe in zip(pred_lists[i], pred_pipe[i]):
+                ci = coflow_of[pi]
+                if ci >= 0:
                     comp.init_gate[i] += 1
-                    gate_dec[idx[p]].append(i)
-    comp.gate_dec = [tuple(v) for v in gate_dec]
-    comp.cof_dec = [tuple(v) for v in cof_dec]
-    comp.gate_stream = gate_stream
+                    cof_dec[ci].append(i)
+                elif pipe:
+                    stream.append(pi)
+                    stream_in[i].append(pi)
+                    stream_out[pi].append(i)
+                else:
+                    comp.init_gate[i] += 1
+                    gate_dec[pi].append(i)
+            if stream:
+                gate_stream[i] = tuple(stream)
+            ci = coflow_of[i]
+            if ci >= 0:
+                # synchronized start: every member's preds must be done
+                for m in comp.coflows[ci]:
+                    for p in pred_lists[m]:
+                        comp.init_gate[i] += 1
+                        gate_dec[p].append(i)
+        # any effectively-pipelined in-edge marks the consumer
+        # stream-fed (top-priority class) — including one from a coflow
+        # member, whose edge otherwise gates at start
+        for i in range(n):
+            if pred_pipe[i] and any(pred_pipe[i]):
+                comp.stream_fed[i] = True
+        comp.stream_in = [tuple(v) for v in stream_in]
+        comp.stream_out = [tuple(v) for v in stream_out]
+        comp.has_streaming = any(stream_out)
+        comp.gate_dec = [tuple(v) for v in gate_dec]
+        comp.cof_dec = [tuple(v) for v in cof_dec]
+        comp.gate_stream = gate_stream
 
-    coflow_fed_by: list[list[int]] = [[] for _ in range(n)]
-    for ci, c in enumerate(comp.coflows):
-        for m in c:
-            for p in g.preds(names[m]):
-                coflow_fed_by[idx[p]].append(ci)
-    comp.coflow_fed_by = [tuple(v) for v in coflow_fed_by]
+        coflow_fed_by: list[list[int]] = [[] for _ in range(n)]
+        for ci, c in enumerate(comp.coflows):
+            for m in c:
+                for p in pred_lists[m]:
+                    coflow_fed_by[p].append(ci)
+        comp.coflow_fed_by = [tuple(v) for v in coflow_fed_by]
 
-    comp.succ = [tuple(idx[s] for s in g.succs(nm)) for nm in names]
     # tasks whose start-gate counters begin at zero: the only candidates
     # that can possibly pass the t=0 gating filter (everything else is
     # re-enqueued by the completion that decrements its counter)
     comp.roots = [i for i in range(n) if not comp.init_gate[i]]
+
+    # contention components: union-find over the interned flow→link
+    # incidence.  Flows in different components never share a link, so
+    # a completion/start/starvation flip re-waterfills only its own
+    # component (rates elsewhere are provably unchanged).  Coflows
+    # disable the split: MADD weights couple rates across the whole
+    # flow set and re-dirty every event, so everything collapses into
+    # one component (which reproduces the global fill exactly).
+    if comp.coflows:
+        comp.n_comps = 1 if comp.n_net else 0
+        comp.comp_of_net = [0] * comp.n_net
+        comp.simple = [False] * n
+    else:
+        parent = list(range(comp.n_links))
+
+        def find(x: int) -> int:
+            while parent[x] != x:
+                parent[x] = parent[parent[x]]
+                x = parent[x]
+            return x
+
+        for links in comp.flow_links:
+            if len(links) > 1:
+                r0 = find(links[0])
+                for l in links[1:]:
+                    r = find(l)
+                    if r != r0:
+                        if r < r0:
+                            parent[r0] = r
+                            r0 = r
+                        else:
+                            parent[r] = r0
+        comp_ids: dict = {}
+        comp_of: list[int] = []
+        for pos, links in enumerate(comp.flow_links):
+            key = find(links[0]) if links else ("lone", pos)
+            k = comp_ids.get(key)
+            if k is None:
+                k = comp_ids[key] = len(comp_ids)
+            comp_of.append(k)
+        comp.comp_of_net = comp_of
+        comp.n_comps = len(comp_ids)
+        simple = [False] * n
+        unit, size = comp.unit, comp.size
+        for i in comp.net_ids:
+            simple[i] = (not comp.stream_in[i]
+                         and not comp.stream_out[i]
+                         and unit[i] >= size[i])
+        comp.simple = simple
 
     comp.np_ready = np is not None
     if comp.np_ready:
@@ -614,7 +736,6 @@ def array_run(sim, horizon: float = 1e15):
     work = [0.0] * n
     rate = [0.0] * n
     cap = list(size)                 # cap_of default = size
-    runnable_set: set[int] = set()   # net positions, started & unfinished
     starved_net = [False] * comp.n_net
     started: list = [None] * n
     finished: list = [None] * n
@@ -632,12 +753,35 @@ def array_run(sim, horizon: float = 1e15):
     touched_sched: set[int] = set()  # only needs schedule_event (fresh
     #   capless starts, rate changes: their starvation state provably
     #   cannot have flipped, so the re-check loop skips them)
-    dirty_classes: set = set()
-    alloc_log: dict = {}
+    # component state: per contention component, the runnable net
+    # positions, the started-unfinished *simple* flows (whose
+    # completion events coalesce into one heap entry per component),
+    # the (class -> freeze sequence) replay log, and the lowest dirty
+    # priority class (fair: 0.0) since the last fill
+    comp_of = comp.comp_of_net
+    simple = comp.simple
+    n_comps = comp.n_comps
+    comp_runnable: list = [set() for _ in range(n_comps)]
+    comp_simple_active: list = [set() for _ in range(n_comps)]
+    comp_log: list = [None] * n_comps
+    comp_stamp = [0] * n_comps
+    comp_dirty: dict = {}
+    comp_resched: set[int] = set()
+    link_bw = comp.link_bw
+    residual = comp.link_bw_a.copy() if use_np else list(link_bw)
     heap: list = []
     stamp = [0] * n
     unfinished = n
     now = 0.0
+
+    def dirty_net(pos: int) -> None:
+        K = comp_of[pos]
+        c = cls_net[pos]
+        if c is None:                # fair policy: one class
+            c = 0.0
+        cur = comp_dirty.get(K)
+        if cur is None or c < cur:
+            comp_dirty[K] = c
 
     def delivered_fraction(p: int) -> float:
         if finished[p] is not None:
@@ -724,6 +868,26 @@ def array_run(sim, horizon: float = 1e15):
     slot_of = comp.slot_of
     gate_dec = comp.gate_dec
 
+    def schedule_comp(K: int) -> None:
+        """(Re)compute a component's next *completion* among its simple
+        flows: one heap entry per component instead of one per flow.
+        Each candidate time is the exact float schedule_event would
+        compute (``now + (size-work)/rate``), and min over them is the
+        earliest per-flow entry — so the event calendar is unchanged;
+        only the stale-entry volume shrinks from O(flows) to O(1) per
+        reallocation."""
+        st = comp_stamp[K] + 1
+        comp_stamp[K] = st
+        best = inf
+        for i in comp_simple_active[K]:
+            r = rate[i]
+            if r > EPS:
+                d = (size[i] - work[i]) / r
+                if d < best:
+                    best = d
+        if best < inf:
+            _defer((float(now + best), 2, K, st))
+
     def complete(i: int) -> None:
         nonlocal unfinished
         finished[i] = now
@@ -738,10 +902,13 @@ def array_run(sim, horizon: float = 1e15):
             rate[i] = 0.0
         else:
             pos = net_pos[i]
-            runnable_set.discard(pos)
+            K = comp_of[pos]
+            comp_runnable[K].discard(pos)
+            if simple[i]:
+                comp_simple_active[K].discard(i)
             if rate[i]:
                 rate[i] = 0.0
-                dirty_classes.add(cls_net[pos])
+                dirty_net(pos)
         candidates.update(succ[i])
         for s in gate_dec[i]:
             n_gate[s] -= 1
@@ -770,8 +937,7 @@ def array_run(sim, horizon: float = 1e15):
         nonlocal unfinished
         unfinished -= len(ids)
         active.difference_update(ids)
-        gone_pos: list[int] = []
-        succs: list[tuple] = []
+        succs: list = []
         for i in ids:
             finished[i] = now
             if has_slot[i]:
@@ -783,10 +949,13 @@ def array_run(sim, horizon: float = 1e15):
                 rate[i] = 0.0
             else:
                 pos = net_pos[i]
-                gone_pos.append(pos)
+                K = comp_of[pos]
+                comp_runnable[K].discard(pos)
+                if simple[i]:
+                    comp_simple_active[K].discard(i)
                 if rate[i]:
                     rate[i] = 0.0
-                    dirty_classes.add(cls_net[pos])
+                    dirty_net(pos)
             if succ[i]:
                 succs.append(succ[i])
             for s in gate_dec[i]:
@@ -808,7 +977,6 @@ def array_run(sim, horizon: float = 1e15):
                             candidates.update(succ[m])
                 for ci2 in comp.coflow_fed_by[i]:
                     candidates.update(coflows[ci2])
-        runnable_set.difference_update(gone_pos)
         candidates.update(chain.from_iterable(succs))
 
     def on_start(i: int) -> None:
@@ -827,8 +995,14 @@ def array_run(sim, horizon: float = 1e15):
         else:
             pos = net_pos[i]
             starved_net[pos] = is_starved
-            runnable_set.add(pos)
-            dirty_classes.add(cls_net[pos])
+            K = comp_of[pos]
+            comp_runnable[K].add(pos)
+            dirty_net(pos)
+            if simple[i]:
+                # coalesced: activation and the completion event ride on
+                # the component refill this dirty_net just forced
+                comp_simple_active[K].add(i)
+                return
         # only a pipelined-input cap can move between now and the
         # starvation pass — capless tasks can't flip
         (touched if stream_in[i] else touched_sched).add(i)
@@ -851,7 +1025,6 @@ def array_run(sim, horizon: float = 1e15):
                 # is immaterial (all effects are commutative set/flag
                 # updates) — skip the sort, inline the common case and
                 # batch the set bookkeeping
-                fresh_pos: list[int] = []
                 for i in startable:
                     started[i] = now
                     if stream_in[i] or stream_out[i] or size[i] <= EPS:
@@ -863,10 +1036,13 @@ def array_run(sim, horizon: float = 1e15):
                     pos = net_pos[i]
                     starved[i] = False
                     starved_net[pos] = False
-                    fresh_pos.append(pos)
-                    dirty_classes.add(cls_net[pos])
-                    touched_sched.add(i)
-                runnable_set.update(fresh_pos)
+                    K = comp_of[pos]
+                    comp_runnable[K].add(pos)
+                    dirty_net(pos)
+                    if simple[i]:
+                        comp_simple_active[K].add(i)
+                    else:
+                        touched_sched.add(i)
             else:
                 for i in sorted(startable, key=dispatch_rank.__getitem__):
                     if is_comp[i]:
@@ -910,94 +1086,120 @@ def array_run(sim, horizon: float = 1e15):
 
     any_coflow = bool(coflows)
 
-    def allocate() -> set:
-        """Waterfill classes from the lowest dirty one up (replaying the
-        logged freeze sequences of unchanged classes below), exactly as
-        the calendar core's allocate().  Groups of ≥48 flows use the
-        vectorized fill; smaller groups stay on the scalar port, whose
-        constant factors beat NumPy-call overhead at that size."""
-        changed: set[int] = set()
-        flows_pos = [p for p in sorted(runnable_set)
-                     if not starved_net[p]]
-        residual = comp.link_bw_a.copy() if use_np \
-            else list(comp.link_bw)
-        seen: set[int] = set()
-        link_order: list[int] = []
-        for p in flows_pos:
-            for l in flow_links[p]:
-                if l not in seen:
-                    seen.add(l)
-                    link_order.append(l)
-        lo_arr = None
-        if policy == "fair":
-            classes: list = [None]
-            lowest = None
-        else:
-            classes = sorted({cls_net[p] for p in flows_pos})
-            lowest = min(dirty_classes) if dirty_classes else None
-        new_log: dict = {}
-        for cls in classes:
-            if lowest is None or cls >= lowest or cls not in alloc_log:
-                # the freeze log is only ever replayed under the
-                # priority policy (fair always refills) — skip building
-                # it when it can never be read
-                seq = None if policy == "fair" else []
-                gpos = flows_pos if cls is None else \
-                    [p for p in flows_pos if cls_net[p] == cls]
-                # vector fill only when both the flow group and the link
-                # set are wide enough to amortize the NumPy call overhead
-                # (few shared links ⇒ few freeze iterations ⇒ the scalar
-                # port's O(links·iters) scan is already cheap)
-                big = use_np and len(gpos) >= 48 and len(link_order) >= 48
-                full = big and len(gpos) == comp.n_net
-                if full:
-                    sg_pos_a = comp.full_sg_pos
-                    sg_ids = comp.full_sorted_ids
-                elif big:
-                    ga = np.array(gpos, dtype=np.int64)
-                    o = np.argsort(comp.name_rank_a[comp.net_ids_a[ga]],
-                                   kind="stable")
-                    sg_pos_a = ga[o]
-                    sg_ids = comp.net_ids_a[sg_pos_a].tolist()
-                else:
-                    sg_pos = sorted(
-                        gpos, key=lambda p: comp.name_rank[net_ids[p]])
-                    sg_ids = [net_ids[p] for p in sg_pos]
-                gids = [net_ids[p] for p in gpos]
-                old = [rate[f] for f in gids]
-                weights = None
-                if any_coflow and any(coflow_of[f] >= 0 for f in sg_ids):
-                    weights = group_weights(sg_ids)
-                if big:
-                    if lo_arr is None:
-                        lo_arr = np.array(link_order, dtype=np.int64)
-                    _wf_core_np(sg_ids, comp.fl_ptr, comp.fl_flat,
-                                sg_pos_a, lo_arr, residual, rate,
-                                None if weights is None
-                                else np.array(weights), seq,
-                                prep=((comp.full_row_links,
-                                       comp.full_by_link,
-                                       comp.full_counts)
-                                      if full and weights is None
-                                      else None))
-                else:
-                    _wf_core_py(sg_ids, flow_links, sg_pos, link_order,
-                                residual, rate, weights, seq)
-                changed.update(f for f, o in zip(gids, old)
-                               if rate[f] != o)
-                new_log[cls] = seq
+    def allocate() -> list:
+        """Waterfill every *dirty component*, classes from that
+        component's lowest dirty one up (replaying the logged freeze
+        sequences of its unchanged classes below), exactly as the
+        calendar core's global allocate() — components share no links,
+        so an untouched component's rates (and the residual its links
+        hold) are provably the ones a full refill would recompute, and
+        it is skipped entirely.  Groups of ≥48 flows over ≥48 links use
+        the vectorized fill; smaller groups stay on the scalar port,
+        whose constant factors beat NumPy-call overhead at that size."""
+        changed: list = []
+        for K in sorted(comp_dirty):
+            positions = [p for p in sorted(comp_runnable[K])
+                         if not starved_net[p]]
+            old_log = comp_log[K]
+            if not positions:
+                comp_log[K] = None
+                continue
+            seen: set[int] = set()
+            link_order: list[int] = []
+            for p in positions:
+                for l in flow_links[p]:
+                    if l not in seen:
+                        seen.add(l)
+                        link_order.append(l)
+            for l in link_order:     # reset only this component's links
+                residual[l] = link_bw[l]
+            lo_arr = None
+            if policy == "fair":
+                classes: list = [None]
+                lowest = None
             else:
-                # unchanged class: replay the logged freeze sequence
-                for fid, alloc in alloc_log[cls]:
-                    rate[fid] = alloc
-                    for l in flow_links[net_pos[fid]]:
-                        v = residual[l] - alloc
-                        residual[l] = v if v > 0.0 else 0.0
-                new_log[cls] = alloc_log[cls]
-        alloc_log.clear()
-        alloc_log.update(new_log)
-        dirty_classes.clear()
+                classes = sorted({cls_net[p] for p in positions})
+                lowest = comp_dirty[K]
+            new_log: dict = {}
+            for cls in classes:
+                if lowest is None or cls >= lowest \
+                        or old_log is None or cls not in old_log:
+                    # the freeze log is only ever replayed under the
+                    # priority policy (fair always refills) — skip
+                    # building it when it can never be read
+                    seq = None if policy == "fair" else []
+                    gpos = positions if cls is None else \
+                        [p for p in positions if cls_net[p] == cls]
+                    big = use_np and len(gpos) >= 48 \
+                        and len(link_order) >= 48
+                    full = big and len(gpos) == comp.n_net
+                    if full:
+                        sg_pos_a = comp.full_sg_pos
+                        sg_ids = comp.full_sorted_ids
+                    elif big:
+                        ga = np.array(gpos, dtype=np.int64)
+                        o = np.argsort(
+                            comp.name_rank_a[comp.net_ids_a[ga]],
+                            kind="stable")
+                        sg_pos_a = ga[o]
+                        sg_ids = comp.net_ids_a[sg_pos_a].tolist()
+                    else:
+                        sg_pos = sorted(
+                            gpos,
+                            key=lambda p: comp.name_rank[net_ids[p]])
+                        sg_ids = [net_ids[p] for p in sg_pos]
+                    gids = [net_ids[p] for p in gpos]
+                    old = [rate[f] for f in gids]
+                    weights = None
+                    if any_coflow \
+                            and any(coflow_of[f] >= 0 for f in sg_ids):
+                        weights = group_weights(sg_ids)
+                    if big:
+                        if lo_arr is None:
+                            lo_arr = np.array(link_order, dtype=np.int64)
+                        _wf_core_np(sg_ids, comp.fl_ptr, comp.fl_flat,
+                                    sg_pos_a, lo_arr, residual, rate,
+                                    None if weights is None
+                                    else np.array(weights), seq,
+                                    prep=((comp.full_row_links,
+                                           comp.full_by_link,
+                                           comp.full_counts)
+                                          if full and weights is None
+                                          else None))
+                    else:
+                        _wf_core_py(sg_ids, flow_links, sg_pos,
+                                    link_order, residual, rate, weights,
+                                    seq)
+                    changed.extend(f for f, o in zip(gids, old)
+                                   if rate[f] != o)
+                    new_log[cls] = seq
+                else:
+                    # unchanged class: replay the logged freeze sequence
+                    for fid, alloc in old_log[cls]:
+                        rate[fid] = alloc
+                        for l in flow_links[net_pos[fid]]:
+                            v = residual[l] - alloc
+                            residual[l] = v if v > 0.0 else 0.0
+                    new_log[cls] = old_log[cls]
+            comp_log[K] = new_log
+        comp_resched.update(comp_dirty)
+        comp_dirty.clear()
         return changed
+
+    def apply_changed(changed) -> None:
+        """Route freshly waterfilled rates to their event mechanism:
+        coalesced (simple) flows only need their ``active`` membership
+        maintained — their component's next-completion entry is being
+        recomputed by schedule_comp — while everything else re-derives
+        its per-task event."""
+        for i in changed:
+            if simple[i]:
+                if rate[i] > EPS:
+                    active.add(i)
+                else:
+                    active.discard(i)
+            else:
+                touched_sched.add(i)
 
     # -- initialisation ------------------------------------------------
     for nm, v in sim.releases.items():
@@ -1005,13 +1207,16 @@ def array_run(sim, horizon: float = 1e15):
             heappush(heap, (float(v), 0, comp.idx[nm], 0))
     candidates.update(comp.roots)
     process_starts()
-    if dirty_classes:
-        touched_sched.update(allocate())
+    if comp_dirty:
+        apply_changed(allocate())
     for i in touched:
         schedule_event(i)
     for i in touched_sched:
         if i not in touched:
             schedule_event(i)
+    for K in comp_resched:
+        schedule_comp(K)
+    comp_resched.clear()
     flush_events()
     touched.clear()
     touched_sched.clear()
@@ -1031,6 +1236,9 @@ def array_run(sim, horizon: float = 1e15):
                 heappop(heap)
                 continue
             if kind == 0 and started[i] is not None:
+                heappop(heap)
+                continue
+            if kind == 2 and comp_stamp[i] != stp:
                 heappop(heap)
                 continue
             t_next = tm
@@ -1055,6 +1263,10 @@ def array_run(sim, horizon: float = 1e15):
                 batch.append(i)
             elif kind == 0 and started[i] is None:
                 candidates.add(i)
+            elif kind == 2 and comp_stamp[i] == stp:
+                # a component's next-completion fired; re-derive it even
+                # if no completion/reallocation follows (FP shortfall)
+                comp_resched.add(i)
 
         # completions (a task reaching its cap/size keeps rate > 0 until
         # this very event — scan the active set)
@@ -1103,19 +1315,21 @@ def array_run(sim, horizon: float = 1e15):
                     starved_net[pos] = is_starved
                     if is_starved:
                         rate[i] = 0.0
-                    dirty_classes.add(cls_net[pos])
+                    dirty_net(pos)
             touched.add(i)
 
-        # MADD weights drift with remaining work
+        # MADD weights drift with remaining work (coflows collapse the
+        # component split, so this dirties the single component at the
+        # members' lowest class — the global lowest, as before)
         if coflows:
             for ci, c in enumerate(coflows):
                 if any(started[m] is not None and finished[m] is None
                        for m in c):
                     for m in c:
-                        dirty_classes.add(cls_net[net_pos[m]])
+                        dirty_net(net_pos[m])
 
-        if dirty_classes:
-            touched_sched.update(allocate())
+        if comp_dirty:
+            apply_changed(allocate())
 
         for i in touched:
             schedule_event(i)
@@ -1126,6 +1340,9 @@ def array_run(sim, horizon: float = 1e15):
             if finished[i] is None and i not in touched \
                     and i not in touched_sched:
                 schedule_event(i)
+        for K in comp_resched:
+            schedule_comp(K)
+        comp_resched.clear()
         flush_events()
         touched.clear()
         touched_sched.clear()

@@ -340,6 +340,33 @@ def fat_tree_shuffle(k: int = 8, *, stride: int = 2,
 
 
 # ----------------------------------------------------------------------
+# deep serial chain (recursion-depth / event-trickle stress scenario)
+# ----------------------------------------------------------------------
+def serial_chain(n_tasks: int, *, size: float = 1.0, host: str = "H",
+                 pipelined: bool = False, unit: Optional[float] = None,
+                 job: str = "job0") -> MXDAG:
+    """A single path of ``n_tasks`` compute tasks on one host.
+
+    The degenerate DAG shape that stresses depth-sensitive code:
+    recursive path enumeration (``paths_between``/``copaths`` crashed
+    with RecursionError beyond ~1000 tasks before being rewritten
+    iteratively), the analytic passes' level count (one task per
+    level), and the DES event trickle (every completion is its own
+    event — the regime the ddl builder hits at 1024 layers).
+    """
+    if n_tasks < 1:
+        raise ValueError("need n_tasks >= 1")
+    g = MXDAG(f"chain{n_tasks}")
+    prev = None
+    for i in range(n_tasks):
+        t = g.add(compute(f"t{i:06d}", size, host, unit=unit, job=job))
+        if prev is not None:
+            g.add_edge(prev, t, pipelined=pipelined)
+        prev = t
+    return g
+
+
+# ----------------------------------------------------------------------
 # Graphene-style random layered DAG (cluster-scale synthetic workload)
 # ----------------------------------------------------------------------
 def random_layered(n_tasks: int = 20000, *, n_hosts: int = 256,

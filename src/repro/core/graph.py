@@ -427,9 +427,17 @@ class MXDAG:
         return max((t.completion for t in timing.values()), default=0.0)
 
     def with_slack(self, rsrc: Optional[dict[str, float]] = None,
+                   release: Optional[dict[str, float]] = None,
                    ) -> dict[str, NodeTiming]:
-        """Forward + reverse pass: fills ``latest_completion`` (⇒ slack)."""
-        timing = self.evaluate(rsrc)
+        """Forward + reverse pass: fills ``latest_completion`` (⇒ slack).
+
+        ``release`` threads per-task earliest start times through the
+        forward pass, exactly as :meth:`evaluate`/:meth:`makespan`
+        accept them — without it the slack of a late-released branch is
+        overstated (its completion is computed as if it could start at
+        t=0 while the makespan it is compared against cannot shrink).
+        """
+        timing = self.evaluate(rsrc, release)
         ms = max((t.completion for t in timing.values()), default=0.0)
         r = rsrc or {}
         times = {n: t.time(r.get(n, 1.0)) for n, t in self.tasks.items()}
@@ -453,9 +461,16 @@ class MXDAG:
         return timing
 
     def critical_path(self, rsrc: Optional[dict[str, float]] = None,
+                      release: Optional[dict[str, float]] = None,
                       ) -> list[str]:
-        """Longest path under the analytic evaluator (ties: lexicographic)."""
-        timing = self.evaluate(rsrc)
+        """Longest path under the analytic evaluator (ties: lexicographic).
+
+        ``release`` carries per-task earliest starts into the forward
+        pass (e.g. observed starts from a runtime monitor); the
+        walk-back stops where a release, rather than a predecessor,
+        binds the completion.
+        """
+        timing = self.evaluate(rsrc, release)
         r = rsrc or {}
         # walk back from the sink with max completion
         cur = max(self.sinks(), key=lambda n: (timing[n].completion, n))
@@ -488,18 +503,35 @@ class MXDAG:
     # ------------------------------------------------------------------
     def paths_between(self, head: str, tail: str,
                       limit: int = 10000) -> list[list[str]]:
+        """All directed paths head→tail, in DFS (adjacency) order.
+
+        Iterative: the previous recursive DFS hit Python's recursion
+        limit (RecursionError) on chains deeper than ~1000 tasks —
+        ``ddl(1024)``-scale serial DAGs exceed it.  The explicit stack
+        reproduces the recursive enumeration order exactly.
+        """
         out: list[list[str]] = []
-
-        def dfs(n: str, acc: list[str]) -> None:
+        # stack of (node, #successors already expanded); path mirrors it
+        path = [head]
+        stack = [(head, 0)]
+        while stack:
             if len(out) >= limit:
-                return
-            if n == tail:
-                out.append(acc + [n])
-                return
-            for s in self._succ[n]:
-                dfs(s, acc + [n])
-
-        dfs(head, [])
+                break
+            n, child = stack[-1]
+            if n == tail and child == 0:
+                out.append(list(path))
+                stack.pop()
+                path.pop()
+                continue
+            succs = self._succ[n]
+            if child >= len(succs):
+                stack.pop()
+                path.pop()
+                continue
+            stack[-1] = (n, child + 1)
+            s = succs[child]
+            stack.append((s, 0))
+            path.append(s)
         return out
 
     def copaths(self, limit: int = 10000) -> dict[tuple[str, str], list[list[str]]]:

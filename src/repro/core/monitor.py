@@ -100,6 +100,18 @@ class Monitor:
             g.replace_task(dataclasses.replace(t, size=new_size, unit=unit))
         return g
 
-    def replan_critical_path(self) -> list[str]:
-        """New critical path after folding in runtime observations."""
-        return self.reestimated_graph().critical_path()
+    def replan_critical_path(self, release: Optional[dict[str, float]]
+                             = None) -> list[str]:
+        """New critical path after folding in runtime observations.
+
+        Observed tasks are pinned to their starts: each one's planned
+        start is threaded into the analytic pass as a ``release`` (the
+        progress-rate re-estimation already extrapolates from that
+        start), so a branch that began late stays late in the replanned
+        path instead of being evaluated as if it could restart at t=0.
+        Pass ``release`` explicitly to override — e.g. with actually
+        observed start times when they diverge from the plan.
+        """
+        if release is None:
+            release = {n: self.expected.start[n] for n in self.obs}
+        return self.reestimated_graph().critical_path(release=release)

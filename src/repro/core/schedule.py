@@ -27,6 +27,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+from repro.core import arrayanalytic
 from repro.core.cluster import Cluster
 from repro.core.fabric import nic_in, nic_out
 from repro.core.graph import MXDAG
@@ -332,6 +333,21 @@ class MXDAGScheduler:
     start/finish moved, or the accepted edge itself).  Both default on;
     benchmarks flip them off to measure the seed behaviour.
 
+    ``analytic`` picks the substrate for the slack/critical-path passes:
+    ``"array"`` runs them as compiled level-batched passes over
+    :mod:`repro.core.arrayanalytic`'s interned arrays — *the same
+    compile the flat-array DES engine reuses* (``arraysim._compile``
+    consumes its name table and adjacency), cached per graph version so
+    a schedule() call compiles the graph once for analytics and DES
+    together — with ``_priorities`` as an argsort-rank over the slack
+    vector; ``"dict"`` is ``MXDAG.with_slack``/``critical_path``
+    verbatim (the pre-compiled pipeline, retained as the differential
+    oracle and benchmark "before"); ``"auto"`` (default) mirrors the
+    DES engine threshold.  The two substrates are bit-equal, so the
+    resulting Schedule is identical either way — pinned by the
+    ``scale.schedule_*.ref_match`` CI rows and the arrayanalytic golden
+    tests.
+
     On a fully-bound graph with ``try_routing`` off (the defaults), the
     decision pipeline and its outputs are bit-identical to the
     pre-placement scheduler.
@@ -341,7 +357,8 @@ class MXDAGScheduler:
                  slack_eps: float = 1e-9, memoize: bool = True,
                  incremental_pipelining: bool = True,
                  placement: "Optional[PlacementScheduler]" = None,
-                 try_routing: bool = False, engine: str = "auto"):
+                 try_routing: bool = False, engine: str = "auto",
+                 analytic: str = "auto"):
         self.try_pipelining = try_pipelining
         self.slack_eps = slack_eps
         self.memoize = memoize
@@ -358,25 +375,73 @@ class MXDAGScheduler:
         if engine not in ("auto", "array", "calendar", "reference"):
             raise ValueError(f"unknown engine {engine}")
         self.engine = engine
+        # analytic substrate for the forward/reverse slack passes and
+        # the critical-path walk: "array" runs them as compiled
+        # level-batched passes over repro.core.arrayanalytic's interned
+        # arrays (bit-equal to the dict implementation — the golden
+        # tests assert ==), "dict" is MXDAG.with_slack/critical_path
+        # verbatim (the pre-compiled-analytics decision pipeline, kept
+        # as the benchmark "before" and differential oracle).  "auto"
+        # mirrors the DES engine threshold.
+        if analytic not in ("auto", "array", "dict"):
+            raise ValueError(f"unknown analytic {analytic}")
+        self.analytic = analytic
 
     def _engine_for(self, g: MXDAG) -> str:
         if self.engine != "auto":
             return self.engine
         return "array" if len(g.tasks) >= 256 else "calendar"
 
+    def _use_array_analytic(self, g: MXDAG) -> bool:
+        if self.analytic != "auto":
+            return self.analytic == "array"
+        return len(g.tasks) >= 256
+
+    def _timing_view(self, g: MXDAG) -> tuple[list, list, list]:
+        """(names, slack, latest_completion) per task — the only pieces
+        of the forward/reverse analytic pass the decision pipeline
+        consumes — from the compiled or the dict substrate (bit-equal
+        by the arrayanalytic golden tests; name order may differ, which
+        nothing downstream observes)."""
+        if self._use_array_analytic(g):
+            at = arrayanalytic.analyze(g)
+            return at.names, at.slack, at.latest
+        timing = g.with_slack()
+        names = list(timing)
+        return (names, [timing[n].slack for n in names],
+                [timing[n].latest_completion for n in names])
+
     def _priorities(self, graph: MXDAG,
                     timing: Optional[dict] = None) -> dict[str, float]:
-        timing = timing if timing is not None else graph.with_slack()
+        """Principle-1 priority classes from per-task slack.
+
+        ``timing`` may be a ``with_slack()`` dict or ``None`` (computed
+        via the configured analytic substrate).  The compiled path is an
+        argsort-rank over the slack vector; values are identical to the
+        dict path because the rank map is the same sorted-unique-rounded
+        table either way.
+        """
+        if timing is not None:
+            names = list(timing)
+            slack = [timing[n].slack for n in names]
+        else:
+            names, slack, _ = self._timing_view(graph)
+        return self._priorities_from(names, slack)
+
+    def _priorities_from(self, names: list, slack: list,
+                         ) -> dict[str, float]:
+        rounded = [round(s, 12) for s in slack]
+        ranks = sorted(set(rounded))
+        rank = {s: i for i, s in enumerate(ranks)}
+        denom = max(len(ranks), 1)
+        eps = self.slack_eps
         prio: dict[str, float] = {}
-        slacks = sorted({round(t.slack, 12) for t in timing.values()})
-        rank = {s: i for i, s in enumerate(slacks)}
-        denom = max(len(slacks), 1)
-        for n, tm in timing.items():
-            if tm.slack <= self.slack_eps:
+        for n, s, rs in zip(names, slack, rounded):
+            if s <= eps:
                 prio[n] = CRITICAL
             else:
                 # rank-normalized slack keeps classes strictly above CRITICAL
-                prio[n] = NONCRITICAL + rank[round(tm.slack, 12)] / denom
+                prio[n] = NONCRITICAL + rank[rs] / denom
         return prio
 
     def _sim(self, g: MXDAG, cluster: Optional[Cluster],
@@ -391,7 +456,12 @@ class MXDAGScheduler:
         if sig is None:
             sig_ids = cache.setdefault("sig_ids", {})
             sig = sig_ids.setdefault(g.signature(), len(sig_ids))
-        key = (sig, policy, tuple(sorted(prio.items())),
+        # prio key in dict-insertion order: every producer builds the
+        # map in a deterministic per-graph order, so equal content ⇒
+        # equal key in practice, and a differently-ordered duplicate
+        # only costs a cache miss (re-simulating is always correct) —
+        # while skipping the O(n log n) sort per memo lookup
+        key = (sig, policy, tuple(prio.items()),
                tuple(sorted(routes.items())) if routes else None)
         res = cache.get(key)
         if res is None:
@@ -415,6 +485,16 @@ class MXDAGScheduler:
         latest-completion, and never return anything worse than plain fair
         sharing.  ``cache`` memoizes DES runs across _best calls;
         ``routes`` (per-flow path overrides) apply to every run.
+
+        Compiled-analytic fast path: when every task lands in the
+        CRITICAL class (a fully-critical DAG — e.g. any symmetric
+        shuffle), the "priority" run is *provably identical* to the
+        "fair" run — one priority class means one waterfill group, the
+        same (priority, name) dispatch order, and replay never fires —
+        so the fair guard reuses the priority result instead of paying
+        a second DES run.  The candidate comparison (priority wins
+        ties) is unchanged, so the Schedule is bit-identical; the dict
+        substrate keeps the pre-PR two-run pipeline verbatim.
         """
         if cache is not None:
             # intern the graph signature: hash the (large) task/edge tuple
@@ -428,27 +508,39 @@ class MXDAGScheduler:
             return self._sim(g, cluster, cache, policy, prio,
                              routes, sig=sig)
 
-        timing = g.with_slack()
-        prio = self._priorities(g, timing)
+        names, slack, latest = self._timing_view(g)
+        prio = self._priorities_from(names, slack)
         cands: list[tuple[str, dict[str, float], float, SimResult]] = []
         cur = dict(prio)
         for _ in range(len(g.tasks)):
             res = sim("priority", cur)
             cands.append(("priority", dict(cur), res.makespan, res))
-            late = [n for n, tm in timing.items()
-                    if cur.get(n, 0.0) > CRITICAL
-                    and res.finish[n] > tm.latest_completion + 1e-9]
+            finish = res.finish
+            cget = cur.get
+            late = [n for n, lc in zip(names, latest)
+                    if cget(n, 0.0) > CRITICAL
+                    and finish[n] > lc + 1e-9]
             if not late:
                 break
             for n in late:
                 cur[n] = CRITICAL
-        fair = sim("fair", {})
+        if cur and self._use_array_analytic(g) \
+                and all(v == CRITICAL for v in cur.values()):
+            fair = res                   # single class ≡ fair (see above)
+        else:
+            fair = sim("fair", {})
         cands.append(("fair", {}, fair.makespan, fair))
         return min(cands, key=lambda c: (c[2], c[0] == "fair"))
 
     def schedule(self, graph: MXDAG,
                  cluster: Optional[Cluster] = None) -> Schedule:
-        g = graph.copy()
+        # the pipeline only mutates the working graph when it flips
+        # pipelining flags; without that stage every step is read-only
+        # (bind() already copies), so the input graph is used as-is and
+        # its version-keyed compiled caches (analytic arrays, DES
+        # compile, resource maps) stay warm across repeated schedule()
+        # calls — what-if sweeps re-schedule the same graph constantly
+        g = graph.copy() if self.try_pipelining else graph
         cache: Optional[dict] = {} if self.memoize else None
 
         assignment: dict = {}
@@ -504,11 +596,13 @@ class MXDAGScheduler:
             routes, policy, prio, best, best_res = self._route_select(
                 g, cluster, cache, policy, prio, best, best_res)
 
+        cp = arrayanalytic.critical_path(g) \
+            if self._use_array_analytic(g) else g.critical_path()
         return Schedule(graph=g, policy=policy, priorities=prio,
                         placement=assignment, routes=routes,
                         meta={"pipelined": sorted(k for k, v in
                                                   decisions.items() if v),
-                              "critical_path": g.critical_path(),
+                              "critical_path": cp,
                               "predicted_makespan": best})
 
     def _route_select(self, g: MXDAG, cluster: Cluster,

@@ -70,7 +70,11 @@ Engines
   member-sync preconditions, with per-completion decrement lists —
   equivalent to the calendar's gate re-scan because gating is
   monotone); streaming-predecessor adjacency; coflow membership and
-  slot-pool interning.  Run state is flat float64 work/rate vectors and
+  slot-pool interning; *contention components* (union-find over the
+  link incidence) so a completion re-waterfills only the flows
+  sharing its component, with per-component coalesced next-completion
+  heap entries for streaming-free unit-free flows (see the arraysim
+  module docstring).  Run state is flat float64 work/rate vectors and
   int heap entries.  NumPy is optional and import-guarded: with it, the
   waterfill's bottleneck search and batch freezing run as array
   reductions over the incidence CSR; without it (the pure-stdlib core
@@ -257,16 +261,6 @@ class Simulator:
         self.prio = dict(priorities or {})
         self.releases = dict(releases or {})
         self.coflows = [set(c) for c in (coflows or [])]
-        # resource paths, resolved once: a compute task's processor pool, a
-        # flow's full link path (endpoint NICs only on big-switch clusters)
-        cached = graph.__dict__.get("_res_cache")
-        if cached is not None and cached[0] == graph._version \
-                and cached[1] is cluster:
-            base_res = cached[2]
-        else:
-            base_res = {n: cluster.resources_for(t)
-                        for n, t in graph.tasks.items()}
-            graph._res_cache = (graph._version, cluster, base_res)
         # per-flow route overrides (routing as a scheduling decision): an
         # overlay on a fresh dict, so the version-keyed base cache is
         # never poisoned by one run's route choices
@@ -293,9 +287,6 @@ class Simulator:
                 if bad:
                     raise KeyError(f"route override for {n} uses "
                                    f"unknown fabric links {bad}")
-            self._res = {**base_res, **self.routes}
-        else:
-            self._res = base_res
         self._coflow_of: dict[str, int] = {}
         for i, c in enumerate(self.coflows):
             for n in c:
@@ -304,6 +295,32 @@ class Simulator:
                 if self.g.tasks[n].kind is not TaskKind.NETWORK:
                     raise ValueError(f"coflow member {n} must be a flow")
                 self._coflow_of[n] = i
+
+    @property
+    def _res(self) -> dict:
+        """Resource paths, resolved lazily and cached: a compute task's
+        processor pool, a flow's full link path (endpoint NICs only on
+        big-switch clusters), with this run's route overrides overlaid.
+        The base map is cached on the graph per (version, cluster); it
+        is only materialized for the calendar/reference engines and for
+        fabric/route compiles — the big-switch array compile interns
+        links straight from the task endpoints and never builds the
+        string map.
+        """
+        res = self.__dict__.get("_res_map")
+        if res is None:
+            graph, cluster = self.g, self.cluster
+            cached = graph.__dict__.get("_res_cache")
+            if cached is not None and cached[0] == graph._version \
+                    and cached[1] is cluster:
+                base_res = cached[2]
+            else:
+                base_res = {n: cluster.resources_for(t)
+                            for n, t in graph.tasks.items()}
+                graph._res_cache = (graph._version, cluster, base_res)
+            res = {**base_res, **self.routes} if self.routes else base_res
+            self.__dict__["_res_map"] = res
+        return res
 
     def run(self, horizon: float = 1e15) -> SimResult:
         """Simulate to completion with the configured engine."""

@@ -27,7 +27,12 @@ class WhatIfResult:
 
     @property
     def speedup(self) -> float:
-        return self.baseline / self.variant if self.variant > 0 else float("inf")
+        """baseline/variant; a zero-makespan variant is "infinitely
+        faster" only if the baseline was actually slower — two equal
+        (including both-zero) makespans are a 1.0, not an inf."""
+        if self.variant > 0:
+            return self.baseline / self.variant
+        return 1.0 if self.variant == self.baseline else float("inf")
 
     @property
     def helps(self) -> bool:
@@ -86,9 +91,19 @@ class WhatIf:
         return WhatIfResult(self.baseline(), self._makespan(g))
 
     def set_unit(self, task: str, unit: Optional[float]) -> WhatIfResult:
-        """Change a task's pipeline unit (chunk) size."""
+        """Change a task's pipeline unit (chunk) size.
+
+        A candidate unit above the task's size is clamped to the size
+        (``unit == size`` ⇒ not pipelineable), exactly as
+        :meth:`repartition` clamps a surviving unit when shrinking a
+        task — a sweep crossing the task size answers "what if the
+        chunking were coarser" instead of crashing mid-sweep on
+        MXTask's ``unit <= size`` validation.
+        """
         g = self.graph.copy()
         t = g.tasks[task]
+        if unit is not None and t.size > 0:
+            unit = min(unit, t.size)
         g.replace_task(dataclasses.replace(t, unit=unit))
         return WhatIfResult(self.baseline(), self._makespan(g))
 

@@ -1,0 +1,244 @@
+"""Compiled analytic layer tests: golden *bit-exact* equivalence of
+arrayanalytic.analyze/critical_path and the scheduler's compiled
+priorities against the dict implementations (MXDAG.with_slack /
+critical_path / MXDAGScheduler._priorities) on every builder scenario,
+compile caching, the numpy-stubbed stdlib fallback, and a hypothesis
+property over random layered DAGs.
+"""
+import importlib
+import sys
+
+import pytest
+
+from repro.core import MXDAG, MXDAGScheduler, compute, flow
+from repro.core import arrayanalytic, builders
+
+
+def scenario_graphs():
+    """Every builder scenario the dict/array equivalence must cover,
+    including pipelined and released graphs."""
+    gs = [builders.fig1_jobs(), builders.fig2a(), builders.fig2b()]
+    gs += [builders.fig3_case(c) for c in range(4)]
+    gs.append(builders.ddl(8, push=2.0, pull=2.0))
+    gs.append(builders.ddl(8, push=2.0, pull=2.0, unit_frac=0.25))
+    gs.append(builders.mapreduce("mr", 8, 8))
+    piped = builders.mapreduce("mrp", 6, 6, unit_frac=0.25)
+    for e in list(piped.edges):
+        piped.set_pipelined(*e, True)
+    gs.append(piped)
+    g, _ = builders.oversubscribed_fanin(4, oversubscription=4.0)
+    gs.append(g)
+    g, _ = builders.fat_tree_shuffle(8, stride=2)
+    gs.append(g)
+    gs.append(builders.serial_chain(64, pipelined=True, unit=0.25))
+    gs.append(builders.random_layered(800, n_hosts=32, min_width=8,
+                                      max_width=32, seed=11))
+    for j in builders.mapreduce_pair():
+        gs.append(j)
+    return gs
+
+
+def assert_bit_equal(g, rsrc=None, release=None):
+    """analyze()/critical_path() == the dict passes, with ``==`` — the
+    compiled layer's contract is bit-exactness, not approximation."""
+    at = arrayanalytic.analyze(g, rsrc, release)
+    d = g.with_slack(rsrc, release)
+    assert set(d) == set(at.names)
+    for i, nm in enumerate(at.names):
+        tm = d[nm]
+        assert tm.ready == at.ready[i], nm
+        assert tm.first_out == at.first_out[i], nm
+        assert tm.completion == at.completion[i], nm
+        assert tm.latest_completion == at.latest[i], nm
+        assert tm.slack == at.slack[i], nm
+    assert at.makespan == g.makespan(rsrc, release)
+    assert arrayanalytic.critical_path(g, rsrc, release) \
+        == g.critical_path(rsrc, release)
+    # to_dict() round-trips into the exact with_slack() mapping
+    assert at.to_dict() == d
+
+
+class TestGoldenEquivalence:
+    def test_every_builder_scenario(self):
+        for g in scenario_graphs():
+            assert_bit_equal(g)
+
+    def test_with_resources(self):
+        g = builders.fig1_jobs()
+        assert_bit_equal(g, rsrc={"f1": 0.5, "b": 0.25, "f3": 1.0})
+        g2 = builders.ddl(8, push=2.0, pull=2.0, unit_frac=0.25)
+        assert_bit_equal(g2, rsrc={f"push{i}": 0.5 for i in range(8)})
+
+    def test_with_releases(self):
+        g = builders.fig1_jobs()
+        assert_bit_equal(g, release={"f3": 7.0, "a": 1.5})
+        g2 = builders.mapreduce("mr", 6, 6)
+        assert_bit_equal(g2, release={"mr.m0": 3.0, "mr.r5": 10.0})
+
+    def test_rsrc_validation_matches_task_time(self):
+        g = builders.fig1_jobs()
+        with pytest.raises(ValueError, match="rsrc must be in"):
+            arrayanalytic.analyze(g, rsrc={"f1": 0.0})
+        with pytest.raises(ValueError, match="rsrc must be in"):
+            arrayanalytic.analyze(g, rsrc={"f1": 1.5})
+
+    def test_priorities_equal_dict_path(self):
+        for g in scenario_graphs():
+            sa = MXDAGScheduler(analytic="array")
+            sd = MXDAGScheduler(analytic="dict")
+            assert sa._priorities(g) == sd._priorities(g), g.name
+
+    def test_release_shrinks_overstated_slack(self):
+        """with_slack() used to drop releases: a late-released branch
+        looked slack-rich even when its release makes it critical."""
+        g = MXDAG("rel")
+        a = g.add(compute("a", 4.0, "A"))
+        b = g.add(compute("b", 1.0, "B"))
+        without = g.with_slack()
+        with_rel = g.with_slack(release={"b": 6.0})
+        assert without["b"].slack == pytest.approx(3.0)
+        # released at 6, b finishes at 7 and becomes the critical sink
+        assert with_rel["b"].slack == pytest.approx(0.0)
+        assert with_rel["a"].slack == pytest.approx(3.0)
+        assert g.critical_path(release={"b": 6.0}) == ["b"]
+        assert_bit_equal(g, release={"b": 6.0})
+
+
+class TestCompileCache:
+    def test_cached_per_graph_version(self):
+        g = builders.mapreduce("mr", 4, 4)
+        c1 = arrayanalytic.compile_analytic(g)
+        assert arrayanalytic.compile_analytic(g) is c1
+        g.set_pipelined(*next(iter(g.edges)), True)
+        assert arrayanalytic.compile_analytic(g) is not c1
+
+    def test_shared_with_arraysim_compile(self):
+        from repro.core import arraysim
+        from repro.core.simulator import Simulator
+        g = builders.mapreduce("mr", 4, 4)
+        an = arrayanalytic.compile_analytic(g)
+        sim = arraysim.compile_sim(Simulator(g))
+        assert sim.names is an.names
+        assert sim.name_rank is an.name_rank
+        assert sim.size is an.size
+
+
+class TestSchedulerEquivalence:
+    def test_schedule_outputs_identical(self):
+        """analytic="array" and analytic="dict" produce bit-identical
+        Schedules (priorities, policy, critical path, prediction)."""
+        cases = [
+            (builders.fig1_jobs(), dict()),
+            (builders.fig3(), dict()),
+            (builders.ddl(8, push=2.0, pull=2.0),
+             dict(try_pipelining=False)),
+            (builders.ddl(6, push=2.0, pull=2.0, unit_frac=0.25), dict()),
+            (builders.mapreduce("mr", 6, 6), dict(try_pipelining=False)),
+        ]
+        for g, kw in cases:
+            sa = MXDAGScheduler(analytic="array", **kw).schedule(g.copy())
+            sd = MXDAGScheduler(analytic="dict", **kw).schedule(g.copy())
+            assert sa.policy == sd.policy, g.name
+            assert sa.priorities == sd.priorities, g.name
+            assert sa.meta["critical_path"] == sd.meta["critical_path"]
+            assert sa.meta["predicted_makespan"] \
+                == sd.meta["predicted_makespan"]
+            assert sa.meta["pipelined"] == sd.meta["pipelined"]
+
+    def test_unknown_analytic_rejected(self):
+        with pytest.raises(ValueError, match="unknown analytic"):
+            MXDAGScheduler(analytic="quantum")
+
+
+class TestNumpyFallback:
+    def test_stubbed_numpy_import_falls_back(self):
+        """The compiled layer must run pure-stdlib when numpy is absent
+        (core CI lane) and produce bit-identical results."""
+        cases = [builders.fig2b(),
+                 builders.ddl(6, push=2.0, pull=2.0, unit_frac=0.25),
+                 builders.random_layered(400, n_hosts=16, min_width=4,
+                                         max_width=16, seed=3)]
+        had_np = arrayanalytic.np is not None
+        with_np = None
+        if had_np:
+            with_np = [(arrayanalytic.analyze(g),
+                        arrayanalytic.critical_path(g)) for g in cases]
+        saved = sys.modules.get("numpy")
+        sys.modules["numpy"] = None      # import numpy raises ImportError
+        try:
+            importlib.reload(arrayanalytic)
+            assert arrayanalytic.np is None
+            for k, g in enumerate(cases):
+                g2 = g.copy()            # fresh cache: stdlib compile
+                at = arrayanalytic.analyze(g2)
+                d = g2.with_slack()
+                for i, nm in enumerate(at.names):
+                    assert d[nm].completion == at.completion[i]
+                    assert d[nm].latest_completion == at.latest[i]
+                cp = arrayanalytic.critical_path(g2)
+                assert cp == g2.critical_path()
+                if with_np is not None:
+                    a_np, cp_np = with_np[k]
+                    assert at.completion == a_np.completion
+                    assert at.latest == a_np.latest
+                    assert cp == cp_np
+        finally:
+            if saved is None:
+                del sys.modules["numpy"]
+            else:
+                sys.modules["numpy"] = saved
+            importlib.reload(arrayanalytic)
+        assert (arrayanalytic.np is not None) == had_np
+
+    def test_np_compiled_graph_survives_numpy_removal(self):
+        """A graph compiled with numpy mirrors still analyzes correctly
+        through the stdlib path when numpy later vanishes (the analyze
+        guard is on the module's np, not just the compile flag)."""
+        g = builders.fig2a()
+        arrayanalytic.compile_analytic(g)      # maybe-with-np compile
+        saved = sys.modules.get("numpy")
+        sys.modules["numpy"] = None
+        try:
+            importlib.reload(arrayanalytic)
+            at = arrayanalytic.analyze(g)      # cached comp, stdlib walk
+            d = g.with_slack()
+            for i, nm in enumerate(at.names):
+                assert d[nm].completion == at.completion[i]
+        finally:
+            if saved is None:
+                del sys.modules["numpy"]
+            else:
+                sys.modules["numpy"] = saved
+            importlib.reload(arrayanalytic)
+
+
+hypothesis = None
+try:
+    import hypothesis
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    pass
+
+
+if hypothesis is not None:
+    class TestAnalyticProperty:
+        @given(n=st.integers(min_value=2, max_value=120),
+               seed=st.integers(min_value=0, max_value=2**16),
+               frac=st.sampled_from([None, 0.25, 0.5]))
+        @settings(max_examples=30, deadline=None)
+        def test_random_layered_bit_equal(self, n, seed, frac):
+            g = builders.random_layered(
+                max(n, 2), n_hosts=16, min_width=2, max_width=16,
+                seed=seed)
+            if frac is not None:
+                import dataclasses
+                # deterministically pipeline some edges to exercise the
+                # streaming branches of both passes
+                for i, e in enumerate(list(g.edges)):
+                    if (i * 2654435761 + seed) % 3 == 0:
+                        g.set_pipelined(*e, True)
+                for j, (nm, t) in enumerate(list(g.tasks.items())):
+                    if (j + seed) % 2 and t.size > 0:
+                        g.replace_task(dataclasses.replace(
+                            t, unit=t.size * frac))
+            assert_bit_equal(g)

@@ -85,6 +85,58 @@ class TestDifferential:
         ref = Simulator(g)._reference_run()
         assert res.makespan == pytest.approx(ref.makespan, abs=1e-6)
 
+    def test_disjoint_components_with_priorities(self):
+        """Component-level reallocation: flow families sharing no links
+        refill independently — results must stay per-task identical to
+        the calendar core's global refill, across priority classes,
+        releases and staggered starts."""
+        g = MXDAG("comps")
+        for k in range(4):                       # 4 disjoint NIC pairs
+            a = g.add(compute(f"a{k}", 0.5 * (k + 1), f"S{k}"))
+            for j in range(3):
+                f = g.add(flow(f"f{k}_{j}", 1.0 + 0.25 * j,
+                               f"S{k}", f"D{k}"))
+                c = g.add(compute(f"c{k}_{j}", 0.5, f"D{k}"))
+                g.add_edge(a, f)
+                g.add_edge(f, c)
+        assert_engines_agree(g)
+        assert_engines_agree(g, policy="priority",
+                             priorities={f"f{k}_{j}": (k + j) % 3
+                                         for k in range(4)
+                                         for j in range(3)})
+        assert_engines_agree(g, releases={"f1_0": 2.5, "a3": 1.0})
+        # compile exposes the component structure
+        import repro.core.arraysim as asim
+        comp = asim.compile_sim(Simulator(g))
+        assert comp.n_comps == 4
+        ids = {comp.comp_of_net[comp.net_pos[comp.idx[f"f{k}_{j}"]]]
+               for k in range(4) for j in range(3)}
+        assert len(ids) == 4
+
+    def test_serial_chain_trickle(self):
+        """The ddl-style event trickle (coalesced completion events):
+        pushes and pulls form two disjoint contention components."""
+        g = builders.ddl(48, push=2.0, pull=2.0)
+        assert_engines_agree(g)
+        pr = {f"push{i}": float(i) for i in range(48)}
+        assert_engines_agree(g, policy="priority", priorities=pr)
+        import repro.core.arraysim as asim
+        comp = asim.compile_sim(Simulator(g))
+        assert comp.n_comps == 2
+        # plain barrier flows coalesce; compute tasks never do
+        push0 = comp.idx["push0"]
+        bp0 = comp.idx["BP0"]
+        assert comp.simple[push0] and not comp.simple[bp0]
+
+    def test_unit_bearing_flows_not_coalesced(self):
+        """A flow with unit boundaries keeps per-task events (its unit
+        events pause integration, which coalescing must not skip)."""
+        g = builders.ddl(12, push=2.0, pull=2.0, unit_frac=0.25)
+        import repro.core.arraysim as asim
+        comp = asim.compile_sim(Simulator(g))
+        assert not any(comp.simple[i] for i in comp.net_ids)
+        assert_engines_agree(g)
+
     def test_multi_job_completion_map(self):
         j1, j2 = builders.mapreduce_pair()
         merged = MXDAG("both")

@@ -129,6 +129,63 @@ class TestCriticalPath:
         assert g.makespan() == pytest.approx(5.0)
 
 
+class TestDeepChains:
+    """Regression: paths_between/copaths used recursive DFS and raised
+    RecursionError on chains deeper than ~1000 tasks (ddl(1024)-scale
+    serial DAGs exceed the default recursion limit)."""
+
+    DEPTH = 1500
+
+    def test_paths_between_deep_chain(self):
+        g = builders.serial_chain(self.DEPTH)
+        head, tail = "t000000", f"t{self.DEPTH - 1:06d}"
+        paths = g.paths_between(head, tail)
+        assert len(paths) == 1
+        assert len(paths[0]) == self.DEPTH
+        assert paths[0][0] == head and paths[0][-1] == tail
+
+    def test_copaths_deep_chain(self):
+        # a chain has no copaths (single path everywhere); the point is
+        # that the enumeration terminates instead of blowing the stack
+        g = builders.serial_chain(self.DEPTH)
+        assert g.copaths() == {}
+
+    def test_paths_between_order_and_limit_unchanged(self):
+        g = builders.fig1_jobs()
+        paths = g.paths_between("a", "c")
+        # DFS (adjacency) order, exactly as the recursive version emitted
+        assert paths == [["a", "f1", "b", "f2", "c"], ["a", "f3", "c"]]
+        assert g.paths_between("a", "c", limit=1) == [paths[0]]
+
+    def test_deep_chain_analytics(self):
+        g = builders.serial_chain(self.DEPTH)
+        timing = g.with_slack()
+        assert timing[f"t{self.DEPTH - 1:06d}"].completion == \
+            pytest.approx(float(self.DEPTH))
+        assert len(g.critical_path()) == self.DEPTH
+
+
+class TestReleaseThreading:
+    """with_slack()/critical_path() accept release= (previously dropped:
+    slack of a late-released branch was overstated)."""
+
+    def test_with_slack_release(self):
+        g = MXDAG("rel")
+        g.add(compute("a", 4.0, "A"))
+        g.add(compute("b", 1.0, "B"))
+        assert g.with_slack()["b"].slack == pytest.approx(3.0)
+        t = g.with_slack(release={"b": 6.0})
+        assert t["b"].slack == pytest.approx(0.0)
+        assert t["a"].slack == pytest.approx(3.0)
+
+    def test_critical_path_release(self):
+        g = MXDAG("rel")
+        g.add(compute("a", 4.0, "A"))
+        g.add(compute("b", 1.0, "B"))
+        assert g.critical_path() == ["a"]
+        assert g.critical_path(release={"b": 6.0}) == ["b"]
+
+
 class TestCopaths:
     def test_fig4a_copath(self):
         g = builders.fig1_jobs()

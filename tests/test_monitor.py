@@ -48,6 +48,21 @@ class TestMonitor:
         new_cp = mon.replan_critical_path()
         assert "f3" in new_cp  # straggling flow becomes critical
 
+    def test_replan_threads_observed_starts_as_releases(self, setup):
+        """replan_critical_path passes observed starts into the analytic
+        pass — a branch that merely *started late* (on schedule since)
+        replans as critical without any size re-estimation."""
+        g, expected = setup
+        mon = Monitor(g, expected)
+        mon.observe("b", 0.5, 2.5)     # on-schedule: no straggler
+        assert mon.stragglers() == []
+        # explicit observed starts: f3 actually began at t=6 (planned 1)
+        cp = mon.replan_critical_path(release={"f3": 6.0})
+        assert "f3" in cp
+        # default: planned starts — replan equals the undisturbed path
+        assert mon.replan_critical_path() == g.critical_path(
+            release={n: expected.start[n] for n in mon.obs})
+
     def test_observation_requires_known_task(self, setup):
         g, expected = setup
         mon = Monitor(g, expected)
@@ -72,6 +87,37 @@ class TestWhatIf:
         times = [t for _, t in res]
         assert times == sorted(times, reverse=True) or \
             max(times) - min(times) < 1e-9
+
+    def test_sweep_unit_crossing_task_size_clamps(self):
+        """Regression: set_unit/sweep_unit crashed mid-sweep with
+        'unit must be in (0, size]' when a candidate exceeded the task
+        size; now it clamps exactly like repartition."""
+        g = builders.fig3()
+        g.set_pipelined("a", "f1", True)
+        w = WhatIf(g)
+        # f1 has size 1.0 — the sweep crosses it
+        res = w.sweep_unit("f1", [0.5, 1.0, 2.0, 5.0])
+        assert [u for u, _ in res] == [0.5, 1.0, 2.0, 5.0]
+        # clamped candidates are equivalent to unit == size
+        at_size = w.set_unit("f1", 1.0).variant
+        assert res[2][1] == pytest.approx(at_size)
+        assert res[3][1] == pytest.approx(at_size)
+
+    def test_speedup_zero_over_zero_is_one(self):
+        """Regression: 0/0 (zero-size baseline and variant) returned
+        inf; equal makespans are a 1.0 speedup."""
+        from repro.core import WhatIfResult
+        assert WhatIfResult(0.0, 0.0).speedup == 1.0
+        assert WhatIfResult(5.0, 0.0).speedup == float("inf")
+        assert WhatIfResult(4.0, 2.0).speedup == 2.0
+        assert not WhatIfResult(0.0, 0.0).helps
+        # end to end: a graph of zero-size tasks
+        from repro.core import MXDAG, compute
+        g = MXDAG("zero")
+        g.add(compute("a", 0.0, "A"))
+        w = WhatIf(g)
+        r = w.repartition({"a": 0.0})
+        assert r.speedup == 1.0
 
     def test_repartition(self):
         g = builders.fig1_jobs()
