@@ -12,7 +12,10 @@ on shared CI runners dwarfs any real regression.  Rows named
 ``*.ref_match`` must equal 1.0 (the engine under test diverged from its
 oracle — a correctness failure, not a perf one), as must rows named
 ``*.improves`` (a scheduling decision — e.g. placement on the fat-tree
-shuffle — stopped beating its fixed baseline).  ``scale.speedup_array_*``
+shuffle — stopped beating its fixed baseline) and ``*.mxdag_wins``
+(MXDAG's makespan fell behind a baseline scheduler's on a bake-off
+scenario — see benchmarks/bakeoff.py; the headline claim of the
+reproduction, gated like any other correctness row).  ``scale.speedup_array_*``
 rows (flat-array engine vs the event-calendar core on the Graphene-scale
 scenarios, including the ddl(1024) serial-chain trickle that
 component-level reallocation + coalesced completion events lifted from
@@ -125,6 +128,14 @@ def main(argv=None) -> int:
             elif bench[name] != 1.0:
                 failures.append(f"{name}: decision no longer beats its "
                                 f"fixed baseline")
+            continue
+        if name.endswith(".mxdag_wins"):
+            if name not in bench:
+                failures.append(f"{name}: bake-off claim row missing "
+                                f"from bench output (check never ran)")
+            elif bench[name] != 1.0:
+                failures.append(f"{name}: MXDAG no longer matches or "
+                                f"beats every baseline scheduler")
             continue
         floor = speedup_floor(name)
         if floor is not None:

@@ -137,3 +137,96 @@ def fig7():
 
 
 ALL = [fig1, fig2, fig3, fig6, fig7]
+
+
+# ----------------------------------------------------------------------
+# bake-off figure (pure-stdlib SVG; matplotlib is not a dependency)
+# ----------------------------------------------------------------------
+
+#: algo → (fill, legend label); order = drawing order within a group.
+#: Colors are a colorblind-safe qualitative palette (Tol bright);
+#: baselines in muted tones, MXDAG the saturated green contender.
+_BAR_STYLE = [
+    ("fair", "#bbbbbb", "fair sharing"),
+    ("sebf", "#4477aa", "SEBF (Varys)"),
+    ("sg_coflow", "#66ccee", "coflow DAG (S&amp;G)"),
+    ("graphene", "#ee6677", "Graphene"),
+    ("metaflow", "#ccbb44", "Metaflow"),
+    ("mxdag", "#228833", "MXDAG"),
+]
+
+
+def bakeoff_figure(results: dict, path: str) -> None:
+    """Write the bake-off comparison as a grouped-bar SVG.
+
+    One group per scenario, one bar per scheduler, height = makespan
+    normalized to MXDAG's on that scenario (so the 3-second shuffle and
+    the 489-second DDL step share an axis; MXDAG is the 1.0 reference
+    line and a taller bar means a slower schedule).  Bars more than 2%
+    above 1.0 carry their ratio as a label.  Pure string assembly — no
+    plotting dependency — and a pure function of ``results``, so the
+    committed ``docs/bakeoff.svg`` is reproducible byte-for-byte.
+
+    :param results: scenario → algo → makespan, as from
+        :func:`benchmarks.bakeoff.sweep`.
+    :param path: output ``.svg`` path.
+    """
+    scen = list(results)
+    bw, gap, group_gap = 13, 2, 26           # bar/intra/inter spacing
+    gw = len(_BAR_STYLE) * (bw + gap) - gap  # one group's width
+    ml, mr, mt, mb = 46, 10, 34, 78          # margins (mb: tilted labels)
+    w = ml + mr + len(scen) * (gw + group_gap) - group_gap
+    h, ph = 330, 200                         # total / plot height
+    ymax = 2.0
+    for name, res in results.items():
+        ymax = max(ymax, max(res.values()) / res["mxdag"])
+    ymax = (int(ymax * 4) + 1) / 4           # headroom, 0.25 grid step
+
+    def y(v: float) -> float:
+        return mt + ph * (1.0 - v / ymax)
+
+    out = [f'<svg xmlns="http://www.w3.org/2000/svg" width="{w}" '
+           f'height="{h}" viewBox="0 0 {w} {h}" '
+           f'font-family="sans-serif" font-size="11">',
+           f'<rect width="{w}" height="{h}" fill="white"/>',
+           '<text x="6" y="16" font-size="13" font-weight="bold">'
+           'Makespan relative to MXDAG (lower is better)</text>']
+    grid = [i / 4 for i in range(int(ymax * 4) + 1)]
+    for v in grid:
+        yy = y(v)
+        stroke = 'stroke="#888888" stroke-dasharray="4 3"' \
+            if v == 1.0 else 'stroke="#e0e0e0"'
+        out.append(f'<line x1="{ml}" y1="{yy:.1f}" x2="{w - mr}" '
+                   f'y2="{yy:.1f}" {stroke}/>')
+        if v * 2 == int(v * 2):              # label only 0.5 steps
+            out.append(f'<text x="{ml - 6}" y="{yy + 4:.1f}" '
+                       f'text-anchor="end" fill="#555555">'
+                       f'{v:g}&#215;</text>')
+    for si, name in enumerate(scen):
+        x0 = ml + si * (gw + group_gap)
+        ref = results[name]["mxdag"]
+        for bi, (algo, fill, _) in enumerate(_BAR_STYLE):
+            ratio = results[name][algo] / ref
+            bx = x0 + bi * (bw + gap)
+            by = y(ratio)
+            out.append(f'<rect x="{bx}" y="{by:.1f}" width="{bw}" '
+                       f'height="{y(0) - by:.1f}" fill="{fill}"/>')
+            if ratio > 1.02:
+                out.append(f'<text x="{bx + bw / 2:.1f}" '
+                           f'y="{by - 3:.1f}" text-anchor="middle" '
+                           f'font-size="9" fill="#333333">'
+                           f'{ratio:.2f}</text>')
+        lx, ly = x0 + gw / 2, y(0) + 12
+        out.append(f'<text x="{lx:.1f}" y="{ly:.1f}" '
+                   f'text-anchor="end" fill="#333333" transform='
+                   f'"rotate(-30 {lx:.1f} {ly:.1f})">{name}</text>')
+    lx = ml
+    ly = h - 12
+    for algo, fill, label in _BAR_STYLE:
+        out.append(f'<rect x="{lx}" y="{ly - 9}" width="10" height="10" '
+                   f'fill="{fill}"/>')
+        out.append(f'<text x="{lx + 14}" y="{ly}">{label}</text>')
+        lx += 14 + 7 * len(label) + 18
+    out.append('</svg>')
+    with open(path, "w") as f:
+        f.write("\n".join(out) + "\n")

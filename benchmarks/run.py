@@ -9,6 +9,9 @@
 - the scale sweep (scale.py — flat-array DES + memoized scheduler on
   large mapreduce/DDL/fat-tree/layered DAGs up to ~20k tasks, with
   event-calendar and seed-implementation comparison rows),
+- the baseline bake-off (bakeoff.py — fair sharing, SEBF, dependency-
+  graph coflows, Graphene and Metaflow vs MXDAG on the scenario ×
+  topology matrix; ``mxdag_wins`` claim rows gated by check_perf.py),
 - the roofline summary per dry-run cell (roofline.py; populated by
   ``python -m repro.launch.dryrun --all``).
 
@@ -63,7 +66,7 @@ def main(argv=None) -> None:
                     help="also write the rows as JSON to PATH")
     args = ap.parse_args(argv)
 
-    from benchmarks import fabric, figures, roofline, scale
+    from benchmarks import bakeoff, fabric, figures, roofline, scale
 
     rows = []
     for fig in figures.ALL:
@@ -71,6 +74,7 @@ def main(argv=None) -> None:
     rows += fabric.bench_rows()
     rows += scheduler_micro()
     rows += scale.bench_rows(seed_rows=not args.no_seed)
+    rows += bakeoff.bench_rows()
     if not args.smoke:
         rows += roofline.bench_rows()
 

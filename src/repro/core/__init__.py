@@ -14,6 +14,13 @@ from repro.core.schedule import (
     Schedule,
     auto_coflows,
 )
+from repro.core.baselines import (
+    BASELINES,
+    DependencyCoflowScheduler,
+    GrapheneScheduler,
+    MetaflowScheduler,
+    SEBFScheduler,
+)
 from repro.core.whatif import WhatIf, WhatIfResult
 from repro.core.monitor import Monitor, Straggler
 
@@ -27,5 +34,7 @@ __all__ = [
     "FairShareScheduler", "CoflowConfig", "MXDAGScheduler",
     "PlacementScheduler", "AltruisticMultiScheduler", "Schedule",
     "auto_coflows",
+    "BASELINES", "SEBFScheduler", "DependencyCoflowScheduler",
+    "GrapheneScheduler", "MetaflowScheduler",
     "WhatIf", "WhatIfResult", "Monitor", "Straggler",
 ]

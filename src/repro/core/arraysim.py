@@ -478,12 +478,14 @@ def _wf_core_np(sg_ids, fl_ptr, fl_flat, sg_pos, link_order, residual,
     remaining = k
 
     def rows_on(link: int) -> list[int]:
+        """Unfrozen group rows occupying ``link``."""
         fl = by_link.get(link)
         if not fl:
             return []
         return [r for r in fl if unfrozen[r]]
 
     def freeze_unit(rows: list[int], alloc: float) -> int:
+        """Freeze ``rows`` at rate ``alloc``; returns rows frozen."""
         if seq is None:
             for r in rows:
                 rate[sg_ids[r]] = alloc
@@ -775,6 +777,7 @@ def array_run(sim, horizon: float = 1e15):
     now = 0.0
 
     def dirty_net(pos: int) -> None:
+        """Mark flow ``pos``'s component dirty at its class."""
         K = comp_of[pos]
         c = cls_net[pos]
         if c is None:                # fair policy: one class
@@ -784,6 +787,7 @@ def array_run(sim, horizon: float = 1e15):
             comp_dirty[K] = c
 
     def delivered_fraction(p: int) -> float:
+        """Fraction of ``p``'s output delivered (unit granularity)."""
         if finished[p] is not None:
             return 1.0
         sz = size[p]
@@ -793,6 +797,7 @@ def array_run(sim, horizon: float = 1e15):
         return min(1.0, math.floor(work[p] / u + EPS) * u / sz)
 
     def start_gate_ok(i: int) -> bool:
+        """Gate counter zero and first streamed unit available?"""
         if n_gate[i]:
             return False
         for p in gate_stream[i]:
@@ -801,6 +806,7 @@ def array_run(sim, horizon: float = 1e15):
         return True
 
     def recompute_cap(i: int) -> float:
+        """Work cap from streaming predecessors' delivered units."""
         c = size[i]
         nui = nu[i]
         eu = unit[i]
@@ -816,6 +822,7 @@ def array_run(sim, horizon: float = 1e15):
     _defer = pending.append
 
     def schedule_event(i: int) -> None:
+        """(Re)compute task ``i``'s next unit/cap/completion event."""
         stamp[i] += 1
         r = rate[i]
         if finished[i] is not None or started[i] is None or r <= EPS:
@@ -889,6 +896,7 @@ def array_run(sim, horizon: float = 1e15):
             _defer((float(now + best), 2, K, st))
 
     def complete(i: int) -> None:
+        """Finish ``i``: free resources, trigger gated candidates."""
         nonlocal unfinished
         finished[i] = now
         unfinished -= 1
@@ -980,6 +988,7 @@ def array_run(sim, horizon: float = 1e15):
         candidates.update(chain.from_iterable(succs))
 
     def on_start(i: int) -> None:
+        """Initialize ``i``'s streaming caps/counters at start."""
         c = size[i]
         if stream_in[i]:
             c = recompute_cap(i)
@@ -1008,6 +1017,7 @@ def array_run(sim, horizon: float = 1e15):
         (touched if stream_in[i] else touched_sched).add(i)
 
     def process_starts() -> None:
+        """Start every candidate whose gates and slots allow it."""
         while True:
             # gate counters inlined; stream-fraction gates (rare) go
             # through start_gate_ok

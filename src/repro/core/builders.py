@@ -53,6 +53,7 @@ def fig1_jobs() -> MXDAG:
 # Fig. 2(a): symmetric topology, asymmetric compute times
 # ----------------------------------------------------------------------
 def fig2a(t1: float = 3.0, t2: float = 1.0, fsize: float = 1.0) -> MXDAG:
+    """Fig. 2(a): symmetric flows feeding asymmetric compute times."""
     g = MXDAG("fig2a")
     a = g.add(compute("a", 0.0, "A"))
     b = g.add(compute("b", t1, "B"))
@@ -193,8 +194,23 @@ def ddl(n_layers: int = 4, *,
     layer's push→pull edge keeps its handoff on one host, so the
     scheduler may keep one PS or shard it per layer); the worker stays
     bound — it is where the GPU is.
+
+    :param n_layers: number of model layers.
+    :param bp: per-layer backward-pass times (scalar broadcasts).
+    :param fp: per-layer forward-pass times (scalar broadcasts).
+    :param push: per-layer gradient push sizes (scalar broadcasts).
+    :param pull: per-layer parameter pull sizes (scalar broadcasts).
+    :param unit_frac: when set, every task gets ``unit = unit_frac *
+        size`` (enables pipelining experiments).
+    :param worker: the GPU host name.
+    :param ps: the parameter-server host name (ignored when
+        ``placed=False``).
+    :param job: job label stamped on every task.
+    :param placed: ``False`` leaves the PS side logical (see above).
+    :returns: the iteration's MXDAG.
     """
     def seq(x, default):
+        """Broadcast a scalar to per-layer values (lists pass through)."""
         if isinstance(x, (int, float)):
             return [float(x)] * n_layers
         return [float(v) for v in x]
@@ -262,6 +278,7 @@ def mapreduce_pair() -> tuple[MXDAG, MXDAG]:
 def oversubscribed_fanin(n_senders: int = 4, *,
                          oversubscription: float = 4.0,
                          flow_size: float = 1.0,
+                         critical_flow_size: Optional[float] = None,
                          critical_compute: float = 8.0,
                          other_compute: float = 1.0,
                          job: str = "job0",
@@ -274,13 +291,27 @@ def oversubscribed_fanin(n_senders: int = 4, *,
     the critical path — while the rest feed short ones.  Fair sharing
     splits the uplink evenly and delays the critical flow by a factor of
     ``n_senders``; MXDAG priority co-scheduling gives it the whole uplink
-    first.  Returns ``(graph, cluster)``.
+    first.
 
-    ``placed=False`` keeps the data where it lives (flow sources stay on
-    the rack-0 senders) but leaves the consuming compute tasks — and
-    hence the flow destinations — logical: a placement-aware scheduler
-    may pull the consumers into rack 0 and never cross the oversubscribed
-    core at all.
+    :param n_senders: hosts per rack (= flows crossing the core).
+    :param oversubscription: core ratio; uplink capacity is
+        ``n_senders / oversubscription``.
+    :param flow_size: size of every non-critical flow.
+    :param critical_flow_size: size of the critical flow ``f0``
+        (default: ``flow_size``).  Making it *larger* than the rest is
+        the configuration that separates DAG-aware from DAG-blind
+        schedulers: smallest-bottleneck-first coflow ordering then
+        schedules the critical flow *last* (it only sees bytes), while
+        slack-driven co-scheduling still sends it first.
+    :param critical_compute: duration of the compute fed by ``f0``.
+    :param other_compute: duration of every other consumer.
+    :param job: job label stamped on every task.
+    :param placed: ``False`` keeps the data where it lives (flow
+        sources stay on the rack-0 senders) but leaves the consuming
+        compute tasks — and hence the flow destinations — logical: a
+        placement-aware scheduler may pull the consumers into rack 0
+        and never cross the oversubscribed core at all.
+    :returns: ``(graph, cluster)``.
     """
     rack0 = [f"s{i}" for i in range(n_senders)]
     rack1 = [f"d{i}" for i in range(n_senders)]
@@ -288,7 +319,9 @@ def oversubscribed_fanin(n_senders: int = 4, *,
                              oversubscription=oversubscription)
     g = MXDAG(f"fanin{n_senders}_{oversubscription:g}to1")
     for i in range(n_senders):
-        f = g.add(flow(f"f{i}", flow_size, f"s{i}",
+        fsize = critical_flow_size if i == 0 \
+            and critical_flow_size is not None else flow_size
+        f = g.add(flow(f"f{i}", fsize, f"s{i}",
                        f"d{i}" if placed else None, job=job))
         size = critical_compute if i == 0 else other_compute
         c = g.add(compute(f"c{i}", size,
@@ -315,8 +348,16 @@ def fat_tree_shuffle(k: int = 8, *, stride: int = 2,
     (deterministically — crc32), halving their rates, while every NIC
     carries exactly ``shuffle_bytes``.  ``placed=False`` leaves the
     reducers logical: a placement-aware scheduler pulls each reducer
-    next to its mappers and never pays the core collisions.  Returns
-    ``(graph, cluster)``.
+    next to its mappers and never pays the core collisions.
+
+    :param k: fat-tree arity (``k³/4`` hosts, ``k³/32`` mappers).
+    :param stride: flows per mapper (shuffle sparsity).
+    :param map_time: each mapper's compute time.
+    :param reduce_time: each reducer's compute time.
+    :param shuffle_bytes: total bytes each mapper emits, split evenly
+        over its ``stride`` flows.
+    :param placed: ``False`` leaves the reducers logical (see above).
+    :returns: ``(graph, cluster)``.
     """
     if stride < 1:
         raise ValueError("stride must be >= 1")
@@ -400,6 +441,15 @@ def random_layered(n_tasks: int = 20000, *, n_hosts: int = 256,
 
     Total task count is computes + flows ≈ ``n_tasks`` (one compute
     contributes ``1 + fanout`` tasks beyond the first layer).
+
+    :param n_tasks: approximate total task count (computes + flows).
+    :param n_hosts: hosts to spread tasks over (one CPU slot each).
+    :param min_width: narrowest stage width (computes per layer).
+    :param max_width: widest stage width; also the first layer's width.
+    :param fanout: producers each consumer reads from (flows per task).
+    :param seed: RNG seed — the graph is a pure function of arguments.
+    :param job: job label stamped on every task.
+    :returns: the layered MXDAG.
     """
     if n_tasks < 2 or fanout < 1 or min_width < 1 \
             or max_width < min_width or n_hosts < max_width:
@@ -456,11 +506,27 @@ def mapreduce(name: str, n_map: int, n_reduce: int, *,
               placed: bool = True) -> MXDAG:
     """n_map mappers shuffling all-to-all into n_reduce reducers.
 
-    ``host_prefix`` lets multiple jobs share the same physical hosts
-    (multi-job scheduling experiments); default: per-job private hosts.
-    ``placed=False`` leaves every compute task logical and every shuffle
-    flow's endpoints unbound (they follow their mapper/reducer via
-    ``MXDAG.bind`` inference) — the scheduler chooses the hosts."""
+    :param name: graph name and default job label / host prefix.
+    :param n_map: number of mappers.
+    :param n_reduce: number of reducers.
+    :param map_time: each mapper's compute time.
+    :param shuffle_time: total bytes each mapper emits (split evenly
+        over its ``n_reduce`` flows).
+    :param reduce_time: each reducer's compute time.
+    :param hosts_per_side: wrap mappers/reducers onto this many hosts
+        per side (default: one host per task).
+    :param unit_frac: when set, every task gets ``unit = unit_frac *
+        size`` (enables pipelining experiments).
+    :param job: job label; defaults to ``name``.
+    :param host_prefix: lets multiple jobs share the same physical
+        hosts (multi-job scheduling experiments); default: per-job
+        private hosts.
+    :param placed: ``False`` leaves every compute task logical and
+        every shuffle flow's endpoints unbound (they follow their
+        mapper/reducer via ``MXDAG.bind`` inference) — the scheduler
+        chooses the hosts.
+    :returns: the shuffle MXDAG.
+    """
     job = job or name
     hp = host_prefix if host_prefix is not None else name
     g = MXDAG(name)
@@ -468,9 +534,11 @@ def mapreduce(name: str, n_map: int, n_reduce: int, *,
     nr_hosts = hosts_per_side or n_reduce
 
     def mh(i: int) -> str | None:
+        """Mapper ``i``'s host (None when building logical tasks)."""
         return f"{hp}.M{i % nm_hosts}" if placed else None
 
     def rh(j: int) -> str | None:
+        """Reducer ``j``'s host (None when building logical tasks)."""
         return f"{hp}.R{j % nr_hosts}" if placed else None
 
     maps = [g.add(compute(f"{name}.m{i}", map_time, mh(i), job=job,

@@ -32,6 +32,8 @@ from repro.core.task import MXTask, TaskKind
 
 @dataclasses.dataclass(frozen=True)
 class Host:
+    """One machine: processor slot pools plus NIC capacities."""
+
     name: str
     procs: Mapping[str, int] = dataclasses.field(
         default_factory=lambda: {"cpu": 1})
@@ -40,6 +42,8 @@ class Host:
 
 
 class Cluster:
+    """The resource model: named hosts, optionally under a Topology."""
+
     def __init__(self, hosts: list[Host],
                  topology: Optional[Topology] = None) -> None:
         self.hosts = {h.name: h for h in hosts}
@@ -52,6 +56,7 @@ class Cluster:
     @classmethod
     def homogeneous(cls, names: list[str], *, procs: Mapping[str, int] | None = None,
                     nic: float = 1.0) -> "Cluster":
+        """A cluster of identical hosts (no fabric)."""
         return cls([Host(n, procs=dict(procs or {"cpu": 1}),
                          nic_in=nic, nic_out=nic) for n in names])
 
@@ -99,6 +104,7 @@ class Cluster:
 
     # ------------------------------------------------------------------
     def slots(self, resource: str) -> int:
+        """Slot count of a ``<host>.<pool>`` processor resource."""
         host, pool = resource.rsplit(".", 1)
         return int(self.hosts[host].procs.get(pool, 0))
 

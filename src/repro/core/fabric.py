@@ -45,10 +45,12 @@ from typing import Callable, Iterable, Mapping, Optional, Sequence
 
 
 def nic_out(host: str) -> str:
+    """Resource name of ``host``'s egress NIC."""
     return f"{host}.nic_out"
 
 
 def nic_in(host: str) -> str:
+    """Resource name of ``host``'s ingress NIC."""
     return f"{host}.nic_in"
 
 
@@ -124,6 +126,7 @@ class Topology:
     # -- construction --------------------------------------------------
     def add_host(self, host: str, *, nic_in_cap: float = 1.0,
                  nic_out_cap: float = 1.0) -> None:
+        """Add a host plus its two NIC links."""
         if host in self._hosts:
             raise ValueError(f"duplicate host {host}")
         self._hosts[host] = None
@@ -131,6 +134,7 @@ class Topology:
         self.add_link(nic_in(host), nic_in_cap)
 
     def add_link(self, name: str, capacity: float) -> None:
+        """Add a named link with the given capacity."""
         if name in self.links:
             raise ValueError(f"duplicate link {name}")
         self.links[name] = Link(name, capacity).capacity
@@ -149,9 +153,11 @@ class Topology:
 
     # -- queries -------------------------------------------------------
     def hosts(self) -> list[str]:
+        """All host names, insertion order."""
         return list(self._hosts)
 
     def capacity(self, link: str) -> float:
+        """Capacity of ``link`` (KeyError if unknown)."""
         return self.links[link]
 
     def _via_candidates(self, src: str,
@@ -206,6 +212,7 @@ class Topology:
         return tuple((nic_out(src), *v, nic_in(dst)) for v in vias)
 
     def fabric_links(self) -> list[str]:
+        """All non-NIC (in-fabric) link names."""
         return [l for l in self.links if not is_nic_link(l)]
 
     # -- what-if support ----------------------------------------------
@@ -283,6 +290,7 @@ class Topology:
                 t.add_host(h, nic_in_cap=nic, nic_out_cap=nic)
                 rack_of[h] = r
         def routes(s: str, d: str) -> Optional[list[tuple[str, ...]]]:
+            """Via-links for s→d (None = intra-rack direct)."""
             rs, rd = rack_of[s], rack_of[d]
             if rs == rd:            # intra-rack: direct NIC-only path
                 return None
@@ -318,6 +326,7 @@ class Topology:
                 t.add_host(h, nic_in_cap=nic, nic_out_cap=nic)
                 leaf_of[h] = l
         def routes(s: str, d: str) -> Optional[list[tuple[str, ...]]]:
+            """Per-spine via-link candidates (None = same leaf)."""
             ls, ld = leaf_of[s], leaf_of[d]
             if ls == ld:
                 return None
@@ -357,6 +366,7 @@ class Topology:
                     t.add_link(f"p{p}.a{a}c{c}.up", nic)
                     t.add_link(f"p{p}.a{a}c{c}.down", nic)
         def routes(s: str, d: str) -> Optional[list[tuple[str, ...]]]:
+            """Clos via-link candidates (None = same edge switch)."""
             (ps, es), (pd, ed) = where[s], where[d]
             if (ps, es) == (pd, ed):                # same edge switch
                 return None

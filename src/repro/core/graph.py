@@ -28,6 +28,8 @@ END = "__end__"
 
 @dataclasses.dataclass(frozen=True)
 class Edge:
+    """A precedence (optionally streaming) edge between two tasks."""
+
     src: str
     dst: str
     pipelined: bool = False  # stream units across this edge when both ends allow
@@ -43,6 +45,7 @@ class NodeTiming:
 
     @property
     def slack(self) -> float:
+        """How late completion may slip without moving the makespan."""
         return self.latest_completion - self.completion
 
 
@@ -64,6 +67,7 @@ class MXDAG:
     # construction
     # ------------------------------------------------------------------
     def add(self, task: MXTask) -> MXTask:
+        """Add a task (its name must be new) and return it."""
         if task.name in self.tasks:
             raise ValueError(f"duplicate task {task.name}")
         self.tasks[task.name] = task
@@ -74,6 +78,7 @@ class MXDAG:
 
     def add_edge(self, src: str | MXTask, dst: str | MXTask,
                  *, pipelined: bool = False) -> Edge:
+        """Add the edge src→dst, rejecting duplicates and cycles."""
         s = src.name if isinstance(src, MXTask) else src
         d = dst.name if isinstance(dst, MXTask) else dst
         for n in (s, d):
@@ -98,6 +103,7 @@ class MXDAG:
             self.add_edge(a, b, pipelined=pipelined)
 
     def set_pipelined(self, src: str, dst: str, pipelined: bool) -> None:
+        """Flip one existing edge's streaming flag."""
         e = self.edges[(src, dst)]
         self.edges[(src, dst)] = Edge(e.src, e.dst, pipelined)
         self._version += 1
@@ -114,6 +120,7 @@ class MXDAG:
         return task
 
     def copy(self) -> "MXDAG":
+        """Independent shallow copy (tasks are frozen; structure is new)."""
         g = MXDAG(self.name)
         g.tasks = dict(self.tasks)
         g.edges = dict(self.edges)
@@ -142,6 +149,7 @@ class MXDAG:
         parent: dict[tuple, tuple] = {}
 
         def find(v: tuple) -> tuple:
+            """Union-find root of ``v`` with path compression."""
             root = v
             while parent.setdefault(root, root) != root:
                 root = parent[root]
@@ -150,6 +158,7 @@ class MXDAG:
             return root
 
         def union(a: tuple, b: tuple) -> None:
+            """Merge the classes of ``a`` and ``b`` (smaller root wins)."""
             ra, rb = find(a), find(b)
             if ra != rb:
                 parent[max(ra, rb)] = min(ra, rb)
@@ -206,6 +215,7 @@ class MXDAG:
                     open_classes.add(find(("d", n)))
 
         def anchor(var: tuple, host: str, why: str) -> None:
+            """Pin a location class to ``host``, rejecting conflicts."""
             root = find(var)
             if root not in open_classes:
                 return
@@ -279,18 +289,23 @@ class MXDAG:
     # structure
     # ------------------------------------------------------------------
     def preds(self, name: str) -> list[str]:
+        """Direct predecessors of ``name`` (insertion order)."""
         return self._pred[name]
 
     def succs(self, name: str) -> list[str]:
+        """Direct successors of ``name`` (insertion order)."""
         return self._succ[name]
 
     def sources(self) -> list[str]:
+        """Tasks with no predecessors."""
         return [n for n in self.tasks if not self._pred[n]]
 
     def sinks(self) -> list[str]:
+        """Tasks with no successors."""
         return [n for n in self.tasks if not self._succ[n]]
 
     def topo_order(self) -> list[str]:
+        """Deterministic topological order (lexicographic Kahn)."""
         # heap-based Kahn: lexicographically smallest available task first
         # (identical order to the seed's re-sorted frontier list, without
         # its O(V² log V) repeated sorting)
@@ -423,6 +438,7 @@ class MXDAG:
 
     def makespan(self, rsrc: Optional[dict[str, float]] = None,
                  release: Optional[dict[str, float]] = None) -> float:
+        """Analytic (contention-free) makespan under ``rsrc``/``release``."""
         timing = self.evaluate(rsrc, release)
         return max((t.completion for t in timing.values()), default=0.0)
 
@@ -573,12 +589,15 @@ class MXDAG:
 
     # ------------------------------------------------------------------
     def network_tasks(self) -> list[MXTask]:
+        """All flow tasks, insertion order."""
         return [t for t in self.tasks.values() if t.kind is TaskKind.NETWORK]
 
     def compute_tasks(self) -> list[MXTask]:
+        """All compute tasks, insertion order."""
         return [t for t in self.tasks.values() if t.kind is TaskKind.COMPUTE]
 
     def pipelineable_edges(self) -> list[Edge]:
+        """Edges whose both endpoints carry unit structure."""
         return [e for e in self.edges.values()
                 if self.tasks[e.src].pipelineable
                 and self.tasks[e.dst].pipelineable]

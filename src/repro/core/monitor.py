@@ -18,6 +18,8 @@ from repro.core.task import MXTask, TaskKind
 
 @dataclasses.dataclass
 class Straggler:
+    """A task projected to finish later than its expected schedule."""
+
     task: str
     kind: TaskKind          # host straggler vs network straggler
     expected_finish: float
@@ -25,16 +27,21 @@ class Straggler:
 
     @property
     def lag(self) -> float:
+        """Projected minus expected finish time (seconds late)."""
         return self.projected_finish - self.expected_finish
 
 
 @dataclasses.dataclass
 class Observation:
+    """One runtime progress report for a task."""
+
     time: float
     fraction: float         # fraction of the task's work completed
 
 
 class Monitor:
+    """Runtime introspection: progress reports vs the expected schedule."""
+
     def __init__(self, graph: MXDAG, expected: SimResult,
                  *, threshold: float = 0.2):
         """``threshold``: relative lag beyond which a task is a straggler."""
@@ -44,6 +51,7 @@ class Monitor:
         self.obs: dict[str, Observation] = {}
 
     def observe(self, task: str, fraction: float, time: float) -> None:
+        """Record that ``task`` had completed ``fraction`` at ``time``."""
         if task not in self.graph.tasks:
             raise KeyError(task)
         self.obs[task] = Observation(time=time, fraction=min(1.0, fraction))
@@ -65,6 +73,7 @@ class Monitor:
         return o.time + (1.0 - o.fraction) / rate
 
     def stragglers(self) -> list[Straggler]:
+        """Observed tasks lagging beyond the relative threshold."""
         out = []
         for name, o in sorted(self.obs.items()):
             proj = self.projected_finish(name)
@@ -78,9 +87,11 @@ class Monitor:
         return out
 
     def host_stragglers(self) -> list[Straggler]:
+        """Stragglers among compute tasks."""
         return [s for s in self.stragglers() if s.kind is TaskKind.COMPUTE]
 
     def network_stragglers(self) -> list[Straggler]:
+        """Stragglers among flows."""
         return [s for s in self.stragglers() if s.kind is TaskKind.NETWORK]
 
     # ------------------------------------------------------------------

@@ -78,6 +78,15 @@ class Schedule:
     def simulate(self, cluster: Optional[Cluster] = None,
                  routes: Optional[dict] = None,
                  engine: str = "array") -> SimResult:
+        """Execute this Schedule in the DES.
+
+        :param cluster: capacities/fabric; default derived from the graph.
+        :param routes: extra per-flow route overrides layered on top of
+            (and winning over) :attr:`routes`.
+        :param engine: ``"array"`` (default), ``"calendar"``, or
+            ``"reference"`` — see the engine ladder in the simulator docs.
+        :returns: the :class:`~repro.core.simulator.SimResult`.
+        """
         merged = {**self.routes, **(routes or {})}
         return simulate(self.graph, cluster, policy=self.policy,
                         priorities=self.priorities, releases=self.releases,
@@ -90,6 +99,12 @@ class FairShareScheduler:
 
     def schedule(self, graph: MXDAG,
                  cluster: Optional[Cluster] = None) -> Schedule:
+        """An empty decision: default fair sharing on ``graph``.
+
+        :param graph: the MXDAG to run.
+        :param cluster: accepted for interface symmetry; unused.
+        :returns: a ``policy="fair"`` Schedule with no other decisions.
+        """
         return Schedule(graph=graph, policy="fair")
 
 
@@ -99,24 +114,44 @@ class CoflowConfig:
     :func:`auto_coflows` derives one conventional grouping."""
 
     def __init__(self, coflows: list[set[str]]):
+        """:param coflows: the flow grouping to impose (disjoint sets)."""
         self.coflows = coflows
 
     def schedule(self, graph: MXDAG,
                  cluster: Optional[Cluster] = None) -> Schedule:
+        """Impose the configured grouping under fair sharing.
+
+        :param graph: the MXDAG to run.
+        :param cluster: accepted for interface symmetry; unused.
+        :returns: a ``policy="fair"`` Schedule carrying the §2.2 coflow
+            semantics for the configured groups.
+        """
         return Schedule(graph=graph, policy="fair", coflows=self.coflows,
                         meta={"coflows": self.coflows})
 
 
-def auto_coflows(graph: MXDAG) -> list[set[str]]:
+def auto_coflows(graph: MXDAG, *, singletons: bool = False,
+                 ) -> list[set[str]]:
     """Conventional stage-grouping: flows sharing the same successor set
-    (aggregations) or, failing that, the same predecessor set (broadcasts)."""
+    (aggregations) or, failing that, the same predecessor set (broadcasts).
+
+    :param graph: the MXDAG whose network tasks are grouped.
+    :param singletons: also return one-flow groups.  The default drops
+        them (a singleton "coflow" adds nothing to the §2.2 baseline),
+        but coflow-*ordering* schedulers (:mod:`repro.core.baselines`)
+        need every flow covered — an unordered flow would default to
+        priority class 0.0 and preempt the whole ordering.  This switch
+        is the one extension the baseline bake-off forced on the coflow
+        API.
+    :returns: disjoint flow-name groups, in task-insertion order.
+    """
     groups: dict[tuple, set[str]] = {}
     for t in graph.network_tasks():
         succ = frozenset(graph.succs(t.name))
         pred = frozenset(graph.preds(t.name))
         key = ("succ", succ) if succ else ("pred", pred)
         groups.setdefault(key, set()).add(t.name)
-    return [g for g in groups.values() if len(g) >= 2]
+    return [g for g in groups.values() if singletons or len(g) >= 2]
 
 
 class PlacementScheduler:
@@ -166,6 +201,7 @@ class PlacementScheduler:
         tasks = graph.tasks
 
         def var_value(v: tuple) -> Optional[str]:
+            """The host already bound to location variable ``v``, if any."""
             t = tasks[v[1]]
             if v[0] == "c":
                 return t.host
@@ -197,6 +233,7 @@ class PlacementScheduler:
         placed: dict[tuple, str] = {}
 
         def loc(v: tuple) -> Optional[str]:
+            """Current (bound or tentatively placed) host of ``v``."""
             val = var_value(v)
             if val is not None:
                 return val
@@ -207,6 +244,7 @@ class PlacementScheduler:
         charged: set[str] = set()
 
         def charge_ready_flows(names) -> None:
+            """Charge flows whose endpoints just became known to links."""
             for n in names:
                 if n in charged or tasks[n].kind is not TaskKind.NETWORK:
                     continue
@@ -505,6 +543,7 @@ class MXDAGScheduler:
             sig = None
 
         def sim(policy: str, prio: dict[str, float]) -> SimResult:
+            """Memoized DES run of ``g`` under (policy, priorities)."""
             return self._sim(g, cluster, cache, policy, prio,
                              routes, sig=sig)
 
@@ -534,6 +573,19 @@ class MXDAGScheduler:
 
     def schedule(self, graph: MXDAG,
                  cluster: Optional[Cluster] = None) -> Schedule:
+        """Run the full decision pipeline on ``graph``.
+
+        Stages (each only when applicable): placement of logical tasks,
+        slack-driven priority classes vs the fair floor, greedy
+        pipelining (``try_pipelining``), ECMP rerouting
+        (``try_routing``).
+
+        :param graph: the MXDAG to schedule (may contain logical tasks).
+        :param cluster: capacities/fabric; default derived from the
+            graph (required when placement has choices to make).
+        :returns: the winning Schedule with all decision kinds recorded
+            (``meta`` carries the critical path and stage diagnostics).
+        """
         # the pipeline only mutates the working graph when it flips
         # pipelining flags; without that stage every step is read-only
         # (bind() already copies), so the input graph is used as-is and
@@ -711,10 +763,19 @@ class AltruisticMultiScheduler:
     """
 
     def __init__(self, *, try_pipelining: bool = False):
+        """:param try_pipelining: forwarded to the per-job scheduler."""
         self.try_pipelining = try_pipelining
 
     def schedule(self, graphs: list[MXDAG],
                  cluster: Optional[Cluster] = None) -> Schedule:
+        """Schedule several jobs altruistically on one cluster.
+
+        :param graphs: the jobs; task names must be globally unique.
+        :param cluster: shared capacities; default derived from the
+            merged graph.
+        :returns: one Schedule over the merged graph whose priority
+            classes interleave the jobs per Principle 2.
+        """
         merged = MXDAG("+".join(g.name for g in graphs))
         owner: dict[str, str] = {}
         for g in graphs:

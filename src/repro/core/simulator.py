@@ -192,12 +192,15 @@ def max_min_rates(paths, capacity,
 
 @dataclasses.dataclass
 class SimResult:
+    """Per-task start/finish times plus makespan and per-job JCTs."""
+
     start: dict[str, float]
     finish: dict[str, float]
     makespan: float
     job_completion: dict[str, float]
 
     def jct(self, job: str) -> float:
+        """Job completion time of ``job``."""
         return self.job_completion[job]
 
 
@@ -213,6 +216,7 @@ class _State:
 
     @property
     def done(self) -> bool:
+        """Whether the task has finished."""
         return self.finished is not None
 
     def delivered_fraction(self) -> float:
@@ -227,6 +231,9 @@ class _State:
 
 
 class Simulator:
+    """The DES: executes one MXDAG on a Cluster under a Schedule's
+    decisions (see the module docstring for semantics and engines)."""
+
     def __init__(self, graph: MXDAG, cluster: Optional[Cluster] = None, *,
                  policy: str = "fair",
                  priorities: Optional[dict[str, float]] = None,
@@ -423,6 +430,7 @@ class Simulator:
         return data
 
     def calendar_run(self, horizon: float = 1e15) -> SimResult:
+        """The incremental event-calendar engine (dict-keyed oracle)."""
         g = self.g
         tasks = g.tasks
         st = {n: _State(t) for n, t in tasks.items()}
@@ -481,9 +489,11 @@ class Simulator:
         succs_of = g._succ
 
         def coflow_done(i: int) -> bool:
+            """All-or-nothing: has every member of coflow ``i`` finished?"""
             return all(st[m].finished is not None for m in coflows[i])
 
         def delivered_fraction(p: str) -> float:
+            """Fraction of ``p``'s output delivered (unit granularity)."""
             ps = st[p]
             if ps.finished is not None:
                 return 1.0
@@ -511,6 +521,7 @@ class Simulator:
             return True
 
         def recompute_cap(n: str) -> float:
+            """Work cap from streaming predecessors' delivered units."""
             c = size_of[n]
             nu = nu_of[n]
             eu = unit_of[n]
@@ -521,9 +532,11 @@ class Simulator:
             return c
 
         def cap_of(n: str) -> float:
+            """Current work cap of ``n`` (size when unconstrained)."""
             return cap.get(n, size_of[n])
 
         def dirty(n: str) -> None:
+            """Mark ``n``'s priority class for re-waterfill."""
             dirty_classes.add(cls_of[n])
 
         def schedule_event(n: str) -> None:
@@ -561,9 +574,12 @@ class Simulator:
                 heappush(heap, (now + best, 1, n, ver))
 
         def weight_for(group_has_coflow: bool):
+            """MADD weight function for a class, or None when uniform."""
             if not group_has_coflow:
                 return None
+
             def weight(n: str) -> float:
+                """Member weight ∝ remaining work (MADD coupling)."""
                 ci = coflow_of.get(n)
                 if ci is None:
                     return 1.0
@@ -637,6 +653,7 @@ class Simulator:
         touched: set[str] = set()        # need schedule_event refresh
 
         def complete(n: str) -> None:
+            """Finish ``n``: free its slot, trigger gated candidates."""
             nonlocal unfinished
             s = st[n]
             s.finished = now
@@ -671,6 +688,7 @@ class Simulator:
                     candidates.update(coflows[ci2])
 
         def on_start(n: str) -> None:
+            """Initialize ``n``'s streaming caps/counters at start."""
             s = st[n]
             c = size_of[n]
             if stream_in[n]:
@@ -878,6 +896,7 @@ class Simulator:
                       for p, k in host.procs.items()}
 
         def coflow_done(i: int) -> bool:
+            """All-or-nothing: has every member of coflow ``i`` finished?"""
             return all(st[m].done for m in self.coflows[i])
 
         def pred_satisfied_for_start(n: str) -> bool:
@@ -926,6 +945,7 @@ class Simulator:
             return cap
 
         def release(n: str) -> float:
+            """Earliest allowed start of ``n`` (0.0 when unconstrained)."""
             return self.releases.get(n, 0.0)
 
         # main loop ----------------------------------------------------
@@ -1084,6 +1104,7 @@ class Simulator:
                 residual.setdefault(r, self.cluster.bandwidth(r))
 
         def weight(n: str) -> float:
+            """MADD weight: member rate ∝ remaining work."""
             ci = self._coflow_of.get(n)
             if ci is None:
                 return 1.0
@@ -1093,6 +1114,7 @@ class Simulator:
             return max(rem.get(n, 0.0) / mx, 1e-6) if mx > 0 else 1.0
 
         def flow_class(n: str) -> float:
+            """Priority class of flow ``n`` under the current policy."""
             # streaming flows occupy bandwidth eagerly (paper §4.1)
             if any(g.effective_pipelined(g.edges[(p, n)])
                    for p in g.preds(n)):
@@ -1132,6 +1154,7 @@ def simulate(graph: MXDAG, cluster: Optional[Cluster] = None, *,
              routes: Optional[Mapping[str, Sequence[str]]] = None,
              engine: str = "array",
              ) -> SimResult:
+    """One-shot convenience wrapper: build a Simulator and run it."""
     return Simulator(graph, cluster, policy=policy, priorities=priorities,
                      releases=releases, coflows=coflows, routes=routes,
                      engine=engine).run()

@@ -31,6 +31,8 @@ from typing import Optional
 
 
 class TaskKind(enum.Enum):
+    """The two first-class task kinds of the abstraction (§3.1)."""
+
     COMPUTE = "compute"
     NETWORK = "network"
 
@@ -74,6 +76,7 @@ class MXTask:
 
     @property
     def pipelineable(self) -> bool:
+        """Whether the task has unit structure finer than its size."""
         return self.unit is not None and self.unit < self.size
 
     @property
@@ -83,6 +86,7 @@ class MXTask:
 
     @property
     def n_units(self) -> int:
+        """Number of units (``ceil(size / effective_unit)``, min 1)."""
         if self.size == 0:
             return 1
         return max(1, int(math.ceil(self.size / self.effective_unit - 1e-12)))
@@ -94,6 +98,7 @@ class MXTask:
         return self.size / rsrc
 
     def unit_time(self, rsrc: float = 1.0) -> float:
+        """One unit's completion time under resource fraction ``rsrc``."""
         if not (0 < rsrc <= 1.0 + 1e-12):
             raise ValueError(f"rsrc must be in (0,1], got {rsrc}")
         return self.effective_unit / rsrc

@@ -22,6 +22,8 @@ from repro.core.task import MXTask, TaskKind
 
 @dataclasses.dataclass
 class WhatIfResult:
+    """Baseline vs variant makespan of one what-if query."""
+
     baseline: float
     variant: float
 
@@ -36,6 +38,7 @@ class WhatIfResult:
 
     @property
     def helps(self) -> bool:
+        """Whether the variant is strictly faster (beyond EPS)."""
         return self.variant < self.baseline - 1e-9
 
 
@@ -80,6 +83,7 @@ class WhatIf:
         return ms
 
     def baseline(self) -> float:
+        """The unmodified graph's makespan (cached)."""
         return self._makespan(self.graph)
 
     # ------------------------------------------------------------------

@@ -1,0 +1,211 @@
+"""Baseline schedulers (repro.core.baselines): goldens + properties.
+
+The golden makespans are hand-checkable on ``oversubscribed_fanin(2,
+4:1)``: two 1-unit flows share a 0.5-capacity uplink, f0 feeds an
+8-second compute and f1 a 1-second one.
+
+- fair sharing splits the uplink (0.25 each): both flows finish at t=4,
+  the critical compute at 4+8 = **12**;
+- SEBF / the dependency-coflow greedy serialize the (equal-Γ,
+  name-tie-broken) singleton coflows f0-first: f0 lands at t=2, the
+  critical compute at 2+8 = **10** — matching MXDAG;
+- Graphene prioritizes only computes (which never contend here) and
+  Metaflow gives both depth-0 flows one class, so both collapse to
+  fair sharing: **12**.
+
+The ``critical_flow_size=2.0`` variant makes f0 the *bigger* flow
+(Γ = 4 vs 2), so every bytes-ordered baseline schedules it last and all
+five converge on **14** while slack-driven MXDAG still sends it first
+(**12**) — the configuration that splits DAG-aware from DAG-blind.
+"""
+import pytest
+
+from repro.core import Cluster, MXDAG, MXDAGScheduler, compute, flow
+from repro.core import builders
+from repro.core.baselines import (
+    BASELINES,
+    DependencyCoflowScheduler,
+    GrapheneScheduler,
+    MetaflowScheduler,
+    SEBFScheduler,
+    coflow_dag,
+    effective_bottleneck,
+    flow_depth,
+)
+from repro.core.schedule import auto_coflows
+
+
+def makespans(g, cl):
+    """algo → makespan for every baseline plus MXDAG on (g, cl)."""
+    out = {a: f().schedule(g, cl).simulate(cl).makespan
+           for a, f in BASELINES.items()}
+    out["mxdag"] = MXDAGScheduler(
+        try_pipelining=False).schedule(g, cl).simulate(cl).makespan
+    return out
+
+
+class TestGoldens:
+    def test_fanin2_4to1(self):
+        g, cl = builders.oversubscribed_fanin(2, oversubscription=4.0)
+        assert makespans(g, cl) == {
+            "fair": 12.0, "sebf": 10.0, "sg_coflow": 10.0,
+            "graphene": 12.0, "metaflow": 12.0, "mxdag": 10.0}
+
+    def test_fanin2_4to1_heavy_critical_flow(self):
+        g, cl = builders.oversubscribed_fanin(
+            2, oversubscription=4.0, critical_flow_size=2.0)
+        assert makespans(g, cl) == {
+            "fair": 14.0, "sebf": 14.0, "sg_coflow": 14.0,
+            "graphene": 14.0, "metaflow": 14.0, "mxdag": 12.0}
+
+    def test_mxdag_never_loses_on_the_bakeoff_matrix(self):
+        """The claim the CI gate commits, at test scale."""
+        for make in (
+                lambda: builders.oversubscribed_fanin(
+                    4, oversubscription=4.0),
+                lambda: (builders.ddl(8, push=2.0, pull=2.0), None),
+                lambda: (builders.mapreduce("mr", 4, 4), None)):
+            g, cl = make()
+            res = makespans(g, cl)
+            best_base = min(v for a, v in res.items() if a != "mxdag")
+            assert res["mxdag"] <= best_base + 1e-9
+
+
+class TestMetrics:
+    def test_effective_bottleneck_charges_the_uplink(self):
+        g, cl = builders.oversubscribed_fanin(4, oversubscription=4.0)
+        # 4 unit flows on the 1.0-capacity shared uplink: Γ(all) = 4,
+        # a single flow alone still pays the uplink (1/1), not its
+        # endpoint NICs (1/1 each as well, so Γ = 1).
+        names = [t.name for t in g.network_tasks()]
+        assert effective_bottleneck(set(names), g, cl) \
+            == pytest.approx(4.0)
+        assert effective_bottleneck({names[0]}, g, cl) \
+            == pytest.approx(1.0)
+        assert effective_bottleneck(set(), g, cl) == 0.0
+
+    def test_effective_bottleneck_no_fabric_uses_nics(self):
+        g = MXDAG()
+        f = g.add(flow("f", 3.0, "a", "b"))
+        cl = Cluster.for_graph(g)
+        assert effective_bottleneck({f.name}, g, cl) \
+            == pytest.approx(3.0)
+
+    def test_coflow_dag_two_stage_chain(self):
+        # m0,m1 -(s0,s1)-> r -(t0)-> sink: stage 2 depends on stage 1
+        g = MXDAG()
+        m0 = g.add(compute("m0", 1.0, "h0"))
+        m1 = g.add(compute("m1", 1.0, "h1"))
+        r = g.add(compute("r", 1.0, "h2"))
+        sink = g.add(compute("sink", 1.0, "h3"))
+        s0 = g.add(flow("s0", 1.0, "h0", "h2"))
+        s1 = g.add(flow("s1", 1.0, "h1", "h2"))
+        t0 = g.add(flow("t0", 1.0, "h2", "h3"))
+        g.add_edge(m0, s0), g.add_edge(m1, s1)
+        g.add_edge(s0, r), g.add_edge(s1, r)
+        g.add_edge(r, t0), g.add_edge(t0, sink)
+        groups = [{"s0", "s1"}, {"t0"}]
+        assert coflow_dag(g, groups) == [set(), {0}]
+        # independent groups: no precedence either way
+        assert coflow_dag(g, [{"s0"}, {"s1"}]) == [set(), set()]
+
+    def test_flow_depth_skips_compute(self):
+        g = MXDAG()
+        a = g.add(compute("a", 1.0, "h0"))
+        f1 = g.add(flow("f1", 1.0, "h0", "h1"))
+        b = g.add(compute("b", 1.0, "h1"))
+        f2 = g.add(flow("f2", 1.0, "h1", "h2"))
+        c = g.add(compute("c", 1.0, "h2"))
+        g.chain(a, f1, b, f2, c)
+        assert flow_depth(g) == {"f1": 0, "f2": 1}
+
+    def test_auto_coflows_singletons_switch(self):
+        g, _ = builders.oversubscribed_fanin(4, oversubscription=4.0)
+        # every fan-in flow has a private consumer: all groups are
+        # singletons, so the default grouping is empty
+        assert auto_coflows(g) == []
+        singles = auto_coflows(g, singletons=True)
+        assert sorted(map(tuple, map(sorted, singles))) \
+            == [("f0",), ("f1",), ("f2",), ("f3",)]
+
+
+class TestSchedules:
+    def test_sebf_orders_ascending_gamma(self):
+        g, cl = builders.oversubscribed_fanin(
+            2, oversubscription=4.0, critical_flow_size=2.0)
+        s = SEBFScheduler().schedule(g, cl)
+        assert s.policy == "priority"
+        assert s.meta["order"] == [("f1",), ("f0",)]  # big flow last
+        assert s.priorities == {"f1": 0.0, "f0": 1.0}
+        assert s.coflows is None                      # all singletons
+
+    def test_dependency_scheduler_respects_precedence(self):
+        # two-stage shuffle: the stage-2 coflow is tiny (smallest Γ)
+        # but must still be ordered after the stage-1 coflow it reads
+        g = MXDAG()
+        m = g.add(compute("m", 1.0, "h0"))
+        r = g.add(compute("r", 1.0, "h1"))
+        sink = g.add(compute("sink", 1.0, "h2"))
+        big = g.add(flow("big", 9.0, "h0", "h1"))
+        tiny = g.add(flow("tiny", 0.1, "h1", "h2"))
+        g.chain(m, big, r, tiny, sink)
+        s = DependencyCoflowScheduler().schedule(g)
+        assert s.meta["order"] == [("big",), ("tiny",)]
+        assert s.meta["coflow_dag"] == {("big",): [],
+                                        ("tiny",): [("big",)]}
+        # plain SEBF gets it backwards — the blind spot under test
+        assert SEBFScheduler().schedule(g).meta["order"] \
+            == [("tiny",), ("big",)]
+
+    def test_graphene_priorities_compute_only_longest_first(self):
+        g, cl = builders.oversubscribed_fanin(2, oversubscription=4.0)
+        s = GrapheneScheduler().schedule(g, cl)
+        assert set(s.priorities) == {"c0", "c1"}      # no flows
+        assert s.priorities["c0"] < s.priorities["c1"]  # 8s chain first
+
+    def test_metaflow_priorities_flows_by_depth(self):
+        g = builders.ddl(3, push=2.0, pull=2.0)
+        s = MetaflowScheduler().schedule(g)
+        depths = flow_depth(g)
+        assert s.priorities == {n: float(d) for n, d in depths.items()}
+        assert all(g.tasks[n].kind.name == "NETWORK"
+                   for n in s.priorities)
+
+    def test_baselines_deterministic(self):
+        g, cl = builders.oversubscribed_fanin(4, oversubscription=4.0)
+        for factory in BASELINES.values():
+            a, b = factory().schedule(g, cl), factory().schedule(g, cl)
+            assert a.priorities == b.priorities
+            assert a.coflows == b.coflows
+
+
+class TestEngineRoundTrip:
+    """Every baseline's Schedule must mean the same thing to the
+    flat-array engine and the event-calendar oracle."""
+
+    def _check(self, g, cl=None):
+        for name, factory in BASELINES.items():
+            s = factory().schedule(g, cl)
+            arr = s.simulate(cl).makespan
+            cal = s.simulate(cl, engine="calendar").makespan
+            assert arr == pytest.approx(cal, abs=1e-9), name
+
+    def test_fanin_with_fabric(self):
+        g, cl = builders.oversubscribed_fanin(4, oversubscription=4.0)
+        self._check(g, cl)
+
+    def test_random_layered_property(self):
+        hypothesis = pytest.importorskip(
+            "hypothesis",
+            reason="hypothesis not installed (pip install -e .[test])")
+        from hypothesis import given, settings, strategies as st
+
+        @given(seed=st.integers(min_value=0, max_value=2**16),
+               n=st.integers(min_value=10, max_value=80))
+        @settings(max_examples=15, deadline=None)
+        def run(seed, n):
+            g = builders.random_layered(
+                n, n_hosts=8, min_width=2, max_width=4, seed=seed)
+            self._check(g)
+
+        run()
