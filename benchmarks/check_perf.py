@@ -12,10 +12,13 @@ on shared CI runners dwarfs any real regression.  Rows named
 ``*.ref_match`` must equal 1.0 (the engine under test diverged from its
 oracle — a correctness failure, not a perf one), as must rows named
 ``*.improves`` (a scheduling decision — e.g. placement on the fat-tree
-shuffle — stopped beating its fixed baseline) and ``*.mxdag_wins``
+shuffle — stopped beating its fixed baseline), ``*.mxdag_wins``
 (MXDAG's makespan fell behind a baseline scheduler's on a bake-off
 scenario — see benchmarks/bakeoff.py; the headline claim of the
-reproduction, gated like any other correctness row).  ``scale.speedup_array_*``
+reproduction, gated like any other correctness row), ``*.replan_wins``
+(live replanning stopped strictly beating the no-replan arm on a
+fault-injection scenario — see benchmarks/nemesis.py) and
+``*.detected`` (the replan controller missed an injected fault).  ``scale.speedup_array_*``
 rows (flat-array engine vs the event-calendar core on the Graphene-scale
 scenarios, including the ddl(1024) serial-chain trickle that
 component-level reallocation + coalesced completion events lifted from
@@ -136,6 +139,22 @@ def main(argv=None) -> int:
             elif bench[name] != 1.0:
                 failures.append(f"{name}: MXDAG no longer matches or "
                                 f"beats every baseline scheduler")
+            continue
+        if name.endswith(".replan_wins"):
+            if name not in bench:
+                failures.append(f"{name}: recovery claim row missing "
+                                f"from bench output (check never ran)")
+            elif bench[name] != 1.0:
+                failures.append(f"{name}: replanning no longer strictly "
+                                f"beats the no-replan arm")
+            continue
+        if name.endswith(".detected"):
+            if name not in bench:
+                failures.append(f"{name}: detection row missing from "
+                                f"bench output (check never ran)")
+            elif bench[name] != 1.0:
+                failures.append(f"{name}: the controller missed an "
+                                f"injected fault")
             continue
         floor = speedup_floor(name)
         if floor is not None:

@@ -1,0 +1,296 @@
+"""Fault-injection recovery benchmark: replan vs no-replan vs oracle.
+
+Each scenario injects one concrete fault (host loss, executor
+straggler, link degradation) into a *live* flat-array DES run via the
+Nemesis harness (``repro.core.nemesis``) and measures the recovery
+makespan three ways:
+
+- **no-replan** — the fault lands and nothing reacts.  An
+  unrecoverable fault (a dead host holding unfinished work) stalls the
+  run: makespan ``inf``.
+- **replan** — the ReplanController probes progress, feeds it into the
+  Monitor, diagnoses the fault (announced for host loss; *inferred*
+  from straggler observations for slow executors and degraded links),
+  and recovers with ``move_task`` / ``repath_flow`` / a warm
+  ``MXDAGScheduler`` re-prioritisation.
+- **oracle** — a clairvoyant plan that knew the fault before t=0:
+  schedule around the doomed host / slow executor (best ``move_task``
+  what-if over every healthy host) or route around the degraded link
+  (ECMP candidates avoiding it).  The gap ``replan / oracle`` is the
+  price of *detecting* at runtime instead of knowing.
+
+Row families (gated rows committed in ``baseline.json`` and enforced
+by check_perf.py):
+
+- ``nemesis.<scenario>.base_ms`` / ``no_replan_ms`` / ``replan_ms`` /
+  ``oracle_ms`` — model-time makespans (informational),
+- ``nemesis.<scenario>.replan_wins`` — 1.0 iff replanning *strictly*
+  beats the no-replan arm (gated: the robustness headline),
+- ``nemesis.<scenario>.detected`` — 1.0 iff the tracker confirmed the
+  controller noticed every injected fault (gated),
+- ``nemesis.<scenario>.ref_match`` — 1.0 iff a Nemesis run with an
+  *empty* fault schedule reproduces the plain ``array_run`` makespan
+  bit-exactly (gated: the pause/mutate/resume machinery is free when
+  unused),
+- ``nemesis.<scenario>.vs_oracle`` — replan/oracle ratio
+  (informational),
+- ``nemesis.layered_rand.*`` — a seeded ``random_faults`` schedule on
+  a random layered DAG (informational: the matrix row that exercises
+  fault *sampling* rather than a hand-picked fault).
+
+``--smoke`` restricts to the two CI-lane scenarios (one host loss, one
+link degradation); ``--report PATH`` writes the markdown recovery
+report the CI uploads as an artifact; ``--only PREFIX`` / ``--json
+PATH`` behave as in scale.py; ``--seed`` reseeds the random scenario.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)        # so `python benchmarks/nemesis.py` works
+
+#: scenarios the CI bench-smoke lane runs (one announced fault, one
+#: inferred fault) — seeded, deterministic, < 1s together
+SMOKE = ("fanin8_hostloss", "ft8_linkdeg")
+
+
+def _best_move(g, cl, task: str, avoid: set[str]) -> float:
+    """Oracle makespan: the best ``move_task`` what-if over every
+    healthy host with a matching slot pool (the plan of a scheduler
+    that knew ``task``'s resources were doomed)."""
+    from repro.core import WhatIf
+
+    w = WhatIf(g, cl)
+    proc = g.tasks[task].proc
+    best = float("inf")
+    for hname, h in sorted(cl.hosts.items()):
+        if hname in avoid or h.procs.get(proc, 0) < 1:
+            continue
+        best = min(best, w.move_task(task, hname).variant)
+    return best
+
+
+def _loaded_fabric_link(g, cl) -> str:
+    """The most-traversed non-NIC link under the static ECMP routing —
+    the deterministic pick for the link-degradation scenario."""
+    from collections import Counter
+
+    from repro.core import TaskKind
+    from repro.core.fabric import is_nic_link
+
+    cnt: Counter = Counter()
+    for t in g.tasks.values():
+        if t.kind is TaskKind.NETWORK:
+            for l in cl.resources_for(t):
+                if not is_nic_link(l):
+                    cnt[l] += 1
+    return max(sorted(cnt), key=cnt.__getitem__)
+
+
+def _reroute_oracle(sched, cl, link: str) -> float:
+    """Oracle makespan for a degraded link: every flow whose static
+    route traverses it takes the first ECMP candidate that avoids it
+    (from t=0, on undegraded capacities — the oracle never touches the
+    bad link)."""
+    from repro.core import TaskKind
+
+    routes = {}
+    for t in sched.graph.tasks.values():
+        if t.kind is not TaskKind.NETWORK:
+            continue
+        if link in cl.resources_for(t):
+            for p in cl.candidate_routes(t):
+                if link not in p:
+                    routes[t.name] = p
+                    break
+    return sched.simulate(cl, routes=routes).makespan
+
+
+def scenarios(seed: int = 0):
+    """name → build thunk for the fault matrix.
+
+    Each thunk returns a dict with the scheduled run (``sched``,
+    ``cl``), the fault list, the oracle makespan, the controller's
+    probe cadence, and ``gated`` (whether the win/detection claims are
+    committed to baseline.json — False only for the random-sampled
+    scenario, whose fault mix depends on ``seed``).
+    """
+    from repro.core import Cluster, MXDAGScheduler, builders
+    from repro.core.nemesis import Fault, random_faults
+
+    def _plan(g, cl):
+        return MXDAGScheduler(try_pipelining=False).schedule(g, cl)
+
+    def fanin8_hostloss():
+        g, cl = builders.oversubscribed_fanin(8, oversubscription=8.0)
+        sched = _plan(g, cl)
+        return dict(
+            sched=sched, cl=cl,
+            faults=[Fault(2.5, "host_loss", "d0")],
+            oracle=_best_move(g, cl, "c0", avoid={"d0"}),
+            probe_every=0.5, gated=True)
+
+    def fanin8_straggler():
+        g, cl = builders.oversubscribed_fanin(8, oversubscription=8.0)
+        sched = _plan(g, cl)
+        return dict(
+            sched=sched, cl=cl,
+            faults=[Fault(1.5, "straggler", "c0", factor=0.125)],
+            oracle=_best_move(g, cl, "c0", avoid={"d0"}),
+            probe_every=0.5, gated=True)
+
+    def ft8_linkdeg():
+        g, cl = builders.fat_tree_shuffle(8, stride=2)
+        sched = _plan(g, cl)
+        base = sched.simulate(cl).makespan
+        link = _loaded_fabric_link(g, cl)
+        return dict(
+            sched=sched, cl=cl,
+            faults=[Fault(0.3 * base, "link_degrade", link, factor=0.1)],
+            oracle=_reroute_oracle(sched, cl, link),
+            probe_every=0.25, gated=True)
+
+    def layered_rand():
+        g = builders.random_layered(400, n_hosts=16, min_width=4,
+                                    max_width=16, seed=7)
+        cl = Cluster.for_graph(g)
+        sched = _plan(g, cl)
+        base = sched.simulate(cl).makespan
+        return dict(
+            sched=sched, cl=cl,
+            faults=random_faults(g, cl, horizon=base, n=2, seed=seed),
+            oracle=base,     # no closed-form clairvoyant; base = bound
+            probe_every=0.5, gated=False)
+
+    return {
+        "fanin8_hostloss": fanin8_hostloss,
+        "fanin8_straggler": fanin8_straggler,
+        "ft8_linkdeg": ft8_linkdeg,
+        "layered_rand": layered_rand,
+    }
+
+
+def run_scenario(spec: dict) -> dict:
+    """Run all three arms plus the zero-fault equivalence check."""
+    from repro.core.nemesis import Nemesis
+
+    sched, cl = spec["sched"], spec["cl"]
+    expected = sched.simulate(cl)
+    kw = dict(probe_every=spec["probe_every"], expected=expected)
+    no = Nemesis(sched, cl, faults=spec["faults"], replan=False,
+                 **kw).run()
+    yes = Nemesis(sched, cl, faults=spec["faults"], replan=True,
+                  **kw).run()
+    zero = Nemesis(sched, cl, faults=[], replan=True, **kw).run()
+    return {
+        "base": expected.makespan,
+        "no_replan": no.makespan,
+        "replan": yes.makespan,
+        "oracle": spec["oracle"],
+        "detection_rate": yes.detection_rate,
+        "ref_match": 1.0 if zero.makespan == expected.makespan else 0.0,
+        "report": yes.tracker.report(),
+    }
+
+
+def bench_rows(only: str | None = None, *, seed: int = 0,
+               smoke: bool = False, reports: dict | None = None):
+    """The ``nemesis.*`` (name, value, derived) rows for run.py/CI.
+
+    ``reports``, when given, collects each scenario's markdown recovery
+    report (for ``--report``/the CI artifact).
+    """
+    rows = []
+    for name, make in scenarios(seed).items():
+        if smoke and name not in SMOKE:
+            continue
+        if only is not None and not name.startswith(only):
+            continue
+        spec = make()
+        res = run_scenario(spec)
+        if reports is not None:
+            reports[name] = res["report"]
+        f = spec["faults"][0] if spec["faults"] else None
+        what = (f"{f.kind} {f.target} @t={f.time:g}" if f else "no faults")
+        rows.append((f"nemesis.{name}.base_ms", res["base"],
+                     "fault-free makespan (model time)"))
+        rows.append((f"nemesis.{name}.no_replan_ms", res["no_replan"],
+                     f"{what}; nothing reacts (inf = stalled)"))
+        rows.append((f"nemesis.{name}.replan_ms", res["replan"],
+                     f"{what}; controller detects and replans"))
+        rows.append((f"nemesis.{name}.oracle_ms", res["oracle"],
+                     "clairvoyant plan that knew the fault before t=0"))
+        if spec["gated"]:
+            rows.append((
+                f"nemesis.{name}.replan_wins",
+                1.0 if res["replan"] < res["no_replan"] - 1e-9 else 0.0,
+                f"replan {res['replan']:g} < no-replan "
+                f"{res['no_replan']:g} (1.0 = validated)"))
+            rows.append((
+                f"nemesis.{name}.detected",
+                1.0 if res["detection_rate"] == 1.0 else 0.0,
+                "controller noticed every injected fault"))
+        else:
+            rows.append((f"nemesis.{name}.detect_rate",
+                         res["detection_rate"],
+                         f"seeded random_faults (seed={seed}); "
+                         "informational"))
+        rows.append((f"nemesis.{name}.ref_match", res["ref_match"],
+                     "zero-fault Nemesis == plain array_run makespan "
+                     "(bit-exact)"))
+        if res["oracle"] > 0 and res["replan"] < float("inf"):
+            rows.append((f"nemesis.{name}.vs_oracle",
+                         res["replan"] / res["oracle"],
+                         "recovery makespan / clairvoyant makespan "
+                         "(the price of runtime detection)"))
+    return rows
+
+
+def recovery_report(reports: dict[str, str]) -> str:
+    """One markdown document with every scenario's tracker table."""
+    parts = ["# Nemesis recovery report", ""]
+    for name, rep in reports.items():
+        parts += [f"## {name}", "", rep, ""]
+    return "\n".join(parts)
+
+
+def main() -> None:
+    """CLI driver: CSV rows by default; see module docstring."""
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", metavar="PREFIX", default=None,
+                    help="run only scenarios whose name starts with "
+                         "PREFIX, e.g. fanin")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run only the CI smoke pair (one host loss, "
+                         "one link degradation)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seed for the random_faults scenario")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the rows as JSON to PATH")
+    ap.add_argument("--report", metavar="PATH", default=None,
+                    help="write the markdown recovery report to PATH")
+    args = ap.parse_args()
+
+    reports: dict[str, str] = {}
+    rows = bench_rows(args.only, seed=args.seed, smoke=args.smoke,
+                      reports=reports)
+    if args.json:        # artifact first: survives a closed stdout pipe
+        with open(args.json, "w") as f:
+            json.dump([{"name": n, "value": v, "derived": str(d)}
+                       for n, v, d in rows], f, indent=2)
+    if args.report:
+        with open(args.report, "w") as f:
+            f.write(recovery_report(reports) + "\n")
+    print("name,value,derived")
+    for name, value, derived in rows:
+        print(f"{name},{value:.6g},{str(derived).replace(',', ';')}")
+
+
+if __name__ == "__main__":
+    main()

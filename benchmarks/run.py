@@ -12,6 +12,9 @@
 - the baseline bake-off (bakeoff.py — fair sharing, SEBF, dependency-
   graph coflows, Graphene and Metaflow vs MXDAG on the scenario ×
   topology matrix; ``mxdag_wins`` claim rows gated by check_perf.py),
+- the fault-injection recovery matrix (nemesis.py — replan vs
+  no-replan vs clairvoyant oracle under host loss, stragglers and link
+  degradation; ``replan_wins``/``detected``/``ref_match`` rows gated),
 - the roofline summary per dry-run cell (roofline.py; populated by
   ``python -m repro.launch.dryrun --all``).
 
@@ -66,7 +69,9 @@ def main(argv=None) -> None:
                     help="also write the rows as JSON to PATH")
     args = ap.parse_args(argv)
 
-    from benchmarks import bakeoff, fabric, figures, roofline, scale
+    from benchmarks import (
+        bakeoff, fabric, figures, nemesis, roofline, scale,
+    )
 
     rows = []
     for fig in figures.ALL:
@@ -75,6 +80,7 @@ def main(argv=None) -> None:
     rows += scheduler_micro()
     rows += scale.bench_rows(seed_rows=not args.no_seed)
     rows += bakeoff.bench_rows()
+    rows += nemesis.bench_rows()
     if not args.smoke:
         rows += roofline.bench_rows()
 

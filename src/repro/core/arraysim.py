@@ -98,8 +98,9 @@ class CompiledSim:
 
     __slots__ = (
         "n", "names", "idx", "name_rank", "size", "unit", "nu",
-        "is_compute", "job", "slot_of", "slot_cap", "net_ids", "net_pos",
-        "n_net", "flow_links", "n_links", "link_bw", "succ",
+        "is_compute", "job", "slot_of", "slot_cap", "slot_ids",
+        "net_ids", "net_pos",
+        "n_net", "flow_links", "n_links", "link_bw", "link_ids", "succ",
         "gate_dec", "init_gate", "gate_stream", "stream_in",
         "stream_out",
         "has_streaming", "stream_fed", "coflow_of", "coflows", "cof_dec",
@@ -183,6 +184,7 @@ def _compile(sim) -> CompiledSim:
                 comp.slot_cap.append(
                     int(h.procs.get(t.proc, 0)) if h is not None else 0)
             comp.slot_of[i] = si
+    comp.slot_ids = slot_ids
     # flow→link incidence over interned links.  Without a fabric or
     # route overrides a flow's path is exactly (src NIC-out, dst NIC-in)
     # — intern those from the task fields directly, skipping the
@@ -229,6 +231,7 @@ def _compile(sim) -> CompiledSim:
         comp.link_bw = [0.0] * comp.n_links
         for l, li in link_ids.items():
             comp.link_bw[li] = float(bw[l])
+    comp.link_ids = link_ids
     comp.n_net = len(comp.net_ids)
 
     # coflows (members in sorted-name order: iteration order never
@@ -691,263 +694,326 @@ def array_run(sim, horizon: float = 1e15):
     structure, gating semantics, allocation and tie-breaking orders — on
     integer-indexed state.  See the module docstring for where the two
     may differ in floating-point association (last-ulp only).
+
+    Implemented as one uninterrupted :class:`ResumableSim` session, so
+    the pausable fault-capable engine and this hot path are a single
+    implementation that cannot drift apart (the zero-fault differential
+    tests pin the equivalence regardless).
     """
-    from repro.core.simulator import SimResult
+    rs = ResumableSim(sim, horizon)
+    rs.run_until(math.inf)
+    return rs.result()
 
-    comp = compile_sim(sim)
-    use_np = comp.np_ready and np is not None
-    n = comp.n
-    names = comp.names
-    size, unit, nu = comp.size, comp.unit, comp.nu
-    is_comp = comp.is_compute
-    net_pos, net_ids = comp.net_pos, comp.net_ids
-    flow_links = comp.flow_links
-    stream_in, stream_out = comp.stream_in, comp.stream_out
-    gate_stream = comp.gate_stream
-    coflow_of, coflows = comp.coflow_of, comp.coflows
-    succ = comp.succ
-    policy = sim.policy
-    prio_get = sim.prio.get
-    inf = math.inf
-    heappush, heappop = heapq.heappush, heapq.heappop
 
-    # -- per-run priority/release arrays -------------------------------
-    if policy == "fair":
-        cls_net: list = [None] * comp.n_net
-    else:
-        cls_net = [0.0 if comp.stream_fed[i] else prio_get(names[i], 0.0)
-                   for i in net_ids]
-    prio_arr = [prio_get(nm, 0.0) for nm in names]
-    if use_np:
-        order = np.lexsort((comp.name_rank_a, np.array(prio_arr)))
-        dr = np.empty(n, dtype=np.int64)
-        dr[order] = np.arange(n, dtype=np.int64)
-        dispatch_rank = dr.tolist()
-    else:
-        order = sorted(range(n),
-                       key=lambda i: (prio_arr[i], comp.name_rank[i]))
-        dispatch_rank = [0] * n
-        for r, i in enumerate(order):
-            dispatch_rank[i] = r
-    rel = [0.0] * n
-    for nm, v in sim.releases.items():
-        rel[comp.idx[nm]] = v
+class ResumableSim:
+    """A pausable array-DES session: run, pause, mutate, resume.
 
-    # -- dynamic state (flat lists of float64/int; scalar access in the
-    # branchy event code is list-speed, batch math converts on demand) --
-    work = [0.0] * n
-    rate = [0.0] * n
-    cap = list(size)                 # cap_of default = size
-    starved_net = [False] * comp.n_net
-    started: list = [None] * n
-    finished: list = [None] * n
-    has_slot = [False] * n
-    starved = [False] * n
-    d_units = [0] * n
-    slots_free = list(comp.slot_cap)
-    cof_left = [len(c) for c in coflows]
-    n_gate = list(comp.init_gate)
-    active: set[int] = set()
-    waiting_slot: dict[int, set[int]] = {}
-    candidates: set[int] = set()
-    freed: set[int] = set()
-    touched: set[int] = set()        # needs a starvation re-check
-    touched_sched: set[int] = set()  # only needs schedule_event (fresh
-    #   capless starts, rate changes: their starvation state provably
-    #   cannot have flipped, so the re-check loop skips them)
-    # component state: per contention component, the runnable net
-    # positions, the started-unfinished *simple* flows (whose
-    # completion events coalesce into one heap entry per component),
-    # the (class -> freeze sequence) replay log, and the lowest dirty
-    # priority class (fair: 0.0) since the last fill
-    comp_of = comp.comp_of_net
-    simple = comp.simple
-    n_comps = comp.n_comps
-    comp_runnable: list = [set() for _ in range(n_comps)]
-    comp_simple_active: list = [set() for _ in range(n_comps)]
-    comp_log: list = [None] * n_comps
-    comp_stamp = [0] * n_comps
-    comp_dirty: dict = {}
-    comp_resched: set[int] = set()
-    link_bw = comp.link_bw
-    residual = comp.link_bw_a.copy() if use_np else list(link_bw)
-    heap: list = []
-    stamp = [0] * n
-    unfinished = n
-    now = 0.0
+    Construction compiles (or reuses the cached compile of) ``sim`` and
+    materialises the exact run state ``array_run`` uses — flat
+    work/rate/cap vectors, the event heap, per-component allocation
+    state — as closure cells shared by one ``advance`` loop and a set of
+    mutators.  With no mutations applied, pausing and resuming is
+    bit-exact against the uninterrupted run: ``run_until`` only ever
+    stops *between* events (the next event strictly after ``t_stop``
+    stays in the heap), so no partial-interval work integration is
+    introduced.  ``advance_to`` moves the clock into the gap before the
+    next event (integrating work) so a fault can land at its exact
+    scheduled time.
 
-    def dirty_net(pos: int) -> None:
-        """Mark flow ``pos``'s component dirty at its class."""
-        K = comp_of[pos]
-        c = cls_net[pos]
-        if c is None:                # fair policy: one class
-            c = 0.0
-        cur = comp_dirty.get(K)
-        if cur is None or c < cur:
-            comp_dirty[K] = c
+    Mutators implement the fault model of :mod:`repro.core.nemesis`:
 
-    def delivered_fraction(p: int) -> float:
-        """Fraction of ``p``'s output delivered (unit granularity)."""
-        if finished[p] is not None:
-            return 1.0
-        sz = size[p]
-        if sz <= 0:
-            return 1.0
-        u = unit[p]
-        return min(1.0, math.floor(work[p] / u + EPS) * u / sz)
+    - ``set_speed`` — per-task rate multiplier (straggler / slow
+      executor).  Speeds multiply at use (``rate[i] * speed[i]``), so
+      the all-ones default is IEEE-exact against the plain engine.  A
+      straggling flow still *holds* its waterfilled share — slow
+      delivery wastes the allocation, as on a real fabric.
+    - ``set_link_bw`` / ``scale_link`` — link degradation or failure.
+      Components touching the link are re-waterfilled through the
+      existing component-level reallocation (dirtied at class ``-inf``).
+    - ``kill_task`` / ``kill_host`` — progress loss.  ``kill_host``
+      computes the lineage closure: finished tasks whose output data
+      resided on the dead host (computes placed there, flows delivered
+      there) and is still needed by an unfinished data consumer are
+      resurrected (gate counters restored) so the data is reproduced.
+      Compute→compute edges are treated as control-only dependencies;
+      their data, if any, is assumed durable.
+    - ``move_task`` / ``repath_flow`` — the replanner's recovery
+      actions: re-place a compute (restarting it if begun), re-path a
+      flow without recompiling, merging contention components when the
+      new path bridges previously disjoint ones.
+    - ``set_priorities`` — re-prioritise (and optionally switch policy)
+      mid-run; freeze-sequence replay logs are invalidated and dirty
+      components refill from scratch.
 
-    def start_gate_ok(i: int) -> bool:
-        """Gate counter zero and first streamed unit available?"""
-        if n_gate[i]:
-            return False
-        for p in gate_stream[i]:
-            if delivered_fraction(p) + EPS < 1.0 / nu[i]:
+    Mutations queue against the paused clock and are *settled* (restart
+    gating, starvation flips, component refills, event rescheduling —
+    exactly the passes one event iteration runs) before the next
+    advance.  ``checkpoint``/``restore`` snapshot the whole mutable
+    state so scenario arms can fork from one shared pre-fault prefix.
+    Coflow-coupled tasks cannot be resurrected (MADD bookkeeping is not
+    rewound); fault scenarios avoid killing them after completion.
+    """
+
+    def __init__(self, sim, horizon: float = 1e15):
+        from repro.core.simulator import SimResult
+
+        comp = compile_sim(sim)
+        use_np = comp.np_ready and np is not None
+        n = comp.n
+        names = comp.names
+        size, unit, nu = comp.size, comp.unit, comp.nu
+        is_comp = comp.is_compute
+        net_pos, net_ids = comp.net_pos, comp.net_ids
+        flow_links = comp.flow_links
+        stream_in, stream_out = comp.stream_in, comp.stream_out
+        gate_stream = comp.gate_stream
+        coflow_of, coflows = comp.coflow_of, comp.coflows
+        succ = comp.succ
+        policy = sim.policy
+        prio_get = sim.prio.get
+        inf = math.inf
+        heappush, heappop = heapq.heappush, heapq.heappop
+        cluster = sim.cluster
+        hosts = cluster.hosts
+
+        # -- per-run priority/release arrays ---------------------------
+        if policy == "fair":
+            cls_net: list = [None] * comp.n_net
+        else:
+            cls_net = [0.0 if comp.stream_fed[i]
+                       else prio_get(names[i], 0.0)
+                       for i in net_ids]
+        prio_arr = [prio_get(nm, 0.0) for nm in names]
+        if use_np:
+            order = np.lexsort((comp.name_rank_a, np.array(prio_arr)))
+            dr = np.empty(n, dtype=np.int64)
+            dr[order] = np.arange(n, dtype=np.int64)
+            dispatch_rank = dr.tolist()
+        else:
+            order = sorted(range(n),
+                           key=lambda i: (prio_arr[i], comp.name_rank[i]))
+            dispatch_rank = [0] * n
+            for r, i in enumerate(order):
+                dispatch_rank[i] = r
+        rel = [0.0] * n
+        for nm, v in sim.releases.items():
+            rel[comp.idx[nm]] = v
+
+        # -- dynamic state (flat lists of float64/int; scalar access in
+        # the branchy event code is list-speed, batch math converts on
+        # demand) ------------------------------------------------------
+        work = [0.0] * n
+        rate = [0.0] * n
+        cap = list(size)                 # cap_of default = size
+        speed = [1.0] * n                # fault-model rate multipliers
+        speed_on = False                 # sticky: any speed ever != 1.0
+        starved_net = [False] * comp.n_net
+        started: list = [None] * n
+        finished: list = [None] * n
+        has_slot = [False] * n
+        starved = [False] * n
+        d_units = [0] * n
+        slots_free = list(comp.slot_cap)
+        cof_left = [len(c) for c in coflows]
+        n_gate = list(comp.init_gate)
+        active: set[int] = set()
+        waiting_slot: dict[int, set[int]] = {}
+        candidates: set[int] = set()
+        freed: set[int] = set()
+        touched: set[int] = set()        # needs a starvation re-check
+        touched_sched: set[int] = set()  # only needs schedule_event
+        #   (fresh capless starts, rate changes: their starvation state
+        #   provably cannot have flipped, so the re-check loop skips
+        #   them)
+        # component state: per contention component, the runnable net
+        # positions, the started-unfinished *simple* flows (whose
+        # completion events coalesce into one heap entry per component),
+        # the (class -> freeze sequence) replay log, and the lowest
+        # dirty priority class (fair: 0.0) since the last fill
+        comp_of = comp.comp_of_net
+        simple = comp.simple
+        n_comps = comp.n_comps
+        comp_runnable: list = [set() for _ in range(n_comps)]
+        comp_simple_active: list = [set() for _ in range(n_comps)]
+        comp_log: list = [None] * n_comps
+        comp_stamp = [0] * n_comps
+        comp_dirty: dict = {}
+        comp_resched: set[int] = set()
+        # mutators patch link capacities in place — run-owned copy, so
+        # the compile cached on the graph is never poisoned
+        link_bw = list(comp.link_bw)
+        residual = comp.link_bw_a.copy() if use_np else list(link_bw)
+        heap: list = []
+        stamp = [0] * n
+        unfinished = n
+        now = 0.0
+        needs_settle = False
+
+        # copy-on-write structural state: repath/move rebind these to
+        # run-local copies on first mutation; until then the compile's
+        # arrays are shared read-only
+        slot_of = comp.slot_of
+        slot_ids_run = comp.slot_ids
+        fl_ptr, fl_flat = comp.fl_ptr, comp.fl_flat
+        full_sg_pos = comp.full_sg_pos
+        full_sorted_ids = comp.full_sorted_ids
+        full_row_links = comp.full_row_links
+        full_by_link = comp.full_by_link
+        full_counts = comp.full_counts
+
+        # link-name interning (big-switch compiles key links by endpoint
+        # tuples; surface the NIC resource names either way) and current
+        # placement/endpoints (the graph's Task objects are never
+        # mutated — moves and repaths live here)
+        link_names: list = [None] * len(link_bw)
+        link_name_id: dict[str, int] = {}
+        for k, li in comp.link_ids.items():
+            lname = k if isinstance(k, str) else \
+                (k[1] + ".nic_out" if k[0] == "o" else k[1] + ".nic_in")
+            link_names[li] = lname
+            link_name_id[lname] = li
+        cur_host: list = [None] * n
+        cur_src: list = [None] * comp.n_net
+        cur_dst: list = [None] * comp.n_net
+        for i, t in enumerate(sim.g.tasks.values()):
+            if is_comp[i]:
+                cur_host[i] = t.host
+            else:
+                p = net_pos[i]
+                cur_src[p] = t.src
+                cur_dst[p] = t.dst
+
+        def dirty_net(pos: int) -> None:
+            """Mark flow ``pos``'s component dirty at its class."""
+            K = comp_of[pos]
+            c = cls_net[pos]
+            if c is None:                # fair policy: one class
+                c = 0.0
+            cur = comp_dirty.get(K)
+            if cur is None or c < cur:
+                comp_dirty[K] = c
+
+        def delivered_fraction(p: int) -> float:
+            """Fraction of ``p``'s output delivered (unit granularity)."""
+            if finished[p] is not None:
+                return 1.0
+            sz = size[p]
+            if sz <= 0:
+                return 1.0
+            u = unit[p]
+            return min(1.0, math.floor(work[p] / u + EPS) * u / sz)
+
+        def start_gate_ok(i: int) -> bool:
+            """Gate counter zero and first streamed unit available?"""
+            if n_gate[i]:
                 return False
-        return True
+            for p in gate_stream[i]:
+                if delivered_fraction(p) + EPS < 1.0 / nu[i]:
+                    return False
+            return True
 
-    def recompute_cap(i: int) -> float:
-        """Work cap from streaming predecessors' delivered units."""
-        c = size[i]
-        nui = nu[i]
-        eu = unit[i]
-        for p in stream_in[i]:
-            if finished[p] is None:
-                enabled = math.floor(delivered_fraction(p) * nui + EPS)
-                c2 = enabled * eu
-                if c2 < c:
-                    c = c2
-        return c
+        def recompute_cap(i: int) -> float:
+            """Work cap from streaming predecessors' delivered units."""
+            c = size[i]
+            nui = nu[i]
+            eu = unit[i]
+            for p in stream_in[i]:
+                if finished[p] is None:
+                    enabled = math.floor(delivered_fraction(p) * nui
+                                         + EPS)
+                    c2 = enabled * eu
+                    if c2 < c:
+                        c = c2
+            return c
 
-    pending: list = []               # kind-1 entries awaiting the heap
-    _defer = pending.append
+        pending: list = []               # kind-1 entries awaiting the heap
+        _defer = pending.append
 
-    def schedule_event(i: int) -> None:
-        """(Re)compute task ``i``'s next unit/cap/completion event."""
-        stamp[i] += 1
-        r = rate[i]
-        if finished[i] is not None or started[i] is None or r <= EPS:
-            active.discard(i)
-            return
-        active.add(i)
-        sz = size[i]
-        w = work[i]
-        u = unit[i]
-        if u >= sz and cap[i] >= sz:
-            # common case: no unit boundaries, cap at size — the sole
-            # target is completion (bit-identical to the general fold)
-            if sz > w + EPS:
-                _defer((float(now + (sz - w) / r), 1, i, stamp[i]))
-            return
-        if u < sz:
-            tgt = (math.floor(w / u + EPS) + 1) * u
-            if tgt > sz:
-                tgt = sz
-        else:
-            tgt = sz
-        best = inf
-        if tgt > w + EPS:
-            best = (tgt - w) / r
-        if sz > w + EPS:
-            d = (sz - w) / r
-            if d < best:
-                best = d
-        c = cap[i]
-        if c > w + EPS:
-            d = (c - w) / r
-            if d < best:
-                best = d
-        if best < inf:
-            _defer((float(now + best), 1, i, stamp[i]))
-
-    def flush_events() -> None:
-        """Move deferred entries into the heap: one heapify for a mega-
-        batch (same entry set, so the event calendar is unchanged —
-        only the arbitrary pop order of equal-time entries may differ,
-        which batch collection absorbs), individual pushes otherwise."""
-        if len(pending) > 1024 and len(pending) * 2 > len(heap):
-            heap.extend(pending)
-            heapq.heapify(heap)
-        else:
-            for e in pending:
-                heappush(heap, e)
-        pending.clear()
-
-    slot_of = comp.slot_of
-    gate_dec = comp.gate_dec
-
-    def schedule_comp(K: int) -> None:
-        """(Re)compute a component's next *completion* among its simple
-        flows: one heap entry per component instead of one per flow.
-        Each candidate time is the exact float schedule_event would
-        compute (``now + (size-work)/rate``), and min over them is the
-        earliest per-flow entry — so the event calendar is unchanged;
-        only the stale-entry volume shrinks from O(flows) to O(1) per
-        reallocation."""
-        st = comp_stamp[K] + 1
-        comp_stamp[K] = st
-        best = inf
-        for i in comp_simple_active[K]:
+        def schedule_event(i: int) -> None:
+            """(Re)compute task ``i``'s next unit/cap/completion event."""
+            stamp[i] += 1
             r = rate[i]
-            if r > EPS:
-                d = (size[i] - work[i]) / r
+            if speed_on:
+                r = r * speed[i]
+            if finished[i] is not None or started[i] is None or r <= EPS:
+                active.discard(i)
+                return
+            active.add(i)
+            sz = size[i]
+            w = work[i]
+            u = unit[i]
+            if u >= sz and cap[i] >= sz:
+                # common case: no unit boundaries, cap at size — the
+                # sole target is completion (bit-identical to the
+                # general fold)
+                if sz > w + EPS:
+                    _defer((float(now + (sz - w) / r), 1, i, stamp[i]))
+                return
+            if u < sz:
+                tgt = (math.floor(w / u + EPS) + 1) * u
+                if tgt > sz:
+                    tgt = sz
+            else:
+                tgt = sz
+            best = inf
+            if tgt > w + EPS:
+                best = (tgt - w) / r
+            if sz > w + EPS:
+                d = (sz - w) / r
                 if d < best:
                     best = d
-        if best < inf:
-            _defer((float(now + best), 2, K, st))
+            c = cap[i]
+            if c > w + EPS:
+                d = (c - w) / r
+                if d < best:
+                    best = d
+            if best < inf:
+                _defer((float(now + best), 1, i, stamp[i]))
 
-    def complete(i: int) -> None:
-        """Finish ``i``: free resources, trigger gated candidates."""
-        nonlocal unfinished
-        finished[i] = now
-        unfinished -= 1
-        active.discard(i)
-        if has_slot[i]:
-            si = slot_of[i]
-            slots_free[si] += 1
-            has_slot[i] = False
-            freed.add(si)
-        if is_comp[i]:
-            rate[i] = 0.0
-        else:
-            pos = net_pos[i]
-            K = comp_of[pos]
-            comp_runnable[K].discard(pos)
-            if simple[i]:
-                comp_simple_active[K].discard(i)
-            if rate[i]:
-                rate[i] = 0.0
-                dirty_net(pos)
-        candidates.update(succ[i])
-        for s in gate_dec[i]:
-            n_gate[s] -= 1
-        for c in stream_out[i]:
-            if started[c] is not None and finished[c] is None:
-                nc = recompute_cap(c)
-                if nc != cap[c]:
-                    cap[c] = nc
-                    touched.add(c)
-        if coflows:
-            ci = coflow_of[i]
-            if ci >= 0:
-                cof_left[ci] -= 1
-                if cof_left[ci] == 0:
-                    for t in comp.cof_dec[ci]:
-                        n_gate[t] -= 1
-                    for m in coflows[ci]:
-                        candidates.update(succ[m])
-            for ci2 in comp.coflow_fed_by[i]:
-                candidates.update(coflows[ci2])
+        def flush_events() -> None:
+            """Move deferred entries into the heap: one heapify for a
+            mega-batch (same entry set, so the event calendar is
+            unchanged — only the arbitrary pop order of equal-time
+            entries may differ, which batch collection absorbs),
+            individual pushes otherwise."""
+            if len(pending) > 1024 and len(pending) * 2 > len(heap):
+                heap.extend(pending)
+                heapq.heapify(heap)
+            else:
+                for e in pending:
+                    heappush(heap, e)
+            pending.clear()
 
-    def complete_bulk(ids: list[int]) -> None:
-        """complete() over a large batch: per-task effects are identical
-        (each is independent of the others' — see complete()), but the
-        set-membership bookkeeping is batched through C-level updates."""
-        nonlocal unfinished
-        unfinished -= len(ids)
-        active.difference_update(ids)
-        succs: list = []
-        for i in ids:
+        gate_dec = comp.gate_dec
+
+        def schedule_comp(K: int) -> None:
+            """(Re)compute a component's next *completion* among its
+            simple flows: one heap entry per component instead of one
+            per flow.  Each candidate time is the exact float
+            schedule_event would compute (``now + (size-work)/rate``),
+            and min over them is the earliest per-flow entry — so the
+            event calendar is unchanged; only the stale-entry volume
+            shrinks from O(flows) to O(1) per reallocation."""
+            st = comp_stamp[K] + 1
+            comp_stamp[K] = st
+            best = inf
+            for i in comp_simple_active[K]:
+                r = rate[i]
+                if speed_on:
+                    r = r * speed[i]
+                if r > EPS:
+                    d = (size[i] - work[i]) / r
+                    if d < best:
+                        best = d
+            if best < inf:
+                _defer((float(now + best), 2, K, st))
+
+        def complete(i: int) -> None:
+            """Finish ``i``: free resources, trigger gated candidates."""
+            nonlocal unfinished
             finished[i] = now
+            unfinished -= 1
+            active.discard(i)
             if has_slot[i]:
                 si = slot_of[i]
                 slots_free[si] += 1
@@ -964,8 +1030,7 @@ def array_run(sim, horizon: float = 1e15):
                 if rate[i]:
                     rate[i] = 0.0
                     dirty_net(pos)
-            if succ[i]:
-                succs.append(succ[i])
+            candidates.update(succ[i])
             for s in gate_dec[i]:
                 n_gate[s] -= 1
             for c in stream_out[i]:
@@ -985,370 +1050,302 @@ def array_run(sim, horizon: float = 1e15):
                             candidates.update(succ[m])
                 for ci2 in comp.coflow_fed_by[i]:
                     candidates.update(coflows[ci2])
-        candidates.update(chain.from_iterable(succs))
 
-    def on_start(i: int) -> None:
-        """Initialize ``i``'s streaming caps/counters at start."""
-        c = size[i]
-        if stream_in[i]:
-            c = recompute_cap(i)
-            cap[i] = c
-        if stream_out[i]:
-            d_units[i] = 0
-            for c2 in stream_out[i]:
-                candidates.add(c2)   # first-unit gate may already pass
-        is_starved = c <= work[i] + EPS
-        starved[i] = is_starved
-        if is_comp[i]:
-            rate[i] = 0.0 if is_starved else 1.0
-        else:
-            pos = net_pos[i]
-            starved_net[pos] = is_starved
-            K = comp_of[pos]
-            comp_runnable[K].add(pos)
-            dirty_net(pos)
-            if simple[i]:
-                # coalesced: activation and the completion event ride on
-                # the component refill this dirty_net just forced
-                comp_simple_active[K].add(i)
-                return
-        # only a pipelined-input cap can move between now and the
-        # starvation pass — capless tasks can't flip
-        (touched if stream_in[i] else touched_sched).add(i)
+        def complete_bulk(ids: list[int]) -> None:
+            """complete() over a large batch: per-task effects are
+            identical (each is independent of the others' — see
+            complete()), but the set-membership bookkeeping is batched
+            through C-level updates."""
+            nonlocal unfinished
+            unfinished -= len(ids)
+            active.difference_update(ids)
+            succs: list = []
+            for i in ids:
+                finished[i] = now
+                if has_slot[i]:
+                    si = slot_of[i]
+                    slots_free[si] += 1
+                    has_slot[i] = False
+                    freed.add(si)
+                if is_comp[i]:
+                    rate[i] = 0.0
+                else:
+                    pos = net_pos[i]
+                    K = comp_of[pos]
+                    comp_runnable[K].discard(pos)
+                    if simple[i]:
+                        comp_simple_active[K].discard(i)
+                    if rate[i]:
+                        rate[i] = 0.0
+                        dirty_net(pos)
+                if succ[i]:
+                    succs.append(succ[i])
+                for s in gate_dec[i]:
+                    n_gate[s] -= 1
+                for c in stream_out[i]:
+                    if started[c] is not None and finished[c] is None:
+                        nc = recompute_cap(c)
+                        if nc != cap[c]:
+                            cap[c] = nc
+                            touched.add(c)
+                if coflows:
+                    ci = coflow_of[i]
+                    if ci >= 0:
+                        cof_left[ci] -= 1
+                        if cof_left[ci] == 0:
+                            for t in comp.cof_dec[ci]:
+                                n_gate[t] -= 1
+                            for m in coflows[ci]:
+                                candidates.update(succ[m])
+                    for ci2 in comp.coflow_fed_by[i]:
+                        candidates.update(coflows[ci2])
+            candidates.update(chain.from_iterable(succs))
 
-    def process_starts() -> None:
-        """Start every candidate whose gates and slots allow it."""
-        while True:
-            # gate counters inlined; stream-fraction gates (rare) go
-            # through start_gate_ok
-            startable = [i for i in candidates
-                         if started[i] is None
-                         and rel[i] <= now + EPS
-                         and not n_gate[i]
-                         and (not gate_stream[i] or start_gate_ok(i))]
-            candidates.clear()
-            if not startable:
-                return
-            zero_done = False
-            if not any(map(is_comp.__getitem__, startable)):
-                # flow-only pass: no slot contention, so dispatch order
-                # is immaterial (all effects are commutative set/flag
-                # updates) — skip the sort, inline the common case and
-                # batch the set bookkeeping
-                for i in startable:
-                    started[i] = now
-                    if stream_in[i] or stream_out[i] or size[i] <= EPS:
+        def on_start(i: int) -> None:
+            """Initialize ``i``'s streaming caps/counters at start."""
+            c = size[i]
+            if stream_in[i]:
+                c = recompute_cap(i)
+                cap[i] = c
+            if stream_out[i]:
+                d_units[i] = 0
+                for c2 in stream_out[i]:
+                    candidates.add(c2)  # first-unit gate may already pass
+            is_starved = c <= work[i] + EPS
+            starved[i] = is_starved
+            if is_comp[i]:
+                rate[i] = 0.0 if is_starved else 1.0
+            else:
+                pos = net_pos[i]
+                starved_net[pos] = is_starved
+                K = comp_of[pos]
+                comp_runnable[K].add(pos)
+                dirty_net(pos)
+                if simple[i]:
+                    # coalesced: activation and the completion event
+                    # ride on the component refill this dirty_net just
+                    # forced
+                    comp_simple_active[K].add(i)
+                    return
+            # only a pipelined-input cap can move between now and the
+            # starvation pass — capless tasks can't flip
+            (touched if stream_in[i] else touched_sched).add(i)
+
+        def process_starts() -> None:
+            """Start every candidate whose gates and slots allow it."""
+            while True:
+                # gate counters inlined; stream-fraction gates (rare) go
+                # through start_gate_ok
+                startable = [i for i in candidates
+                             if started[i] is None
+                             and rel[i] <= now + EPS
+                             and not n_gate[i]
+                             and (not gate_stream[i] or start_gate_ok(i))]
+                candidates.clear()
+                if not startable:
+                    return
+                zero_done = False
+                if not any(map(is_comp.__getitem__, startable)):
+                    # flow-only pass: no slot contention, so dispatch
+                    # order is immaterial (all effects are commutative
+                    # set/flag updates) — skip the sort, inline the
+                    # common case and batch the set bookkeeping
+                    for i in startable:
+                        started[i] = now
+                        if stream_in[i] or stream_out[i] \
+                                or size[i] <= EPS:
+                            on_start(i)
+                            if size[i] <= EPS:
+                                complete(i)
+                                zero_done = True
+                            continue
+                        pos = net_pos[i]
+                        starved[i] = False
+                        starved_net[pos] = False
+                        K = comp_of[pos]
+                        comp_runnable[K].add(pos)
+                        dirty_net(pos)
+                        if simple[i]:
+                            comp_simple_active[K].add(i)
+                        else:
+                            touched_sched.add(i)
+                else:
+                    for i in sorted(startable,
+                                    key=dispatch_rank.__getitem__):
+                        if is_comp[i]:
+                            si = slot_of[i]
+                            if slots_free[si] >= 1:
+                                slots_free[si] -= 1
+                                has_slot[i] = True
+                                started[i] = now
+                                w = waiting_slot.get(si)
+                                if w is not None:
+                                    w.discard(i)
+                            else:
+                                waiting_slot.setdefault(si, set()).add(i)
+                                continue
+                        else:
+                            started[i] = now
                         on_start(i)
                         if size[i] <= EPS:
                             complete(i)
                             zero_done = True
-                        continue
-                    pos = net_pos[i]
-                    starved[i] = False
-                    starved_net[pos] = False
-                    K = comp_of[pos]
-                    comp_runnable[K].add(pos)
-                    dirty_net(pos)
-                    if simple[i]:
-                        comp_simple_active[K].add(i)
-                    else:
-                        touched_sched.add(i)
-            else:
-                for i in sorted(startable, key=dispatch_rank.__getitem__):
-                    if is_comp[i]:
-                        si = slot_of[i]
-                        if slots_free[si] >= 1:
-                            slots_free[si] -= 1
-                            has_slot[i] = True
-                            started[i] = now
-                            w = waiting_slot.get(si)
-                            if w is not None:
-                                w.discard(i)
-                        else:
-                            waiting_slot.setdefault(si, set()).add(i)
-                            continue
-                    else:
-                        started[i] = now
-                    on_start(i)
-                    if size[i] <= EPS:
-                        complete(i)
-                        zero_done = True
-            for si in freed:
-                candidates.update(waiting_slot.get(si, ()))
-            freed.clear()
-            if not zero_done and not candidates:
-                return
+                for si in freed:
+                    candidates.update(waiting_slot.get(si, ()))
+                freed.clear()
+                if not zero_done and not candidates:
+                    return
 
-    def group_weights(fids):
-        """MADD weights (∝ remaining work) for a coflow-bearing group."""
-        out = []
-        for fid in fids:
-            ci = coflow_of[fid]
-            if ci < 0:
-                out.append(1.0)
-                continue
-            rem = {m: size[m] - work[m] for m in coflows[ci]
-                   if finished[m] is None}
-            mx = max(rem.values(), default=1.0)
-            out.append(max(rem.get(fid, 0.0) / mx, 1e-6)
-                       if mx > 0 else 1.0)
-        return out
-
-    any_coflow = bool(coflows)
-
-    def allocate() -> list:
-        """Waterfill every *dirty component*, classes from that
-        component's lowest dirty one up (replaying the logged freeze
-        sequences of its unchanged classes below), exactly as the
-        calendar core's global allocate() — components share no links,
-        so an untouched component's rates (and the residual its links
-        hold) are provably the ones a full refill would recompute, and
-        it is skipped entirely.  Groups of ≥48 flows over ≥48 links use
-        the vectorized fill; smaller groups stay on the scalar port,
-        whose constant factors beat NumPy-call overhead at that size."""
-        changed: list = []
-        for K in sorted(comp_dirty):
-            positions = [p for p in sorted(comp_runnable[K])
-                         if not starved_net[p]]
-            old_log = comp_log[K]
-            if not positions:
-                comp_log[K] = None
-                continue
-            seen: set[int] = set()
-            link_order: list[int] = []
-            for p in positions:
-                for l in flow_links[p]:
-                    if l not in seen:
-                        seen.add(l)
-                        link_order.append(l)
-            for l in link_order:     # reset only this component's links
-                residual[l] = link_bw[l]
-            lo_arr = None
-            if policy == "fair":
-                classes: list = [None]
-                lowest = None
-            else:
-                classes = sorted({cls_net[p] for p in positions})
-                lowest = comp_dirty[K]
-            new_log: dict = {}
-            for cls in classes:
-                if lowest is None or cls >= lowest \
-                        or old_log is None or cls not in old_log:
-                    # the freeze log is only ever replayed under the
-                    # priority policy (fair always refills) — skip
-                    # building it when it can never be read
-                    seq = None if policy == "fair" else []
-                    gpos = positions if cls is None else \
-                        [p for p in positions if cls_net[p] == cls]
-                    big = use_np and len(gpos) >= 48 \
-                        and len(link_order) >= 48
-                    full = big and len(gpos) == comp.n_net
-                    if full:
-                        sg_pos_a = comp.full_sg_pos
-                        sg_ids = comp.full_sorted_ids
-                    elif big:
-                        ga = np.array(gpos, dtype=np.int64)
-                        o = np.argsort(
-                            comp.name_rank_a[comp.net_ids_a[ga]],
-                            kind="stable")
-                        sg_pos_a = ga[o]
-                        sg_ids = comp.net_ids_a[sg_pos_a].tolist()
-                    else:
-                        sg_pos = sorted(
-                            gpos,
-                            key=lambda p: comp.name_rank[net_ids[p]])
-                        sg_ids = [net_ids[p] for p in sg_pos]
-                    gids = [net_ids[p] for p in gpos]
-                    old = [rate[f] for f in gids]
-                    weights = None
-                    if any_coflow \
-                            and any(coflow_of[f] >= 0 for f in sg_ids):
-                        weights = group_weights(sg_ids)
-                    if big:
-                        if lo_arr is None:
-                            lo_arr = np.array(link_order, dtype=np.int64)
-                        _wf_core_np(sg_ids, comp.fl_ptr, comp.fl_flat,
-                                    sg_pos_a, lo_arr, residual, rate,
-                                    None if weights is None
-                                    else np.array(weights), seq,
-                                    prep=((comp.full_row_links,
-                                           comp.full_by_link,
-                                           comp.full_counts)
-                                          if full and weights is None
-                                          else None))
-                    else:
-                        _wf_core_py(sg_ids, flow_links, sg_pos,
-                                    link_order, residual, rate, weights,
-                                    seq)
-                    changed.extend(f for f, o in zip(gids, old)
-                                   if rate[f] != o)
-                    new_log[cls] = seq
-                else:
-                    # unchanged class: replay the logged freeze sequence
-                    for fid, alloc in old_log[cls]:
-                        rate[fid] = alloc
-                        for l in flow_links[net_pos[fid]]:
-                            v = residual[l] - alloc
-                            residual[l] = v if v > 0.0 else 0.0
-                    new_log[cls] = old_log[cls]
-            comp_log[K] = new_log
-        comp_resched.update(comp_dirty)
-        comp_dirty.clear()
-        return changed
-
-    def apply_changed(changed) -> None:
-        """Route freshly waterfilled rates to their event mechanism:
-        coalesced (simple) flows only need their ``active`` membership
-        maintained — their component's next-completion entry is being
-        recomputed by schedule_comp — while everything else re-derives
-        its per-task event."""
-        for i in changed:
-            if simple[i]:
-                if rate[i] > EPS:
-                    active.add(i)
-                else:
-                    active.discard(i)
-            else:
-                touched_sched.add(i)
-
-    # -- initialisation ------------------------------------------------
-    for nm, v in sim.releases.items():
-        if v > EPS:
-            heappush(heap, (float(v), 0, comp.idx[nm], 0))
-    candidates.update(comp.roots)
-    process_starts()
-    if comp_dirty:
-        apply_changed(allocate())
-    for i in touched:
-        schedule_event(i)
-    for i in touched_sched:
-        if i not in touched:
-            schedule_event(i)
-    for K in comp_resched:
-        schedule_comp(K)
-    comp_resched.clear()
-    flush_events()
-    touched.clear()
-    touched_sched.clear()
-
-    # -- main loop -----------------------------------------------------
-    guard = 0
-    max_iters = 10000 * (n + 1) + comp.nu_sum
-    while unfinished:
-        guard += 1
-        if guard > max_iters:
-            raise RuntimeError("simulator did not converge (livelock?)")
-
-        t_next = None
-        while heap:
-            tm, kind, i, stp = heap[0]
-            if kind == 1 and (stamp[i] != stp or finished[i] is not None):
-                heappop(heap)
-                continue
-            if kind == 0 and started[i] is not None:
-                heappop(heap)
-                continue
-            if kind == 2 and comp_stamp[i] != stp:
-                heappop(heap)
-                continue
-            t_next = tm
-            break
-        if t_next is None:
-            pend = [names[i] for i in range(n) if finished[i] is None]
-            raise RuntimeError(f"deadlock at t={now:.6g}: {pend}")
-        if t_next > horizon:
-            t_next = horizon
-        dt = t_next - now
-        if dt > 0.0:
-            for i in active:
-                w = work[i] + rate[i] * dt
-                sz = size[i]
-                work[i] = sz if w > sz else w
-        now = t_next
-
-        batch: list[int] = []
-        while heap and heap[0][0] <= t_next:
-            tm, kind, i, stp = heappop(heap)
-            if kind == 1 and stamp[i] == stp and finished[i] is None:
-                batch.append(i)
-            elif kind == 0 and started[i] is None:
-                candidates.add(i)
-            elif kind == 2 and comp_stamp[i] == stp:
-                # a component's next-completion fired; re-derive it even
-                # if no completion/reallocation follows (FP shortfall)
-                comp_resched.add(i)
-
-        # completions (a task reaching its cap/size keeps rate > 0 until
-        # this very event — scan the active set)
-        finished_now = [i for i in active if work[i] >= size[i] - EPS]
-        if len(finished_now) >= 128:
-            complete_bulk(finished_now)
-        else:
-            for i in finished_now:
-                complete(i)
-
-        # unit-boundary crossings feed streaming consumers
-        if comp.has_streaming:
-            for i in batch:
-                if not stream_out[i] or finished[i] is not None:
+        def group_weights(fids):
+            """MADD weights (∝ remaining work) for a coflow group."""
+            out = []
+            for fid in fids:
+                ci = coflow_of[fid]
+                if ci < 0:
+                    out.append(1.0)
                     continue
-                du = math.floor(work[i] / unit[i] + EPS)
-                if du != d_units[i]:
-                    d_units[i] = du
-                    for c in stream_out[i]:
-                        if started[c] is None:
-                            candidates.add(c)
-                        elif finished[c] is None:
-                            nc = recompute_cap(c)
-                            if nc != cap[c]:
-                                cap[c] = nc
-                                touched.add(c)
+                rem = {m: size[m] - work[m] for m in coflows[ci]
+                       if finished[m] is None}
+                mx = max(rem.values(), default=1.0)
+                out.append(max(rem.get(fid, 0.0) / mx, 1e-6)
+                           if mx > 0 else 1.0)
+            return out
 
-        for si in freed:
-            candidates.update(waiting_slot.get(si, ()))
-        freed.clear()
-        if candidates:
-            process_starts()
+        any_coflow = bool(coflows)
 
-        # starvation flips (cap moved, or work caught up with cap)
-        for i in touched.union(x for x in batch
-                               if finished[x] is None):
-            if started[i] is None or finished[i] is not None:
-                continue
-            is_starved = cap[i] <= work[i] + EPS
-            if is_starved != starved[i]:
-                starved[i] = is_starved
-                if is_comp[i]:
-                    rate[i] = 0.0 if is_starved else 1.0
+        def allocate() -> list:
+            """Waterfill every *dirty component*, classes from that
+            component's lowest dirty one up (replaying the logged freeze
+            sequences of its unchanged classes below), exactly as the
+            calendar core's global allocate() — components share no
+            links, so an untouched component's rates (and the residual
+            its links hold) are provably the ones a full refill would
+            recompute, and it is skipped entirely.  Groups of ≥48 flows
+            over ≥48 links use the vectorized fill; smaller groups stay
+            on the scalar port, whose constant factors beat NumPy-call
+            overhead at that size."""
+            changed: list = []
+            for K in sorted(comp_dirty):
+                positions = [p for p in sorted(comp_runnable[K])
+                             if not starved_net[p]]
+                old_log = comp_log[K]
+                if not positions:
+                    comp_log[K] = None
+                    continue
+                seen: set[int] = set()
+                link_order: list[int] = []
+                for p in positions:
+                    for l in flow_links[p]:
+                        if l not in seen:
+                            seen.add(l)
+                            link_order.append(l)
+                for l in link_order:  # reset only this comp's links
+                    residual[l] = link_bw[l]
+                lo_arr = None
+                if policy == "fair":
+                    classes: list = [None]
+                    lowest = None
                 else:
-                    pos = net_pos[i]
-                    starved_net[pos] = is_starved
-                    if is_starved:
-                        rate[i] = 0.0
-                    dirty_net(pos)
-            touched.add(i)
+                    classes = sorted({cls_net[p] for p in positions})
+                    lowest = comp_dirty[K]
+                new_log: dict = {}
+                for cls in classes:
+                    if lowest is None or cls >= lowest \
+                            or old_log is None or cls not in old_log:
+                        # the freeze log is only ever replayed under the
+                        # priority policy (fair always refills) — skip
+                        # building it when it can never be read
+                        seq = None if policy == "fair" else []
+                        gpos = positions if cls is None else \
+                            [p for p in positions if cls_net[p] == cls]
+                        big = use_np and len(gpos) >= 48 \
+                            and len(link_order) >= 48
+                        full = big and full_counts is not None \
+                            and len(gpos) == comp.n_net
+                        if full:
+                            sg_pos_a = full_sg_pos
+                            sg_ids = full_sorted_ids
+                        elif big:
+                            ga = np.array(gpos, dtype=np.int64)
+                            o = np.argsort(
+                                comp.name_rank_a[comp.net_ids_a[ga]],
+                                kind="stable")
+                            sg_pos_a = ga[o]
+                            sg_ids = comp.net_ids_a[sg_pos_a].tolist()
+                        else:
+                            sg_pos = sorted(
+                                gpos,
+                                key=lambda p: comp.name_rank[net_ids[p]])
+                            sg_ids = [net_ids[p] for p in sg_pos]
+                        gids = [net_ids[p] for p in gpos]
+                        old = [rate[f] for f in gids]
+                        weights = None
+                        if any_coflow \
+                                and any(coflow_of[f] >= 0
+                                        for f in sg_ids):
+                            weights = group_weights(sg_ids)
+                        if big:
+                            if lo_arr is None:
+                                lo_arr = np.array(link_order,
+                                                  dtype=np.int64)
+                            _wf_core_np(sg_ids, fl_ptr, fl_flat,
+                                        sg_pos_a, lo_arr, residual,
+                                        rate,
+                                        None if weights is None
+                                        else np.array(weights), seq,
+                                        prep=((full_row_links,
+                                               full_by_link,
+                                               full_counts)
+                                              if full
+                                              and weights is None
+                                              else None))
+                        else:
+                            _wf_core_py(sg_ids, flow_links, sg_pos,
+                                        link_order, residual, rate,
+                                        weights, seq)
+                        changed.extend(f for f, o in zip(gids, old)
+                                       if rate[f] != o)
+                        new_log[cls] = seq
+                    else:
+                        # unchanged class: replay the logged freeze seq
+                        for fid, alloc in old_log[cls]:
+                            rate[fid] = alloc
+                            for l in flow_links[net_pos[fid]]:
+                                v = residual[l] - alloc
+                                residual[l] = v if v > 0.0 else 0.0
+                        new_log[cls] = old_log[cls]
+                comp_log[K] = new_log
+            comp_resched.update(comp_dirty)
+            comp_dirty.clear()
+            return changed
 
-        # MADD weights drift with remaining work (coflows collapse the
-        # component split, so this dirties the single component at the
-        # members' lowest class — the global lowest, as before)
-        if coflows:
-            for ci, c in enumerate(coflows):
-                if any(started[m] is not None and finished[m] is None
-                       for m in c):
-                    for m in c:
-                        dirty_net(net_pos[m])
+        def apply_changed(changed) -> None:
+            """Route freshly waterfilled rates to their event mechanism:
+            coalesced (simple) flows only need their ``active``
+            membership maintained — their component's next-completion
+            entry is being recomputed by schedule_comp — while
+            everything else re-derives its per-task event."""
+            for i in changed:
+                if simple[i]:
+                    if rate[i] > EPS:
+                        active.add(i)
+                    else:
+                        active.discard(i)
+                else:
+                    touched_sched.add(i)
 
+        # -- initialisation --------------------------------------------
+        for nm, v in sim.releases.items():
+            if v > EPS:
+                heappush(heap, (float(v), 0, comp.idx[nm], 0))
+        candidates.update(comp.roots)
+        process_starts()
         if comp_dirty:
             apply_changed(allocate())
-
         for i in touched:
             schedule_event(i)
         for i in touched_sched:
             if i not in touched:
-                schedule_event(i)
-        for i in batch:
-            if finished[i] is None and i not in touched \
-                    and i not in touched_sched:
                 schedule_event(i)
         for K in comp_resched:
             schedule_comp(K)
@@ -1357,18 +1354,913 @@ def array_run(sim, horizon: float = 1e15):
         touched.clear()
         touched_sched.clear()
 
-    # started/finished already hold native floats (heap event times)
-    start = dict(zip(names, started))
-    finish = dict(zip(names, finished))
-    makespan = max(finished, default=0.0)
-    if comp.single_job:
-        jobs = {comp.job[0]: makespan} if n else {}
-    else:
-        jobs = {}
-        for i in range(n):
-            j = comp.job[i]
-            f = finished[i]
-            if f > jobs.get(j, -1.0):   # f >= 0, so first visit always sets
-                jobs[j] = f
-    return SimResult(start=start, finish=finish, makespan=makespan,
-                     job_completion=jobs)
+        guard = 0
+        max_iters = 10000 * (n + 1) + comp.nu_sum
+
+        # -- settle: post-mutation fixup at a frozen clock -------------
+        def settle() -> None:
+            """Apply queued mutations' consequences at time ``now``:
+            the completion/start/starvation/reallocation/reschedule
+            passes one event iteration runs, with an empty event batch.
+            Called automatically before the next advance."""
+            nonlocal needs_settle
+            needs_settle = False
+            done_now = [i for i in active if work[i] >= size[i] - EPS]
+            for i in done_now:
+                complete(i)
+            for si in freed:
+                candidates.update(waiting_slot.get(si, ()))
+            freed.clear()
+            if candidates:
+                process_starts()
+            for i in list(touched):
+                if started[i] is None or finished[i] is not None:
+                    continue
+                is_starved = cap[i] <= work[i] + EPS
+                if is_starved != starved[i]:
+                    starved[i] = is_starved
+                    if is_comp[i]:
+                        rate[i] = 0.0 if is_starved else 1.0
+                    else:
+                        pos = net_pos[i]
+                        starved_net[pos] = is_starved
+                        if is_starved:
+                            rate[i] = 0.0
+                        dirty_net(pos)
+            if coflows:
+                for ci, c in enumerate(coflows):
+                    if any(started[m] is not None and finished[m] is None
+                           for m in c):
+                        for m in c:
+                            dirty_net(net_pos[m])
+            if comp_dirty:
+                apply_changed(allocate())
+            for i in touched:
+                schedule_event(i)
+            for i in touched_sched:
+                if i not in touched:
+                    schedule_event(i)
+            for K in comp_resched:
+                schedule_comp(K)
+            comp_resched.clear()
+            flush_events()
+            touched.clear()
+            touched_sched.clear()
+
+        # -- main loop, pausable ---------------------------------------
+        def advance(t_stop: float, allow_stall: bool) -> str:
+            """Process events up to ``t_stop`` (inclusive); returns
+            ``"done"`` (all tasks finished), ``"paused"`` (next event
+            strictly after ``t_stop``) or, with ``allow_stall``,
+            ``"stalled"`` (unfinished tasks but no events — e.g. every
+            runnable task starved by a fault and nobody replanning)."""
+            nonlocal now, guard
+            if needs_settle:
+                settle()
+            while unfinished:
+                t_next = None
+                while heap:
+                    tm, kind, i, stp = heap[0]
+                    if kind == 1 and (stamp[i] != stp
+                                      or finished[i] is not None):
+                        heappop(heap)
+                        continue
+                    if kind == 0 and started[i] is not None:
+                        heappop(heap)
+                        continue
+                    if kind == 2 and comp_stamp[i] != stp:
+                        heappop(heap)
+                        continue
+                    t_next = tm
+                    break
+                if t_next is None:
+                    if allow_stall:
+                        return "stalled"
+                    pend = [names[i] for i in range(n)
+                            if finished[i] is None]
+                    raise RuntimeError(f"deadlock at t={now:.6g}: {pend}")
+                if t_next > t_stop:
+                    return "paused"
+                guard += 1
+                if guard > max_iters:
+                    raise RuntimeError(
+                        "simulator did not converge (livelock?)")
+                if t_next > horizon:
+                    t_next = horizon
+                dt = t_next - now
+                if dt > 0.0:
+                    if speed_on:
+                        for i in active:
+                            w = work[i] + rate[i] * speed[i] * dt
+                            sz = size[i]
+                            work[i] = sz if w > sz else w
+                    else:
+                        for i in active:
+                            w = work[i] + rate[i] * dt
+                            sz = size[i]
+                            work[i] = sz if w > sz else w
+                now = t_next
+
+                batch: list[int] = []
+                while heap and heap[0][0] <= t_next:
+                    tm, kind, i, stp = heappop(heap)
+                    if kind == 1 and stamp[i] == stp \
+                            and finished[i] is None:
+                        batch.append(i)
+                    elif kind == 0 and started[i] is None:
+                        candidates.add(i)
+                    elif kind == 2 and comp_stamp[i] == stp:
+                        # a component's next-completion fired; re-derive
+                        # it even if no completion/reallocation follows
+                        # (FP shortfall)
+                        comp_resched.add(i)
+
+                # completions (a task reaching its cap/size keeps
+                # rate > 0 until this very event — scan the active set)
+                finished_now = [i for i in active
+                                if work[i] >= size[i] - EPS]
+                if len(finished_now) >= 128:
+                    complete_bulk(finished_now)
+                else:
+                    for i in finished_now:
+                        complete(i)
+
+                # unit-boundary crossings feed streaming consumers
+                if comp.has_streaming:
+                    for i in batch:
+                        if not stream_out[i] or finished[i] is not None:
+                            continue
+                        du = math.floor(work[i] / unit[i] + EPS)
+                        if du != d_units[i]:
+                            d_units[i] = du
+                            for c in stream_out[i]:
+                                if started[c] is None:
+                                    candidates.add(c)
+                                elif finished[c] is None:
+                                    nc = recompute_cap(c)
+                                    if nc != cap[c]:
+                                        cap[c] = nc
+                                        touched.add(c)
+
+                for si in freed:
+                    candidates.update(waiting_slot.get(si, ()))
+                freed.clear()
+                if candidates:
+                    process_starts()
+
+                # starvation flips (cap moved, or work caught up)
+                for i in touched.union(x for x in batch
+                                       if finished[x] is None):
+                    if started[i] is None or finished[i] is not None:
+                        continue
+                    is_starved = cap[i] <= work[i] + EPS
+                    if is_starved != starved[i]:
+                        starved[i] = is_starved
+                        if is_comp[i]:
+                            rate[i] = 0.0 if is_starved else 1.0
+                        else:
+                            pos = net_pos[i]
+                            starved_net[pos] = is_starved
+                            if is_starved:
+                                rate[i] = 0.0
+                            dirty_net(pos)
+                    touched.add(i)
+
+                # MADD weights drift with remaining work (coflows
+                # collapse the component split, so this dirties the
+                # single component at the members' lowest class — the
+                # global lowest, as before)
+                if coflows:
+                    for ci, c in enumerate(coflows):
+                        if any(started[m] is not None
+                               and finished[m] is None for m in c):
+                            for m in c:
+                                dirty_net(net_pos[m])
+
+                if comp_dirty:
+                    apply_changed(allocate())
+
+                for i in touched:
+                    schedule_event(i)
+                for i in touched_sched:
+                    if i not in touched:
+                        schedule_event(i)
+                for i in batch:
+                    if finished[i] is None and i not in touched \
+                            and i not in touched_sched:
+                        schedule_event(i)
+                for K in comp_resched:
+                    schedule_comp(K)
+                comp_resched.clear()
+                flush_events()
+                touched.clear()
+                touched_sched.clear()
+            return "done"
+
+        def peek_next():
+            """Earliest valid event time (stale entries are popped);
+            None when the calendar is empty."""
+            while heap:
+                tm, kind, i, stp = heap[0]
+                if kind == 1 and (stamp[i] != stp
+                                  or finished[i] is not None):
+                    heappop(heap)
+                    continue
+                if kind == 0 and started[i] is not None:
+                    heappop(heap)
+                    continue
+                if kind == 2 and comp_stamp[i] != stp:
+                    heappop(heap)
+                    continue
+                return tm
+            return None
+
+        def advance_to(t: float) -> None:
+            """Integrate active work up to ``t`` and move the clock
+            there, without processing any event — ``t`` must lie in the
+            gap before the next event (run_until(t) returned "paused"),
+            so a mutation can land at its exact scheduled time."""
+            nonlocal now
+            if needs_settle:
+                settle()
+            if t <= now:
+                return
+            tn = peek_next()
+            if tn is not None and tn < t:
+                raise ValueError(f"advance_to({t!r}) would skip the "
+                                 f"event at t={tn!r}")
+            dt = t - now
+            for i in active:
+                w = work[i] + rate[i] * speed[i] * dt
+                sz = size[i]
+                work[i] = sz if w > sz else w
+            now = t
+
+        def result():
+            """SimResult for the completed run (raises if unfinished)."""
+            if unfinished:
+                raise RuntimeError(
+                    f"simulation incomplete: {unfinished} unfinished "
+                    f"task(s) at t={now:.6g}")
+            start = dict(zip(names, started))
+            finish = dict(zip(names, finished))
+            makespan = max(finished, default=0.0)
+            if comp.single_job:
+                jobs = {comp.job[0]: makespan} if n else {}
+            else:
+                jobs = {}
+                for i in range(n):
+                    j = comp.job[i]
+                    f = finished[i]
+                    if f > jobs.get(j, -1.0):
+                        jobs[j] = f
+            return SimResult(start=start, finish=finish,
+                             makespan=makespan, job_completion=jobs)
+
+        def progress(at=None):
+            """Per-task completed fraction, projected to time ``at``
+            (default: the paused clock) — read-only, no state change."""
+            t = now if at is None else at
+            ext = t - now
+            out = {}
+            for i in range(n):
+                if finished[i] is not None:
+                    out[names[i]] = 1.0
+                elif started[i] is None:
+                    out[names[i]] = 0.0
+                else:
+                    w = work[i]
+                    if ext > 0.0 and i in active:
+                        w = w + rate[i] * speed[i] * ext
+                    sz = size[i]
+                    out[names[i]] = 1.0 if sz <= 0 \
+                        else (1.0 if w >= sz else w / sz)
+            return out
+
+        # -- fault-model mutators --------------------------------------
+        def kill(i: int) -> None:
+            """Reset an unfinished task to unstarted with zero progress
+            (its slot is freed; its component's bandwidth refills)."""
+            nonlocal needs_settle
+            if finished[i] is not None:
+                raise ValueError(f"{names[i]} already finished "
+                                 f"(use resurrect)")
+            stamp[i] += 1
+            active.discard(i)
+            if has_slot[i]:
+                si = slot_of[i]
+                slots_free[si] += 1
+                has_slot[i] = False
+                freed.add(si)
+            if is_comp[i]:
+                w = waiting_slot.get(slot_of[i])
+                if w is not None:
+                    w.discard(i)
+            else:
+                pos = net_pos[i]
+                K = comp_of[pos]
+                if pos in comp_runnable[K] or rate[i]:
+                    comp_dirty[K] = -inf
+                comp_runnable[K].discard(pos)
+                comp_simple_active[K].discard(i)
+                comp_resched.add(K)
+                starved_net[pos] = False
+            rate[i] = 0.0
+            work[i] = 0.0
+            cap[i] = size[i]
+            d_units[i] = 0
+            starved[i] = False
+            started[i] = None
+            candidates.add(i)
+            touched.discard(i)
+            touched_sched.discard(i)
+            for c in stream_out[i]:
+                if started[c] is not None and finished[c] is None:
+                    nc = recompute_cap(c)
+                    if nc != cap[c]:
+                        cap[c] = nc
+                        touched.add(c)
+            needs_settle = True
+
+        def resurrect(i: int) -> None:
+            """Un-finish a task whose output data was lost: restore its
+            consumers' gate counters and reset it to unstarted.  Started
+            consumers must be killed first (they would be running on
+            data that no longer exists)."""
+            nonlocal unfinished, needs_settle
+            if finished[i] is None:
+                return
+            if coflow_of[i] >= 0 or comp.coflow_fed_by[i]:
+                raise NotImplementedError(
+                    f"cannot resurrect coflow-coupled task {names[i]}")
+            for s in gate_dec[i]:
+                if started[s] is not None and finished[s] is None:
+                    raise RuntimeError(
+                        f"resurrect({names[i]}): consumer {names[s]} "
+                        f"is running on its output — kill it first")
+            finished[i] = None
+            unfinished += 1
+            for s in gate_dec[i]:
+                n_gate[s] += 1
+            stamp[i] += 1
+            started[i] = None
+            work[i] = 0.0
+            rate[i] = 0.0
+            cap[i] = size[i]
+            d_units[i] = 0
+            starved[i] = False
+            if not is_comp[i]:
+                starved_net[net_pos[i]] = False
+            candidates.add(i)
+            touched.discard(i)
+            touched_sched.discard(i)
+            needs_settle = True
+
+        def kill_or_resurrect(i: int) -> None:
+            """Restart ``i`` from zero whatever its current state."""
+            if finished[i] is not None:
+                resurrect(i)
+            else:
+                kill(i)
+
+        def set_speed(i: int, s: float) -> None:
+            """Set task ``i``'s rate multiplier (1.0 = nominal)."""
+            nonlocal speed_on, needs_settle
+            s = float(s)
+            if s < 0.0:
+                raise ValueError("speed must be >= 0")
+            speed[i] = s
+            if s != 1.0:
+                speed_on = True
+            if started[i] is not None and finished[i] is None:
+                if not is_comp[i] and simple[i]:
+                    comp_resched.add(comp_of[net_pos[i]])
+                else:
+                    touched_sched.add(i)
+            needs_settle = True
+
+        def set_link_bw(li: int, bw: float) -> None:
+            """Patch link ``li``'s capacity; dirty touched components."""
+            nonlocal needs_settle
+            link_bw[li] = float(bw)
+            for pos in range(len(flow_links)):
+                if li in flow_links[pos] \
+                        and finished[net_ids[pos]] is None:
+                    comp_dirty[comp_of[pos]] = -inf
+            needs_settle = True
+
+        def link_id(lname: str):
+            """Interned id of a link resource name (None when the link
+            never appears in any compiled flow path)."""
+            return link_name_id.get(lname)
+
+        def move(i: int, host: str, proc) -> None:
+            """Re-place compute ``i`` onto ``host`` (restarting it if it
+            had begun — speculative re-execution)."""
+            nonlocal slot_of, slot_ids_run, needs_settle
+            if not is_comp[i]:
+                raise ValueError(f"{names[i]} is not a compute task")
+            if proc is None:
+                proc = sim.g.tasks[names[i]].proc
+            kill_or_resurrect(i)
+            if slot_of is comp.slot_of:
+                slot_of = list(comp.slot_of)
+            if slot_ids_run is comp.slot_ids:
+                slot_ids_run = dict(comp.slot_ids)
+            key = (host, proc)
+            si = slot_ids_run.get(key)
+            if si is None:
+                si = slot_ids_run[key] = len(slots_free)
+                h = hosts.get(host)
+                slots_free.append(
+                    int(h.procs.get(proc, 0)) if h is not None else 0)
+            slot_of[i] = si
+            cur_host[i] = host
+            needs_settle = True
+
+        def rebuild_csr() -> None:
+            """Refresh the NumPy CSR mirror after a structural patch and
+            drop the (now stale) full-group fill prep."""
+            nonlocal fl_ptr, fl_flat, full_sg_pos, full_sorted_ids, \
+                full_row_links, full_by_link, full_counts
+            full_sg_pos = full_sorted_ids = None
+            full_row_links = full_by_link = full_counts = None
+            if use_np:
+                ptr = [0]
+                flat: list[int] = []
+                for links in flow_links:
+                    flat.extend(links)
+                    ptr.append(len(flat))
+                fl_ptr = np.array(ptr, dtype=np.int64)
+                fl_flat = np.array(flat, dtype=np.int64)
+
+        def repath(i: int, route, reset: bool, src2, dst2) -> None:
+            """Re-path flow ``i`` onto ``route`` (link resource names,
+            endpoint NICs included), merging contention components the
+            new path bridges.  ``reset`` restarts an in-flight transfer
+            from zero; a finished flow is resurrected (re-delivery)."""
+            nonlocal flow_links, comp_of, residual, needs_settle
+            if is_comp[i]:
+                raise ValueError(f"{names[i]} is not a flow")
+            pos = net_pos[i]
+            if finished[i] is not None:
+                resurrect(i)
+            elif reset and started[i] is not None:
+                kill(i)
+            ids = []
+            for lname in route:
+                li = link_name_id.get(lname)
+                if li is None:
+                    li = len(link_bw)
+                    link_name_id[lname] = li
+                    link_names.append(lname)
+                    link_bw.append(float(cluster.bandwidth(lname)))
+                    if use_np:
+                        residual = np.append(residual, 0.0)
+                    else:
+                        residual.append(0.0)
+                ids.append(li)
+            if flow_links is comp.flow_links:
+                flow_links = list(comp.flow_links)
+            if comp_of is comp.comp_of_net:
+                comp_of = list(comp.comp_of_net)
+            old_k = comp_of[pos]
+            flow_links[pos] = tuple(ids)
+            if src2 is not None:
+                cur_src[pos] = src2
+            if dst2 is not None:
+                cur_dst[pos] = dst2
+            # merge every component sharing a link with the new path:
+            # the disjointness invariant (no link in two components)
+            # must hold or the waterfill double-books bandwidth
+            idset = set(ids)
+            ks = {old_k}
+            for p2, links2 in enumerate(flow_links):
+                if p2 != pos and comp_of[p2] not in ks \
+                        and not idset.isdisjoint(links2):
+                    ks.add(comp_of[p2])
+            kt = min(ks)
+            if len(ks) > 1:
+                for p2 in range(len(comp_of)):
+                    if comp_of[p2] in ks:
+                        comp_of[p2] = kt
+                for k2 in ks:
+                    if k2 == kt:
+                        continue
+                    comp_runnable[kt] |= comp_runnable[k2]
+                    comp_runnable[k2] = set()
+                    comp_simple_active[kt] |= comp_simple_active[k2]
+                    comp_simple_active[k2] = set()
+                    comp_log[k2] = None
+                    comp_stamp[k2] += 1
+            else:
+                comp_of[pos] = kt
+            comp_log[kt] = None
+            comp_log[old_k] = None
+            comp_stamp[kt] += 1
+            comp_resched.add(kt)
+            if old_k != kt:
+                comp_stamp[old_k] += 1
+                comp_resched.add(old_k)
+            comp_dirty[kt] = -inf
+            if comp_runnable[old_k]:
+                comp_dirty[old_k] = -inf
+            rebuild_csr()
+            needs_settle = True
+
+        def kill_host(host: str) -> list:
+            """Fail ``host``: zero its slots and NIC links, restart its
+            unfinished tasks, and resurrect the lineage closure —
+            finished tasks whose output data resided there (computes
+            placed on it, flows delivered to it) and is still needed by
+            an unfinished data consumer.  Returns the restarted task
+            names (sorted); the replanner must re-place/re-path them."""
+            nonlocal needs_settle
+            resident: list[int] = []
+            direct: set[int] = set()
+            for i in range(n):
+                if is_comp[i]:
+                    if cur_host[i] == host:
+                        if finished[i] is None:
+                            direct.add(i)
+                        else:
+                            resident.append(i)
+                else:
+                    pos = net_pos[i]
+                    if finished[i] is None:
+                        if cur_src[pos] == host or cur_dst[pos] == host:
+                            direct.add(i)
+                    elif cur_dst[pos] == host:
+                        resident.append(i)
+            # lineage fixpoint: a finished resident task re-runs when a
+            # *data* consumer of its output is (or becomes) unfinished —
+            # for computes that means NETWORK successors (data leaves
+            # via flows; compute→compute edges are control-only), for
+            # delivered flows any successor
+            need = set(direct)
+            changed = True
+            while changed:
+                changed = False
+                for i in resident:
+                    if i in need:
+                        continue
+                    for s in succ[i]:
+                        if is_comp[i] and is_comp[s]:
+                            continue
+                        if finished[s] is None or s in need:
+                            need.add(i)
+                            changed = True
+                            break
+            for i in sorted(need):
+                if finished[i] is None:
+                    kill(i)
+            for i in sorted(need):
+                if finished[i] is not None:
+                    resurrect(i)
+            for (h, _proc), si in slot_ids_run.items():
+                if h == host:
+                    slots_free[si] = 0
+            for lname in (host + ".nic_out", host + ".nic_in"):
+                li = link_name_id.get(lname)
+                if li is not None:
+                    set_link_bw(li, 0.0)
+            needs_settle = True
+            return sorted(names[i] for i in need)
+
+        def set_priorities(prio: dict, new_policy) -> None:
+            """Swap in a replanned priority map (optionally switching
+            policy); rebuilt classes/dispatch ranks, invalidated replay
+            logs, runnable components refill from scratch."""
+            nonlocal policy, cls_net, prio_arr, dispatch_rank, \
+                needs_settle
+            if new_policy is not None:
+                if new_policy not in ("fair", "priority"):
+                    raise ValueError(f"unknown policy {new_policy}")
+                policy = new_policy
+            pget = prio.get
+            if policy == "fair":
+                cls_net = [None] * comp.n_net
+            else:
+                cls_net = [0.0 if comp.stream_fed[i]
+                           else pget(names[i], 0.0)
+                           for i in net_ids]
+            prio_arr = [pget(nm, 0.0) for nm in names]
+            if use_np:
+                o = np.lexsort((comp.name_rank_a, np.array(prio_arr)))
+                dr = np.empty(n, dtype=np.int64)
+                dr[o] = np.arange(n, dtype=np.int64)
+                dispatch_rank = dr.tolist()
+            else:
+                o = sorted(range(n),
+                           key=lambda i: (prio_arr[i],
+                                          comp.name_rank[i]))
+                dispatch_rank = [0] * n
+                for r2, i2 in enumerate(o):
+                    dispatch_rank[i2] = r2
+            for K in range(n_comps):
+                comp_log[K] = None
+                if comp_runnable[K]:
+                    comp_dirty[K] = -inf
+            needs_settle = True
+
+        # -- checkpoint / restore --------------------------------------
+        def snapshot() -> dict:
+            """Copy every piece of mutable run state (compile-owned
+            arrays are immutable and shared by reference).  Taken at a
+            settled boundary; heap tuples and logged freeze sequences
+            are never mutated in place, so shallow copies suffice."""
+            if needs_settle:
+                settle()
+            return {
+                "work": work[:], "rate": rate[:], "cap": cap[:],
+                "speed": speed[:], "speed_on": speed_on,
+                "starved_net": starved_net[:], "started": started[:],
+                "finished": finished[:], "has_slot": has_slot[:],
+                "starved": starved[:], "d_units": d_units[:],
+                "slots_free": slots_free[:], "cof_left": cof_left[:],
+                "n_gate": n_gate[:], "stamp": stamp[:],
+                "active": set(active),
+                "waiting_slot": {k2: set(v)
+                                 for k2, v in waiting_slot.items()},
+                "candidates": set(candidates),
+                "comp_runnable": [set(s) for s in comp_runnable],
+                "comp_simple_active": [set(s)
+                                       for s in comp_simple_active],
+                "comp_log": [None if lg is None else dict(lg)
+                             for lg in comp_log],
+                "comp_stamp": comp_stamp[:],
+                "heap": heap[:], "unfinished": unfinished, "now": now,
+                "guard": guard,
+                "policy": policy, "cls_net": cls_net[:],
+                "prio_arr": prio_arr[:],
+                "dispatch_rank": dispatch_rank[:],
+                "link_bw": link_bw[:],
+                "residual": residual.copy() if use_np else residual[:],
+                "flow_links": flow_links[:], "comp_of": comp_of[:],
+                "slot_of": slot_of[:],
+                "slot_ids": dict(slot_ids_run),
+                "link_names": link_names[:],
+                "link_name_id": dict(link_name_id),
+                "cur_host": cur_host[:], "cur_src": cur_src[:],
+                "cur_dst": cur_dst[:],
+                "csr": (fl_ptr, fl_flat, full_sg_pos, full_sorted_ids,
+                        full_row_links, full_by_link, full_counts),
+            }
+
+        def restore(snap: dict) -> None:
+            """Reset the run state to a snapshot() (which survives and
+            may be restored again)."""
+            nonlocal work, rate, cap, speed, speed_on, starved_net, \
+                started, finished, has_slot, starved, d_units, \
+                slots_free, cof_left, n_gate, stamp, active, \
+                waiting_slot, candidates, comp_runnable, \
+                comp_simple_active, comp_log, comp_stamp, heap, \
+                unfinished, now, guard, policy, cls_net, prio_arr, \
+                dispatch_rank, link_bw, residual, flow_links, \
+                comp_of, slot_of, slot_ids_run, link_names, \
+                link_name_id, cur_host, cur_src, cur_dst, fl_ptr, \
+                fl_flat, full_sg_pos, full_sorted_ids, \
+                full_row_links, full_by_link, full_counts, \
+                needs_settle
+            work = snap["work"][:]
+            rate = snap["rate"][:]
+            cap = snap["cap"][:]
+            speed = snap["speed"][:]
+            speed_on = snap["speed_on"]
+            starved_net = snap["starved_net"][:]
+            started = snap["started"][:]
+            finished = snap["finished"][:]
+            has_slot = snap["has_slot"][:]
+            starved = snap["starved"][:]
+            d_units = snap["d_units"][:]
+            slots_free = snap["slots_free"][:]
+            cof_left = snap["cof_left"][:]
+            n_gate = snap["n_gate"][:]
+            stamp = snap["stamp"][:]
+            active = set(snap["active"])
+            waiting_slot = {k2: set(v)
+                            for k2, v in snap["waiting_slot"].items()}
+            candidates = set(snap["candidates"])
+            comp_runnable = [set(s) for s in snap["comp_runnable"]]
+            comp_simple_active = [set(s)
+                                  for s in snap["comp_simple_active"]]
+            comp_log = [None if lg is None else dict(lg)
+                        for lg in snap["comp_log"]]
+            comp_stamp = snap["comp_stamp"][:]
+            heap = snap["heap"][:]
+            unfinished = snap["unfinished"]
+            now = snap["now"]
+            guard = snap["guard"]
+            policy = snap["policy"]
+            cls_net = snap["cls_net"][:]
+            prio_arr = snap["prio_arr"][:]
+            dispatch_rank = snap["dispatch_rank"][:]
+            link_bw = snap["link_bw"][:]
+            residual = snap["residual"].copy() if use_np \
+                else snap["residual"][:]
+            flow_links = snap["flow_links"][:]
+            comp_of = snap["comp_of"][:]
+            slot_of = snap["slot_of"][:]
+            slot_ids_run = dict(snap["slot_ids"])
+            link_names = snap["link_names"][:]
+            link_name_id = dict(snap["link_name_id"])
+            cur_host = snap["cur_host"][:]
+            cur_src = snap["cur_src"][:]
+            cur_dst = snap["cur_dst"][:]
+            (fl_ptr, fl_flat, full_sg_pos, full_sorted_ids,
+             full_row_links, full_by_link, full_counts) = snap["csr"]
+            comp_dirty.clear()
+            comp_resched.clear()
+            touched.clear()
+            touched_sched.clear()
+            freed.clear()
+            pending.clear()
+            needs_settle = False
+
+        def state_view() -> dict:
+            """Light read-only view of scalar run state plus shared
+            handles on the per-task vectors (do not mutate)."""
+            return {"now": now, "unfinished": unfinished,
+                    "started": started, "finished": finished,
+                    "work": work, "speed": speed}
+
+        def free_slots() -> dict:
+            """Free slot count per (host, proc) pool."""
+            return {key: slots_free[si]
+                    for key, si in slot_ids_run.items()}
+
+        def flow_route(i: int) -> tuple:
+            """Current link-name path of flow ``i``."""
+            return tuple(link_names[l]
+                         for l in flow_links[net_pos[i]])
+
+        def flow_ends(i: int) -> tuple:
+            """Current (src, dst) endpoints of flow ``i``."""
+            pos = net_pos[i]
+            return (cur_src[pos], cur_dst[pos])
+
+        self._sim = sim
+        self._names = names
+        self._idx = comp.idx
+        self._ops = {
+            "advance": advance, "advance_to": advance_to,
+            "settle": settle, "result": result, "progress": progress,
+            "snapshot": snapshot, "restore": restore,
+            "state": state_view, "free_slots": free_slots,
+            "flow_route": flow_route, "flow_ends": flow_ends,
+            "set_speed": set_speed, "set_link_bw": set_link_bw,
+            "link_id": link_id, "link_bw_of": link_bw.__getitem__,
+            "kill": kill_or_resurrect, "kill_host": kill_host,
+            "move": move, "repath": repath,
+            "set_priorities": set_priorities,
+            "cur_host": lambda i: cur_host[i],
+        }
+
+    # -- session control -----------------------------------------------
+    def run_until(self, t_stop: float, *,
+                  allow_stall: bool = False) -> str:
+        """Advance through every event at time <= ``t_stop``.
+
+        Returns ``"done"``, ``"paused"`` (next event is strictly later
+        — the clock rests at the last processed event), or
+        ``"stalled"`` when ``allow_stall`` is set and unfinished tasks
+        remain with an empty event calendar (without ``allow_stall``
+        that raises, as the plain engine's deadlock check does).
+        """
+        return self._ops["advance"](t_stop, allow_stall)
+
+    def run(self):
+        """Run to completion and return the SimResult."""
+        self._ops["advance"](math.inf, False)
+        return self._ops["result"]()
+
+    def advance_to(self, t: float) -> None:
+        """Move the paused clock to ``t`` (before the next event),
+        integrating in-flight work, so a mutation lands exactly there."""
+        self._ops["advance_to"](t)
+
+    def result(self):
+        """SimResult of the finished run (raises while unfinished)."""
+        return self._ops["result"]()
+
+    # -- introspection -------------------------------------------------
+    @property
+    def now(self) -> float:
+        """The paused simulation clock."""
+        return self._ops["state"]()["now"]
+
+    @property
+    def unfinished(self) -> int:
+        """Number of tasks not yet finished."""
+        return self._ops["state"]()["unfinished"]
+
+    def progress(self, at: float | None = None) -> dict:
+        """Completed fraction per task, projected to ``at`` (read-only;
+        defaults to the paused clock)."""
+        return self._ops["progress"](at)
+
+    def started_at(self, name: str):
+        """Observed start time of ``name`` (None if not started)."""
+        return self._ops["state"]()["started"][self._idx[name]]
+
+    def finished_at(self, name: str):
+        """Observed finish time of ``name`` (None if unfinished)."""
+        return self._ops["state"]()["finished"][self._idx[name]]
+
+    def unfinished_tasks(self) -> list:
+        """Names of tasks not yet finished, in id (insertion) order."""
+        fin = self._ops["state"]()["finished"]
+        return [nm for nm, f in zip(self._names, fin) if f is None]
+
+    def task_host(self, name: str):
+        """Current placement of a compute task (tracks move_task)."""
+        return self._ops["cur_host"](self._idx[name])
+
+    def flow_route(self, name: str) -> tuple:
+        """Current link-name path of a flow (tracks repath_flow)."""
+        return self._ops["flow_route"](self._idx[name])
+
+    def flow_ends(self, name: str) -> tuple:
+        """Current (src, dst) of a flow (tracks repath_flow)."""
+        return self._ops["flow_ends"](self._idx[name])
+
+    def free_slots(self) -> dict:
+        """Free slot count per (host, proc) pool, moves included."""
+        return self._ops["free_slots"]()
+
+    def link_capacity(self, name: str) -> float:
+        """Current capacity of link ``name`` (mutations included).
+        A cluster link no compiled flow path traverses reports its
+        static capacity (it was never interned)."""
+        li = self._ops["link_id"](name)
+        if li is None:
+            return self._sim.cluster.bandwidth(name)
+        return self._ops["link_bw_of"](li)
+
+    # -- fault-model mutators ------------------------------------------
+    def set_speed(self, name: str, s: float) -> None:
+        """Set ``name``'s rate multiplier (straggler model; 1.0 resets
+        to nominal).  Effective progress rate is ``rate * speed``."""
+        self._ops["set_speed"](self._idx[name], s)
+
+    def set_link_bw(self, name: str, bw: float) -> None:
+        """Set link ``name``'s capacity (0.0 = failed link).  Degrading
+        a cluster link that no compiled flow path traverses is a no-op
+        (it carries nothing, so it cannot affect the run) — but the
+        name must at least be a real link of the cluster."""
+        li = self._ops["link_id"](name)
+        if li is None:
+            self._sim.cluster.bandwidth(name)   # KeyError on garbage
+            return
+        self._ops["set_link_bw"](li, bw)
+
+    def scale_link(self, name: str, factor: float) -> None:
+        """Multiply link ``name``'s current capacity by ``factor``
+        (no-op on an untraversed link, like :meth:`set_link_bw`)."""
+        li = self._ops["link_id"](name)
+        if li is None:
+            self._sim.cluster.bandwidth(name)
+            return
+        self._ops["set_link_bw"](li, self._ops["link_bw_of"](li) * factor)
+
+    def kill_task(self, name: str) -> None:
+        """Lose ``name``'s progress (and output, if finished): reset to
+        unstarted, restoring consumers' start gates as needed."""
+        self._ops["kill"](self._idx[name])
+
+    def kill_host(self, host: str) -> list:
+        """Fail ``host`` (slots and NICs to zero); returns the names of
+        every task restarted, including the resurrected lineage of data
+        that lived on it.  See the class docstring for the fault model."""
+        return self._ops["kill_host"](host)
+
+    def move_task(self, name: str, host: str,
+                  proc: str | None = None) -> None:
+        """Re-place compute ``name`` onto ``host`` (restarts it if it
+        had begun — speculative re-execution)."""
+        self._ops["move"](self._idx[name], host, proc)
+
+    def repath_flow(self, name: str, route, *, reset: bool = False,
+                    src: str | None = None,
+                    dst: str | None = None) -> None:
+        """Re-path flow ``name`` onto ``route`` (full link-name path,
+        endpoint NICs included).  ``reset`` restarts an in-flight
+        transfer; ``src``/``dst`` record re-pointed endpoints after a
+        consumer/producer move."""
+        self._ops["repath"](self._idx[name], route, reset, src, dst)
+
+    def set_priorities(self, priorities: dict,
+                       policy: str | None = None) -> None:
+        """Swap in a replanned priority map (optionally switching the
+        allocation policy) without recompiling."""
+        self._ops["set_priorities"](dict(priorities), policy)
+
+    # -- checkpoint / restore ------------------------------------------
+    def checkpoint(self) -> dict:
+        """Snapshot the mutable run state (settling queued mutations
+        first); pass to :meth:`restore` to fork arms from one prefix."""
+        return self._ops["snapshot"]()
+
+    def restore(self, snap: dict) -> None:
+        """Reset the session to a :meth:`checkpoint` snapshot."""
+        self._ops["restore"](snap)

@@ -156,6 +156,40 @@ class Cluster:
             return (task.resources(),)
         return self.topology.paths(task.src, task.dst)
 
+    def without_hosts(self, names: set[str]) -> "Cluster":
+        """The surviving cluster after losing ``names`` (the fault-model
+        complement of :meth:`restricted`).  The topology keeps its full
+        link set — a dead host's links simply carry no flows, exactly as
+        the replanner's belief should model a crashed-but-cabled machine."""
+        return Cluster([h for n, h in self.hosts.items() if n not in names],
+                       topology=self.topology)
+
+    def degraded(self, links: Mapping[str, float]) -> "Cluster":
+        """A copy with the given link capacities (absolute values, NICs
+        included) — the replanner's belief of a degraded fabric.  Works
+        with or without a topology: fabric links are resized through it,
+        NIC entries also patch the Host records so big-switch clusters
+        (whose compile reads NIC caps off the hosts) degrade identically."""
+        topo = self.topology
+        if topo is not None:
+            in_topo = {k: v for k, v in links.items() if k in topo.links}
+            if in_topo:
+                topo = topo.resized(links=in_topo)
+            unknown = [k for k in links if k not in self.topology.links]
+        else:
+            unknown = list(links)
+        hosts = []
+        for h in self.hosts.values():
+            ni = links.get(f"{h.name}.nic_in", h.nic_in)
+            no = links.get(f"{h.name}.nic_out", h.nic_out)
+            unknown = [k for k in unknown
+                       if k not in (f"{h.name}.nic_in", f"{h.name}.nic_out")]
+            hosts.append(h if (ni == h.nic_in and no == h.nic_out)
+                         else dataclasses.replace(h, nic_in=ni, nic_out=no))
+        if unknown:
+            raise KeyError(f"unknown links: {sorted(unknown)}")
+        return Cluster(hosts, topology=topo)
+
     def with_topology(self, topology: Optional[Topology]) -> "Cluster":
         """Same hosts, different fabric (used by what-if queries)."""
         return Cluster(list(self.hosts.values()), topology=topology)

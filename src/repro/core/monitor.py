@@ -51,10 +51,18 @@ class Monitor:
         self.obs: dict[str, Observation] = {}
 
     def observe(self, task: str, fraction: float, time: float) -> None:
-        """Record that ``task`` had completed ``fraction`` at ``time``."""
+        """Record that ``task`` had completed ``fraction`` at ``time``.
+
+        ``fraction`` is clamped to [0, 1]: progress probes built on
+        noisy byte/FLOP counters routinely report slightly-negative or
+        >100% fractions at the edges, and a negative fraction would
+        otherwise poison :meth:`projected_finish`'s rate estimate with a
+        negative rate (projecting finish into the past).
+        """
         if task not in self.graph.tasks:
             raise KeyError(task)
-        self.obs[task] = Observation(time=time, fraction=min(1.0, fraction))
+        self.obs[task] = Observation(time=time,
+                                     fraction=min(1.0, max(0.0, fraction)))
 
     # ------------------------------------------------------------------
     def projected_finish(self, task: str) -> Optional[float]:

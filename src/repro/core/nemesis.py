@@ -1,0 +1,639 @@
+"""Nemesis: fault injection + live replanning on the compiled DES.
+
+The paper's case for MXDAG's hybrid abstraction is not only better
+offline schedules but *runtime adaptation*: with compute and network
+tasks in one DAG, a controller that notices a straggler or a failure can
+tell which kind it is (§4.3) and answer recovery what-ifs — move this
+task, re-path that flow — that neither a coflow scheduler nor a
+compute-only DAG scheduler can express.  This module closes that loop
+against a *running* simulation:
+
+- :class:`Fault` / :func:`random_faults` — a seeded fault schedule:
+  host loss, link degradation, task stragglers (rate multipliers).
+- :class:`ReplanController` — the recovery brain.  It feeds observed
+  progress into :class:`~repro.core.monitor.Monitor`, diagnoses what
+  went wrong (host vs network straggler; which fabric link), updates a
+  *belief* cluster (surviving hosts, degraded capacities), re-runs
+  :class:`~repro.core.schedule.MXDAGScheduler` warm on the remaining
+  work, and applies the recovery through the live simulation's
+  mutators (``move_task`` off dead/slow hosts, ``repath_flow`` around
+  degraded links, ``set_priorities`` from the warm replan).
+- :class:`RecoveryTracker` — the referee: per fault, did the system
+  notice (detection), what did it conclude (diagnosis), what did it do
+  (actions), and did the run still finish (recovery).
+- :class:`Nemesis` — the harness driving both: it advances a
+  :class:`~repro.core.arraysim.ResumableSim` between fault times and
+  probe ticks, injects each fault at its exact scheduled time via
+  ``advance_to`` + the fault mutators, and lets the controller react.
+
+Everything is deterministic: the fault schedule is a pure function of
+its seed, probe ticks are a fixed cadence, and the simulation itself is
+the bit-reproducible array engine — so every scenario replays exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from typing import Optional, Sequence
+
+from repro.core.arraysim import ResumableSim
+from repro.core.cluster import Cluster
+from repro.core.fabric import is_nic_link, nic_in, nic_out
+from repro.core.monitor import Monitor
+from repro.core.schedule import MXDAGScheduler, Schedule
+from repro.core.simulator import Simulator
+from repro.core.task import TaskKind
+from repro.core.whatif import follow_moves
+
+FAULT_KINDS = ("host_loss", "link_degrade", "straggler")
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One scheduled fault event.
+
+    ``kind`` is one of :data:`FAULT_KINDS`; ``target`` names the victim
+    (a host, a fabric link, or a compute task); ``factor`` is the rate
+    multiplier for ``link_degrade``/``straggler`` (ignored for host
+    loss — a lost host's slots and NICs go to zero).
+    """
+
+    time: float
+    kind: str
+    target: str
+    factor: float = 1.0
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+
+
+def random_faults(graph, cluster: Cluster, *, horizon: float,
+                  n: int = 2, seed: int = 0,
+                  kinds: Sequence[str] = FAULT_KINDS,
+                  window: tuple[float, float] = (0.15, 0.6),
+                  severity: tuple[float, float] = (0.05, 0.25),
+                  ) -> list[Fault]:
+    """A seeded random fault schedule for a graph/cluster pair.
+
+    Targets are drawn from *sorted* candidate lists through one
+    ``random.Random(seed)`` stream, so the schedule is a pure function
+    of its arguments (satellite of the determinism requirement: every
+    scenario replays bit-exact).  Fault times land in
+    ``[window[0], window[1]] * horizon`` — mid-run, where there is
+    progress to lose; degradation/straggler factors land in
+    ``severity`` (fraction of nominal speed).  Any host may die;
+    whether the scenario is recoverable is exactly what the harness
+    measures.
+    """
+    rng = random.Random(seed)
+    hosts = sorted(cluster.hosts)
+    links = sorted(l for l in
+                   (cluster.topology.links if cluster.topology is not None
+                    else ())
+                   if not is_nic_link(l))
+    computes = sorted(t.name for t in graph
+                      if t.kind is TaskKind.COMPUTE)
+    out: list[Fault] = []
+    for _ in range(n):
+        choices = [k for k in kinds
+                   if (k != "link_degrade" or links)
+                   and (k != "straggler" or computes)
+                   and (k != "host_loss" or hosts)]
+        if not choices:
+            break
+        kind = rng.choice(choices)
+        t = round(rng.uniform(window[0], window[1]) * horizon, 6)
+        f = round(rng.uniform(*severity), 6)
+        if kind == "host_loss":
+            out.append(Fault(t, kind, rng.choice(hosts)))
+        elif kind == "link_degrade":
+            out.append(Fault(t, kind, rng.choice(links), f))
+        else:
+            out.append(Fault(t, kind, rng.choice(computes), f))
+    return sorted(out, key=lambda x: (x.time, x.kind, x.target))
+
+
+@dataclasses.dataclass
+class FaultRecord:
+    """The tracker's verdict on one injected fault."""
+
+    fault: Fault
+    injected_at: float
+    detected: bool = False
+    detected_at: Optional[float] = None
+    diagnosis: str = ""
+    actions: list = dataclasses.field(default_factory=list)
+    recovered: bool = False
+
+
+class RecoveryTracker:
+    """Referee: per injected fault, detection, diagnosis, and recovery."""
+
+    def __init__(self):
+        self.records: list[FaultRecord] = []
+
+    def injected(self, fault: Fault, at: float) -> FaultRecord:
+        """Register an injected fault; returns its (mutable) record."""
+        rec = FaultRecord(fault=fault, injected_at=at)
+        self.records.append(rec)
+        return rec
+
+    def detection_rate(self) -> float:
+        """Fraction of injected faults the controller noticed (1.0 on
+        an empty schedule — nothing to miss)."""
+        if not self.records:
+            return 1.0
+        return sum(r.detected for r in self.records) / len(self.records)
+
+    def recovery_rate(self) -> float:
+        """Fraction of injected faults after which the run finished."""
+        if not self.records:
+            return 1.0
+        return sum(r.recovered for r in self.records) / len(self.records)
+
+    def report(self) -> str:
+        """Markdown recovery table (one row per fault)."""
+        lines = ["| t | fault | target | detected | diagnosis | actions |",
+                 "|---|-------|--------|----------|-----------|---------|"]
+        for r in self.records:
+            det = (f"t={r.detected_at:.3g}" if r.detected else "MISSED")
+            acts = "; ".join(str(a) for a in r.actions) or "—"
+            lines.append(f"| {r.fault.time:.3g} | {r.fault.kind} "
+                         f"| {r.fault.target} | {det} "
+                         f"| {r.diagnosis or '—'} | {acts} |")
+        return "\n".join(lines)
+
+
+class ReplanController:
+    """Live recovery: Monitor-fed detection, belief update, warm replan.
+
+    The controller never reads the fault schedule.  It sees what a real
+    control plane would see: heartbeat loss (host failures are
+    *announced* via :meth:`on_host_loss` — the one fault class detected
+    out-of-band) and per-task progress probes (everything else is
+    *inferred* from the Monitor's straggler analysis in :meth:`check`).
+    Its belief about the cluster — which hosts survive, what each link's
+    usable capacity is — is updated per diagnosis, and every reaction
+    ends with a warm :class:`MXDAGScheduler` pass over the remaining
+    work on the believed cluster, whose priorities are swapped into the
+    running simulation without recompiling.
+    """
+
+    def __init__(self, schedule: Schedule, cluster: Cluster,
+                 rs: ResumableSim, *,
+                 scheduler: Optional[MXDAGScheduler] = None,
+                 threshold: float = 0.2,
+                 expected=None):
+        self.schedule = schedule
+        self.graph = schedule.graph
+        self.cluster = cluster
+        self.rs = rs
+        self.scheduler = scheduler or MXDAGScheduler(try_pipelining=False)
+        if expected is None:
+            expected = schedule.simulate(cluster)
+        self.monitor = Monitor(self.graph, expected, threshold=threshold)
+        self.dead_hosts: set[str] = set()
+        self.degraded: dict[str, float] = {}    # link -> believed capacity
+        self.suspect_hosts: set[str] = set()    # believed slow executors
+        self.actions: list[tuple] = []          # full action log
+
+    # -- belief --------------------------------------------------------
+    def belief_cluster(self) -> Cluster:
+        """The cluster as the controller currently believes it to be."""
+        cl = self.cluster
+        if self.dead_hosts:
+            cl = cl.without_hosts(self.dead_hosts)
+        if self.degraded:
+            cl = cl.degraded(self.degraded)
+        return cl
+
+    def probe(self) -> None:
+        """Feed the live run's progress into the Monitor (one runtime
+        progress report per started task, stamped with the sim clock)."""
+        t = self.rs.now
+        for name, frac in self.rs.progress().items():
+            if self.rs.started_at(name) is not None:
+                self.monitor.observe(name, frac, t)
+
+    # -- recovery actions ----------------------------------------------
+    def _route_for(self, src: str, dst: str) -> tuple[str, ...]:
+        """A believed-good route src→dst: the first ECMP candidate whose
+        fabric links are not believed degraded (falling back to the
+        static pick when every candidate is suspect)."""
+        topo = self.cluster.topology
+        if topo is None:
+            return (nic_out(src), nic_in(dst))
+        cands = topo.paths(src, dst)
+        for p in cands:
+            if not any(l in self.degraded for l in p):
+                return p
+        return topo.path(src, dst)
+
+    def _pick_host(self, proc: str, avoid: set[str]) -> Optional[str]:
+        """A believed-healthy host with a free ``proc`` slot (most free
+        slots first, then name order, skipping ``avoid``)."""
+        free = self.rs.free_slots()
+        best = None
+        for (host, pool), k in sorted(free.items()):
+            if pool != proc or k < 1 or host in avoid \
+                    or host in self.dead_hosts \
+                    or host in self.suspect_hosts:
+                continue
+            if best is None or k > free[(best, proc)]:
+                best = host
+        return best
+
+    def _relocate(self, task: str, host: str, why: str) -> list[tuple]:
+        """Move compute ``task`` to ``host`` in the live run and carry
+        its DAG-derived flows (producer sources / consumer destinations
+        — the same :func:`follow_moves` rule the offline what-if uses)
+        with it, restarting the carried transfers on believed-good
+        routes."""
+        acts: list[tuple] = [("move_task", task, host, why)]
+        self.rs.move_task(task, host)
+        for fname, side in follow_moves(self.graph, task, host).items():
+            src, dst = self.rs.flow_ends(fname)
+            if side == "src":
+                src = host
+            else:
+                dst = host
+            acts.append(("repath_flow", fname, f"{src}->{dst}", why))
+            self.rs.repath_flow(fname, self._route_for(src, dst),
+                                reset=True, src=src, dst=dst)
+        return acts
+
+    def _replan_priorities(self) -> list[tuple]:
+        """Warm MXDAGScheduler pass over the remaining work.
+
+        Builds the remaining graph — unfinished tasks only, at their
+        *remaining* sizes (ground-truth progress from the live run),
+        with current placements/endpoints, keeping only edges between
+        unfinished tasks (a finished predecessor is a satisfied
+        dependency) — schedules it on the believed cluster, and swaps
+        the resulting priorities/policy into the running simulation.
+        """
+        from repro.core.graph import MXDAG
+
+        rs = self.rs
+        prog = rs.progress()
+        g = self.graph
+        rem = MXDAG(f"{g.name}:replan@{rs.now:.6g}")
+        alive = set()
+        for name, t in g.tasks.items():
+            frac = prog[name]
+            if frac >= 1.0:
+                continue
+            alive.add(name)
+            left = max(t.size * (1.0 - frac), 1e-9)
+            unit = t.unit
+            if unit is not None and unit > left:
+                unit = left
+            if t.kind is TaskKind.COMPUTE:
+                rem.add(dataclasses.replace(
+                    t, size=left, unit=unit, host=rs.task_host(name)))
+            else:
+                src, dst = rs.flow_ends(name)
+                rem.add(dataclasses.replace(
+                    t, size=left, unit=unit, src=src, dst=dst))
+        for (s, d), e in g.edges.items():
+            if s in alive and d in alive:
+                rem.add_edge(s, d, pipelined=e.pipelined)
+        if not alive:
+            return []
+        # a task still stranded on a dead host (no relocation target was
+        # found) cannot be scheduled on the believed cluster — the
+        # scenario is unrecoverable and a priority shuffle won't fix it
+        for name in alive:
+            t = rem.tasks[name]
+            ends = ((t.host,) if t.kind is TaskKind.COMPUTE
+                    else (t.src, t.dst))
+            if any(h in self.dead_hosts for h in ends):
+                return []
+        plan = self.scheduler.schedule(rem, self.belief_cluster())
+        self.rs.set_priorities(plan.priorities, plan.policy)
+        return [("set_priorities", len(plan.priorities), plan.policy,
+                 "warm replan")]
+
+    # -- fault handlers ------------------------------------------------
+    def on_host_loss(self, host: str, restarted: Sequence[str]
+                     ) -> list[tuple]:
+        """React to an announced host failure: mark it dead, re-place
+        every restarted compute stranded on it, re-path every restarted
+        flow touching it, and warm-replan priorities on the survivors.
+        ``restarted`` is what the failure actually reset (the live
+        run's lineage closure) — the work list a real controller would
+        get from its task tracker."""
+        self.dead_hosts.add(host)
+        acts: list[tuple] = []
+        for name in restarted:
+            t = self.graph.tasks[name]
+            if t.kind is TaskKind.COMPUTE \
+                    and self.rs.task_host(name) in self.dead_hosts:
+                new = self._pick_host(t.proc, avoid={host})
+                if new is not None:
+                    acts += self._relocate(name, new,
+                                           f"host {host} lost")
+        carried = {a[1] for a in acts if a[0] == "repath_flow"}
+        for name in restarted:
+            if self.graph.tasks[name].kind is TaskKind.COMPUTE \
+                    or name in carried:
+                continue
+            src, dst = self.rs.flow_ends(name)
+            if src in self.dead_hosts or dst in self.dead_hosts:
+                continue        # endpoint compute found no new home
+            acts.append(("repath_flow", name, f"{src}->{dst}",
+                         f"host {host} lost"))
+            self.rs.repath_flow(name, self._route_for(src, dst))
+        acts += self._replan_priorities()
+        self.actions += acts
+        return acts
+
+    def check(self) -> tuple[list[str], list[tuple]]:
+        """One probe-tick reaction: feed the Monitor, diagnose
+        stragglers, and act.  Returns ``(diagnoses, actions)``.
+
+        - A *compute* straggler (slow executor) is speculatively
+          re-executed: moved to a believed-healthy host, its
+          DAG-derived flows carried along (re-fetching inputs).
+        - *Network* stragglers are attributed to the fabric link most
+          shared among their current routes; the belief capacity drops
+          to the observed/expected rate ratio and each affected flow is
+          re-pathed onto an ECMP alternate avoiding the suspect link,
+          keeping transferred progress.
+        """
+        self.probe()
+        diagnoses: list[str] = []
+        acts: list[tuple] = []
+        mon = self.monitor
+        rs = self.rs
+        for s in mon.host_stragglers():
+            host = rs.task_host(s.task)
+            st = rs.started_at(s.task)
+            if host is None or host in self.suspect_hosts \
+                    or st is None or rs.finished_at(s.task) is not None:
+                continue
+            # lateness alone is not a slow executor: a task restarted
+            # after an upstream fault is behind schedule yet progressing
+            # at full rate, and re-executing it would thrash.  Require
+            # the *observed* rate to be well below nominal.
+            t = self.graph.tasks[s.task]
+            elapsed = rs.now - st
+            exp_dur = max(mon.expected.finish[s.task]
+                          - mon.expected.start[s.task], 1e-12)
+            if elapsed <= 1e-12 or (rs.progress()[s.task] * t.size
+                                    / elapsed) > 0.7 * (t.size / exp_dur):
+                continue
+            self.suspect_hosts.add(host)
+            diagnoses.append(f"compute straggler {s.task} on {host}")
+            new = self._pick_host(t.proc, avoid={host})
+            if new is not None:
+                acts += self._relocate(s.task, new,
+                                       f"straggler on {host}")
+        nets = [s for s in mon.network_stragglers()
+                if rs.finished_at(s.task) is None
+                and rs.started_at(s.task) is not None]
+        if nets:
+            counts: dict[str, int] = {}
+            for s in nets:
+                for l in self.rs.flow_route(s.task):
+                    if not is_nic_link(l):
+                        counts[l] = counts.get(l, 0) + 1
+            if counts:
+                link = max(sorted(counts), key=counts.__getitem__)
+                if link not in self.degraded:
+                    est = self._estimate_link_factor(link, nets)
+                    cap = self.cluster.bandwidth(link)
+                    self.degraded[link] = cap * est
+                    diagnoses.append(
+                        f"degraded link {link} (~{est:.0%} of nominal)")
+                    for s in nets:
+                        if link not in self.rs.flow_route(s.task):
+                            continue
+                        src, dst = self.rs.flow_ends(s.task)
+                        route = self._route_for(src, dst)
+                        if link in route:
+                            continue    # no alternate avoids it
+                        acts.append(("repath_flow", s.task,
+                                     f"{src}->{dst}",
+                                     f"avoid {link}"))
+                        self.rs.repath_flow(s.task, route)
+        if acts:
+            acts += self._replan_priorities()
+        self.actions += acts
+        return diagnoses, acts
+
+    def _estimate_link_factor(self, link: str, stragglers) -> float:
+        """Believed remaining capacity fraction of a suspect link: the
+        median observed/expected progress-rate ratio over the straggling
+        flows that traverse it (clamped away from 0 — a belief of zero
+        would make the replanner treat the link as down)."""
+        ratios = []
+        exp = self.monitor.expected
+        for s in stragglers:
+            if link not in self.rs.flow_route(s.task):
+                continue
+            o = self.monitor.obs.get(s.task)
+            st = self.rs.started_at(s.task)
+            if o is None or st is None or o.time <= st:
+                continue
+            exp_rate = 1.0 / max(exp.finish[s.task] - exp.start[s.task],
+                                 1e-12)
+            obs_rate = o.fraction / (o.time - st)
+            ratios.append(obs_rate / max(exp_rate, 1e-12))
+        if not ratios:
+            return 0.5
+        ratios.sort()
+        return min(1.0, max(0.02, ratios[len(ratios) // 2]))
+
+
+@dataclasses.dataclass
+class NemesisReport:
+    """Outcome of one Nemesis run."""
+
+    makespan: float             # inf when the run never finished
+    completed: bool
+    tracker: RecoveryTracker
+    result: object = None       # SimResult when completed
+
+    @property
+    def detection_rate(self) -> float:
+        """Tracker detection rate (see RecoveryTracker)."""
+        return self.tracker.detection_rate()
+
+
+class Nemesis:
+    """The fault-injection harness: drive a live run, hurt it on
+    schedule, and let (or don't let) the controller fight back.
+
+    ``probe_every`` is the controller's progress-report cadence (the
+    detection latency floor for inferred faults).  With
+    ``replan=False`` faults are injected but nothing reacts — the
+    no-replan arm of the recovery benchmark; an unrecoverable fault
+    then stalls the run and the report's makespan is ``inf``.
+
+    Straggler semantics: a task's speed multiplier models its current
+    *executor*.  When the controller speculatively moves a slowed
+    compute task to another host, the harness restores its speed to
+    nominal — the new executor is a different machine.
+    """
+
+    def __init__(self, schedule: Schedule, cluster: Cluster, *,
+                 faults: Sequence[Fault],
+                 replan: bool = True,
+                 probe_every: float = 0.5,
+                 scheduler: Optional[MXDAGScheduler] = None,
+                 threshold: float = 0.2,
+                 expected=None):
+        self.schedule = schedule
+        self.cluster = cluster
+        self.faults = sorted(faults, key=lambda f: f.time)
+        self.replan = replan
+        self.probe_every = probe_every
+        self.scheduler = scheduler
+        self.threshold = threshold
+        self.expected = expected
+
+    def _make_rs(self) -> ResumableSim:
+        s = self.schedule
+        sim = Simulator(s.graph, self.cluster, policy=s.policy,
+                        priorities=s.priorities, releases=s.releases,
+                        coflows=s.coflows, routes=s.routes or None)
+        return ResumableSim(sim)
+
+    def run(self, horizon: float = 1e9) -> NemesisReport:
+        """Execute the scenario; returns the :class:`NemesisReport`.
+
+        The loop advances the live simulation to the next fault time or
+        probe tick (whichever is sooner), injects/reacts there, and
+        repeats.  Deterministic by construction: the timeline is the
+        sorted merge of the fault schedule and the fixed probe cadence.
+        """
+        rs = self._make_rs()
+        tracker = RecoveryTracker()
+        ctl = (ReplanController(self.schedule, self.cluster, rs,
+                                scheduler=self.scheduler,
+                                threshold=self.threshold,
+                                expected=self.expected)
+               if self.replan else None)
+        slowed: dict[str, float] = {}
+        faults = list(self.faults)
+        open_recs: list[FaultRecord] = []
+        next_probe = self.probe_every
+        idle_probes = 0
+        status = "paused"
+        while True:
+            t_fault = faults[0].time if faults else math.inf
+            t = min(t_fault, next_probe if ctl is not None else math.inf)
+            if t > horizon:
+                status = rs.run_until(horizon, allow_stall=True)
+                break
+            status = rs.run_until(t, allow_stall=True)
+            if status == "done":
+                break
+            if status == "stalled" and not faults:
+                # nothing left to inject and nothing can move: without a
+                # controller this is the no-replan arm's dead end; with
+                # one, give it a final look before giving up
+                if ctl is None:
+                    break
+                _, acts = ctl.check()
+                self._executor_moves(rs, acts, slowed)
+                if not acts:
+                    break
+                continue
+            if status != "stalled":
+                rs.advance_to(t)
+            acted = False
+            while faults and faults[0].time <= t:
+                f = faults.pop(0)
+                rec = tracker.injected(f, rs.now)
+                self._inject(rs, f, rec, ctl, slowed)
+                if not (rec.detected or ctl is None):
+                    open_recs.append(rec)
+                acted = True
+            if ctl is not None and t >= next_probe - 1e-12:
+                while next_probe <= t + 1e-12:
+                    next_probe += self.probe_every
+                diagnoses, acts = ctl.check()
+                self._executor_moves(rs, acts, slowed)
+                if diagnoses or acts:
+                    idle_probes = 0
+                    for rec in open_recs:
+                        if not rec.detected and self._matches(
+                                rec.fault, diagnoses, ctl):
+                            rec.detected = True
+                            rec.detected_at = rs.now
+                            rec.diagnosis = "; ".join(diagnoses)
+                            rec.actions += acts
+                    open_recs = [r for r in open_recs if not r.detected]
+                else:
+                    idle_probes += 1
+                acted = acted or bool(acts)
+            if status == "stalled" and not acted:
+                break
+            if ctl is not None and idle_probes > 1000:
+                break       # controller idle for 1000 probes: give up
+        completed = status == "done" or rs.unfinished == 0
+        if not completed and rs.unfinished:
+            # drain whatever can still run (e.g. faults exhausted, no
+            # controller, nothing stalled) up to the horizon
+            status = rs.run_until(horizon, allow_stall=True)
+            completed = status == "done"
+        result = rs.result() if completed else None
+        makespan = result.makespan if completed else math.inf
+        for rec in tracker.records:
+            rec.recovered = completed
+        return NemesisReport(makespan=makespan, completed=completed,
+                             tracker=tracker, result=result)
+
+    # ------------------------------------------------------------------
+    def _inject(self, rs: ResumableSim, f: Fault, rec: FaultRecord,
+                ctl: Optional[ReplanController],
+                slowed: dict[str, float]) -> None:
+        """Apply one fault to the live run (and, for announced faults,
+        notify the controller)."""
+        if f.kind == "host_loss":
+            restarted = rs.kill_host(f.target)
+            if ctl is not None:
+                rec.detected = True     # heartbeat loss is announced
+                rec.detected_at = rs.now
+                rec.diagnosis = f"host {f.target} lost heartbeat"
+                acts = ctl.on_host_loss(f.target, restarted)
+                rec.actions += acts
+                self._executor_moves(rs, acts, slowed)
+        elif f.kind == "link_degrade":
+            rs.scale_link(f.target, f.factor)
+        else:
+            rs.set_speed(f.target, f.factor)
+            slowed[f.target] = f.factor
+
+    @staticmethod
+    def _executor_moves(rs: ResumableSim, acts: Sequence[tuple],
+                        slowed: dict[str, float]) -> None:
+        """The executor-follows-host rule: a slowed (straggling) task
+        the controller just moved runs on a *new* machine — its speed
+        multiplier returns to nominal (speculative re-execution)."""
+        for a in acts:
+            if a and a[0] == "move_task" and a[1] in slowed:
+                rs.set_speed(a[1], 1.0)
+                del slowed[a[1]]
+
+    @staticmethod
+    def _matches(fault: Fault, diagnoses: list[str],
+                 ctl: ReplanController) -> bool:
+        """Does a diagnosis batch explain ``fault``?  Straggler faults
+        match a compute-straggler diagnosis naming the task or its
+        host; link faults match a degraded-link diagnosis naming the
+        link."""
+        if fault.kind == "straggler":
+            host = ctl.rs.task_host(fault.target)
+            return any(d.startswith("compute straggler")
+                       and (fault.target in d
+                            or (host is not None and host in d))
+                       for d in diagnoses)
+        if fault.kind == "link_degrade":
+            return any(d.startswith("degraded link")
+                       and fault.target in d for d in diagnoses)
+        return True

@@ -84,6 +84,15 @@ Engines
   event-calendar core above (pure stdlib; the differential oracle for
   the array engine, and the "before" timing in the scale benchmarks).
 - ``"reference"`` — :meth:`Simulator._reference_run`, the seed loop.
+
+:meth:`Simulator.resumable` opens the array engine as a *session*
+(:class:`~repro.core.arraysim.ResumableSim`): pause between events,
+checkpoint/restore the flat run state, apply fault mutations (host
+loss, link degradation, stragglers, task moves, flow re-paths), and
+resume without recompiling — the substrate of the fault-injection and
+live-replanning layer in :mod:`repro.core.nemesis`.  ``array_run``
+itself is one uninterrupted session, so the fault-capable engine and
+the plain one cannot drift.
 """
 from __future__ import annotations
 
@@ -337,6 +346,19 @@ class Simulator:
             return self._reference_run(horizon)
         from repro.core.arraysim import array_run
         return array_run(self, horizon)
+
+    def resumable(self, horizon: float = 1e15):
+        """A pausable array-engine session over this simulation.
+
+        Returns a :class:`~repro.core.arraysim.ResumableSim`: the same
+        compiled flat-array run as ``engine="array"``, but exposing
+        pause/mutate/resume, checkpoint/restore, and the fault-model
+        mutators (kill_host, scale_link, set_speed, move_task,
+        repath_flow, set_priorities) used by :mod:`repro.core.nemesis`.
+        With no mutations applied it is bit-exact against :meth:`run`.
+        """
+        from repro.core.arraysim import ResumableSim
+        return ResumableSim(self, horizon)
 
     # ------------------------------------------------------------------
     # incremental event-calendar core (see module docstring invariants)

@@ -20,6 +20,34 @@ from repro.core.schedule import MXDAGScheduler
 from repro.core.task import MXTask, TaskKind
 
 
+def follow_moves(g: MXDAG, task: str, host: str) -> dict[str, str]:
+    """Which flow endpoints follow when compute ``task`` moves to ``host``.
+
+    Placement is DAG-derived: a flow the task *produces* moves its source
+    with it, a flow it *consumes* moves its destination — unless the flow
+    is shared with other compute producers/consumers that stay behind, in
+    which case its endpoint stays where their data is.  Returns
+    ``{flow_name: "src" | "dst"}`` for every flow whose named endpoint
+    should become ``host``.  Shared by :meth:`WhatIf.move_task` (offline
+    what-if) and the nemesis replan controller (live recovery), so the
+    two layers cannot disagree about what a move means.
+    """
+    moves: dict[str, str] = {}
+    for s in g.succs(task):
+        ts = g.tasks[s]
+        if ts.kind is TaskKind.NETWORK and all(
+                g.tasks[p].kind is not TaskKind.COMPUTE or p == task
+                for p in g.preds(s)):
+            moves[s] = "src"
+    for p in g.preds(task):
+        tp = g.tasks[p]
+        if tp.kind is TaskKind.NETWORK and all(
+                g.tasks[s].kind is not TaskKind.COMPUTE or s == task
+                for s in g.succs(p)):
+            moves[p] = "dst"
+    return moves
+
+
 @dataclasses.dataclass
 class WhatIfResult:
     """Baseline vs variant makespan of one what-if query."""
@@ -158,18 +186,9 @@ class WhatIf:
                 raise ValueError(f"host {host!r} has no {t.proc!r} pool "
                                  f"for {task}")
         g.replace_task(dataclasses.replace(t, host=host))
-        for s in g.succs(task):
-            ts = g.tasks[s]
-            if ts.kind is TaskKind.NETWORK and all(
-                    g.tasks[p].kind is not TaskKind.COMPUTE or p == task
-                    for p in g.preds(s)):
-                g.replace_task(dataclasses.replace(ts, src=host))
-        for p in g.preds(task):
-            tp = g.tasks[p]
-            if tp.kind is TaskKind.NETWORK and all(
-                    g.tasks[s].kind is not TaskKind.COMPUTE or s == task
-                    for s in g.succs(p)):
-                g.replace_task(dataclasses.replace(tp, dst=host))
+        for fname, side in follow_moves(g, task, host).items():
+            g.replace_task(dataclasses.replace(g.tasks[fname],
+                                               **{side: host}))
         return WhatIfResult(self.baseline(), self._makespan(g))
 
     def reroute_flow(self, flow: str,

@@ -89,6 +89,49 @@ class LoopConfig:
     max_restarts: int = 3
 
 
+def recovery_drill(schedule, cluster, *, faults=None, n_faults: int = 2,
+                   seed: int = 0, probe_every: float = 0.5,
+                   horizon: float = 1e9) -> dict:
+    """Game-day drill for a step schedule: inject faults into a live DES
+    of the step MXDAG and measure recovery with vs without replanning.
+
+    The runtime-side entry point to :mod:`repro.core.nemesis`: given the
+    :class:`~repro.core.schedule.Schedule` of one training step (the
+    same graph a :class:`StepMonitor` attributes stragglers on), it
+    derives a seeded fault schedule (when ``faults`` is not given),
+    runs the no-replan and replan arms, and returns a comparable
+    summary — what an SRE would ask of the runtime before trusting it:
+    *if a host dies mid-step, does the controller notice, and what does
+    the step time become?*
+
+    :returns: dict with ``no_replan``/``replan`` makespans, the fault
+        list, ``detection_rate``, ``recovered``, and the markdown
+        recovery ``report``.
+    """
+    from repro.core.nemesis import Nemesis, random_faults
+
+    expected = schedule.simulate(cluster)
+    if faults is None:
+        faults = random_faults(schedule.graph, cluster,
+                               horizon=expected.makespan,
+                               n=n_faults, seed=seed)
+    arm_no = Nemesis(schedule, cluster, faults=faults, replan=False,
+                     probe_every=probe_every,
+                     expected=expected).run(horizon)
+    arm_yes = Nemesis(schedule, cluster, faults=faults, replan=True,
+                      probe_every=probe_every,
+                      expected=expected).run(horizon)
+    return {
+        "baseline": expected.makespan,
+        "faults": [dataclasses.asdict(f) for f in faults],
+        "no_replan": arm_no.makespan,
+        "replan": arm_yes.makespan,
+        "detection_rate": arm_yes.detection_rate,
+        "recovered": arm_yes.completed,
+        "report": arm_yes.tracker.report(),
+    }
+
+
 def run_training(loop: LoopConfig, *,
                  train_step: Callable,          # (state, batch) -> (state, metrics)
                  init_state: Callable,          # () -> state pytree

@@ -69,6 +69,39 @@ class TestMonitor:
         with pytest.raises(KeyError):
             mon.observe("nope", 0.5, 1.0)
 
+    def test_observe_clamps_fraction_to_unit_interval(self, setup):
+        """Regression: a negative fraction (noisy progress counter)
+        produced a negative rate and a projected finish in the past;
+        fractions now clamp to [0, 1] on observation."""
+        g, expected = setup
+        mon = Monitor(g, expected)
+        mon.observe("b", -0.3, 2.9)
+        assert mon.obs["b"].fraction == 0.0
+        proj = mon.projected_finish("b")
+        assert proj is not None and proj >= 2.9
+        mon.observe("b", 1.7, 2.9)
+        assert mon.obs["b"].fraction == 1.0
+        assert mon.projected_finish("b") == 2.9
+
+    def test_projected_finish_zero_fraction_no_division(self, setup):
+        """fraction == 0 must not divide by zero: the projection shifts
+        the expected duration to start at the observation time."""
+        g, expected = setup
+        mon = Monitor(g, expected)
+        mon.observe("b", 0.0, 5.0)     # b expected 2.0 -> 3.0
+        dur = expected.finish["b"] - expected.start["b"]
+        assert mon.projected_finish("b") == pytest.approx(5.0 + dur)
+        # observation exactly at the expected start: rate denominator
+        # is clamped, not zero-divided
+        mon.observe("b", 0.5, expected.start["b"])
+        assert mon.projected_finish("b") is not None
+
+    def test_clamped_observations_still_flag_stragglers(self, setup):
+        g, expected = setup
+        mon = Monitor(g, expected)
+        mon.observe("b", -1.0, 4.0)    # hopeless (and noisy) progress
+        assert "b" in [s.task for s in mon.stragglers()]
+
 
 class TestWhatIf:
     def test_pipeline_whatif_matches_fig3(self):

@@ -1,0 +1,147 @@
+"""Fault-tolerant training runtime: straggler attribution, failure
+injection, and the nemesis recovery drill glue.
+
+JAX-dependent (the training loop runs real jitted steps), so these run
+in the full CI lane only.
+"""
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import builders  # noqa: E402
+from repro.core.schedule import MXDAGScheduler  # noqa: E402
+from repro.runtime.fault import (  # noqa: E402
+    LoopConfig, SimulatedFailure, StepMonitor, recovery_drill,
+    run_training,
+)
+
+pytestmark = [pytest.mark.jax]
+
+
+def step_graph_and_expected():
+    g = builders.fig1_jobs()
+    sched = MXDAGScheduler().schedule(g)
+    return g, sched.simulate()
+
+
+class TestStepMonitor:
+    def test_first_step_seeds_ewma(self):
+        mon = StepMonitor()
+        assert mon.record(0, 1.0) is None
+        assert mon.ewma == 1.0
+
+    def test_step_time_anomaly_without_graph(self):
+        mon = StepMonitor(threshold=1.5)
+        mon.record(0, 1.0)
+        assert mon.record(1, 1.01) is None
+        rep = mon.record(2, 5.0)
+        assert rep is not None and rep.kind == "step-time"
+        assert rep.detail == ""
+        assert mon.reports == [rep]
+
+    def test_compute_straggler_attribution(self):
+        """A slow step plus task progress showing a lagging *compute*
+        task attributes the anomaly to the host (paper §4.3)."""
+        g, expected = step_graph_and_expected()
+        mon = StepMonitor(step_graph=g, expected=expected)
+        mon.record(0, 3.0)
+        # task b expected 2.0 -> 3.0; at step time 2.9 only 20% done
+        rep = mon.record(1, 9.0, task_progress={"b": 0.2})
+        assert rep is not None
+        assert rep.kind == "compute" and rep.detail == "b"
+
+    def test_network_straggler_attribution(self):
+        g, expected = step_graph_and_expected()
+        mon = StepMonitor(step_graph=g, expected=expected)
+        mon.record(0, 1.9)
+        rep = mon.record(1, 6.0, task_progress={"f1": 0.1})
+        assert rep is not None
+        assert rep.kind == "network" and rep.detail == "f1"
+
+    def test_worst_kind_wins_attribution(self):
+        """With both kinds lagging, the larger lag wins the diagnosis."""
+        g, expected = step_graph_and_expected()
+        mon = StepMonitor(step_graph=g, expected=expected)
+        mon.record(0, 2.9)
+        rep = mon.record(1, 9.0, task_progress={"b": 0.01, "f1": 0.9})
+        assert rep is not None and rep.kind == "compute"
+
+
+class TestFailureInjection:
+    def _loop(self, tmp_path, **kw):
+        return LoopConfig(total_steps=6, ckpt_dir=str(tmp_path / "ckpt"),
+                          ckpt_every=2, **kw)
+
+    @staticmethod
+    def _parts():
+        @jax.jit
+        def train_step(state, batch):
+            new = state + batch
+            return new, {"loss": jnp.sum(batch)}
+
+        return {
+            "train_step": train_step,
+            "init_state": lambda: jnp.zeros((4,)),
+            "batch_at": lambda step: jnp.full((4,), float(step)),
+        }
+
+    def test_fail_at_step_restarts_from_checkpoint(self, tmp_path):
+        steps = []
+        out = run_training(
+            self._loop(tmp_path, fail_at_step=3),
+            on_step=lambda step, metrics: steps.append(step),
+            **self._parts())
+        assert out["completed"] and out["restarts"] == 1
+        assert out["final_step"] == 5
+        # steps 0..2 ran, the crash hit before 3, and the restart
+        # resumed after the latest checkpoint (step 1) — not from zero
+        assert steps[:3] == [0, 1, 2]
+        assert steps[3] == 2  # ckpt at step 1 -> resume at 2
+        # the injection disarms after firing once
+        assert steps.count(3) == 1
+
+    def test_fail_at_step_zero_restarts_from_scratch(self, tmp_path):
+        out = run_training(self._loop(tmp_path, fail_at_step=0),
+                           **self._parts())
+        assert out["completed"] and out["restarts"] == 1
+
+    def test_exhausted_restarts_reraise(self, tmp_path):
+        calls = {"n": 0}
+
+        def bad_batch(step):
+            if step == 3:
+                calls["n"] += 1
+                raise SimulatedFailure("flaky data source")
+            return jnp.full((4,), float(step))
+
+        parts = self._parts()
+        parts["batch_at"] = bad_batch
+        with pytest.raises(SimulatedFailure):
+            run_training(self._loop(tmp_path, max_restarts=2), **parts)
+        assert calls["n"] == 3  # initial try + 2 restarts
+
+
+class TestRecoveryDrill:
+    def test_drill_reports_recovery(self):
+        from repro.core.nemesis import Fault
+
+        g, cl = builders.oversubscribed_fanin(8, oversubscription=8.0)
+        sched = MXDAGScheduler(try_pipelining=False).schedule(g, cl)
+        out = recovery_drill(sched, cl,
+                             faults=[Fault(2.5, "host_loss", "d0")])
+        assert out["no_replan"] == float("inf")
+        assert out["replan"] < float("inf")
+        assert out["detection_rate"] == 1.0
+        assert out["recovered"]
+        assert "host_loss" in out["report"]
+        assert out["faults"][0]["target"] == "d0"
+
+    def test_drill_seeded_schedule_is_deterministic(self):
+        g, cl = builders.oversubscribed_fanin(6, oversubscription=6.0)
+        sched = MXDAGScheduler(try_pipelining=False).schedule(g, cl)
+        a = recovery_drill(sched, cl, n_faults=2, seed=11)
+        b = recovery_drill(sched, cl, n_faults=2, seed=11)
+        assert a["faults"] == b["faults"]
+        assert a["replan"] == b["replan"]
+        assert a["report"] == b["report"]
