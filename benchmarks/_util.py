@@ -2,25 +2,82 @@
 from __future__ import annotations
 
 import gc
+import statistics
 import time
 
 
-def timeit_us(fn, *args, repeat: int = 3) -> float:
+class Timing(float):
+    """A best-of wall time (µs) that also carries the rep spread.
+
+    Behaves exactly like the float it always was — CSV printing, JSON
+    dumping and the baseline diff all see the min — while ``median_us``
+    / ``stdev_us`` / ``reps`` let row builders report the spread in the
+    derived text and the trend report reason about noise.
+    """
+
+    median_us: float
+    stdev_us: float
+    reps: int
+
+    def __new__(cls, samples_us):
+        samples_us = list(samples_us)
+        self = super().__new__(cls, min(samples_us))
+        self.median_us = statistics.median(samples_us)
+        self.stdev_us = (statistics.stdev(samples_us)
+                         if len(samples_us) > 1 else 0.0)
+        self.reps = len(samples_us)
+        return self
+
+    @property
+    def note(self) -> str:
+        """Spread summary for a row's derived text."""
+        return (f"min of {self.reps}; median {self.median_us:.0f}us; "
+                f"stdev {self.stdev_us:.0f}us")
+
+
+def timeit_us(fn, *args, repeat: int = 3) -> Timing:
     """Best-of-``repeat`` wall time of ``fn(*args)`` in microseconds.
 
-    The collector is paused during the timed region: large compiled DAGs
-    hold millions of objects, and a collection landing inside one rep is
-    pure inter-run noise for a best-of measurement.
+    Returns a :class:`Timing` — a float (the min) that also records the
+    median/stdev across reps.  The collector is paused during the timed
+    region: large compiled DAGs hold millions of objects, and a
+    collection landing inside one rep is pure inter-run noise for a
+    best-of measurement.
     """
-    best = float("inf")
+    samples = []
     was_enabled = gc.isenabled()
     gc.disable()
     try:
         for _ in range(repeat):
             t0 = time.perf_counter()
             fn(*args)
-            best = min(best, time.perf_counter() - t0)
+            samples.append((time.perf_counter() - t0) * 1e6)
     finally:
         if was_enabled:
             gc.enable()
-    return best * 1e6
+    return Timing(samples)
+
+
+def timeit_pair_us(fn_a, fn_b, repeat: int = 3) -> tuple[Timing, Timing]:
+    """Interleaved best-of timing of two thunks (A, B, A, B, ...).
+
+    For speedup-claim rows the two arms must see the same machine: a
+    frequency step or noisy neighbour landing entirely inside one arm
+    of a back-to-back measurement fabricates (or hides) a ratio.
+    Interleaving spreads such drift across both.
+    """
+    sa, sb = [], []
+    was_enabled = gc.isenabled()
+    gc.disable()
+    try:
+        for _ in range(repeat):
+            t0 = time.perf_counter()
+            fn_a()
+            sa.append((time.perf_counter() - t0) * 1e6)
+            t0 = time.perf_counter()
+            fn_b()
+            sb.append((time.perf_counter() - t0) * 1e6)
+    finally:
+        if was_enabled:
+            gc.enable()
+    return Timing(sa), Timing(sb)

@@ -33,6 +33,23 @@ compiled analytics vs the dict pipeline) at 2x;
 ``scale.speedup_schedule_layered20k`` stays informational — that
 workload is DES-bound, so its analytic win is real but small.
 
+``scale.speedup_batch_*`` rows (the mega-batch event loop vs the
+per-event oracle loop on the same compiled engine) are floored at 1.5x
+(ddl1024, committed ~2.0x) and 1.2x (layered20k, committed ~1.3-1.4x);
+``scale.speedup_parallel_*`` rows (workers=4 what-if sweeps vs serial)
+are floored at 2x, but only when the bench's ``scale.parallel_cores``
+row shows >=4 usable cores — on smaller runners the fan-out is
+correctness-only and the row is informational.
+
+``--trend REPORT.md --history RUNS.jsonl`` additionally writes a
+rolling-window change-detection report: the current rows are appended
+to the history and each gated row's median over the most recent window
+(default 5 runs) is compared against the median of the window before
+it, flagging drifts beyond 1.25x either way.  Median-vs-median sees
+through single-run noise the static one-number baseline diff cannot;
+the report is informational only — the static gates above stay
+authoritative.
+
 Wall-time speed-ups never fail the gate; refresh the baseline with
 ``--update-baseline`` (regenerates the baseline file in place from the
 bench JSON — for intentional optimisations, or when a new runner
@@ -43,7 +60,9 @@ from __future__ import annotations
 
 import argparse
 import json
+import statistics
 import sys
+import time
 
 
 def load_rows(path: str) -> dict[str, float]:
@@ -53,12 +72,89 @@ def load_rows(path: str) -> dict[str, float]:
 
 
 def gated(name: str) -> bool:
-    # *_seed_us / *_dict_us rows time frozen "before" implementations
-    # (the seed hot paths, the dict analytic passes): informational —
-    # their drift tracks runner speed, not a code regression.
+    # *_seed_us / *_dict_us / *_nobatch_us / *_serial_us rows time
+    # frozen "before" implementations (the seed hot paths, the dict
+    # analytic passes, the per-event oracle loop, the serial sweep):
+    # informational — their drift tracks runner speed, not a code
+    # regression.
     return (name.startswith(("micro.", "scale."))
             and name.endswith("_us")
-            and not name.endswith(("_seed_us", "_dict_us")))
+            and not name.endswith(("_seed_us", "_dict_us",
+                                   "_nobatch_us", "_serial_us")))
+
+
+def update_trend(history_path: str, bench: dict[str, float],
+                 out_path: str, window: int = 5,
+                 flag_ratio: float = 1.25) -> None:
+    """Rolling-window change detection over a run history.
+
+    Appends ``bench`` to the JSONL history (bounded to ``4 * window``
+    entries), then compares each gated row's median over the most
+    recent ``window`` runs against the median of the ``window`` runs
+    before that and writes a markdown report flagging rows whose
+    medians moved by more than ``flag_ratio`` either way.  A median-vs-
+    median diff sees through single-run noise that the static baseline
+    gate (one committed number vs one fresh number) cannot; it is
+    *informational only* — the static gates remain authoritative and
+    this function never affects the exit code.
+    """
+    hist: list[dict] = []
+    try:
+        with open(history_path) as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    hist.append(json.loads(line))
+    except (FileNotFoundError, json.JSONDecodeError):
+        hist = [h for h in hist if isinstance(h, dict)]
+    hist.append({"ts": time.time(), "rows": dict(bench)})
+    hist = hist[-(4 * window):]
+    with open(history_path, "w") as f:
+        for e in hist:
+            f.write(json.dumps(e) + "\n")
+
+    lines = [
+        "# Perf trend report",
+        "",
+        f"Rolling {window}-run median change detection over "
+        f"{len(hist)} recorded run(s).  Informational only — the "
+        f"static baseline gates stay authoritative.",
+        "",
+    ]
+    flagged: list[tuple[str, float, float, float]] = []
+    stable = young = 0
+    for name in sorted(bench):
+        if not (gated(name) or name.startswith("scale.speedup_")):
+            continue
+        series = [e["rows"][name] for e in hist if name in e["rows"]]
+        if len(series) < 2 * window:
+            young += 1
+            continue
+        recent = statistics.median(series[-window:])
+        prior = statistics.median(series[-2 * window:-window])
+        if prior <= 0:
+            continue
+        ratio = recent / prior
+        if ratio > flag_ratio or ratio < 1.0 / flag_ratio:
+            flagged.append((name, prior, recent, ratio))
+        else:
+            stable += 1
+    if flagged:
+        lines += ["| row | prior median | recent median | change |",
+                  "|---|---:|---:|---:|"]
+        for name, prior, recent, ratio in sorted(
+                flagged, key=lambda r: -abs(r[3] - 1.0)):
+            unit = "us" if name.endswith("_us") else "x"
+            lines.append(f"| `{name}` | {prior:.4g}{unit} | "
+                         f"{recent:.4g}{unit} | {ratio:.2f}x |")
+        lines.append("")
+    lines.append(f"{len(flagged)} row(s) drifted beyond "
+                 f"{flag_ratio:g}x, {stable} stable, {young} with "
+                 f"fewer than {2 * window} recorded runs.")
+    with open(out_path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"trend report written to {out_path} "
+          f"({len(flagged)} drifted / {stable} stable / {young} young)")
 
 
 def main(argv=None) -> int:
@@ -76,6 +172,15 @@ def main(argv=None) -> int:
     ap.add_argument("--update-baseline", action="store_true",
                     help="regenerate the baseline file in place from the "
                          "bench JSON instead of gating against it")
+    ap.add_argument("--trend", metavar="REPORT_MD", default=None,
+                    help="write a rolling-window trend report (markdown) "
+                         "comparing recent run medians against the prior "
+                         "window; requires --history")
+    ap.add_argument("--history", metavar="JSONL", default=None,
+                    help="run-history JSONL the trend report rolls over; "
+                         "the current bench rows are appended to it")
+    ap.add_argument("--trend-window", type=int, default=5,
+                    help="runs per rolling median window (default 5)")
     args = ap.parse_args(argv)
 
     if args.update_baseline:
@@ -103,6 +208,14 @@ def main(argv=None) -> int:
     bench = load_rows(args.bench)
     base = load_rows(args.baseline)
 
+    if args.trend:
+        if not args.history:
+            print("--trend requires --history", file=sys.stderr)
+            return 2
+        # before the gate: the report should exist even on a failing run
+        update_trend(args.history, bench, args.trend,
+                     window=args.trend_window)
+
     def speedup_floor(name: str):
         """Gated speedup-claim rows and their floors (None = not a
         gated speedup row)."""
@@ -112,6 +225,22 @@ def main(argv=None) -> int:
             return 3.0
         if name == "scale.speedup_schedule_mr128x128":
             return 2.0
+        # mega-batch event loop vs the per-event oracle loop: committed
+        # numbers are ~2.0x (ddl1024) and ~1.3-1.4x (layered20k); the
+        # floors leave noise headroom while catching the batched loop
+        # losing its edge.
+        if name == "scale.speedup_batch_ddl1024":
+            return 1.5
+        if name == "scale.speedup_batch_layered20k":
+            return 1.2
+        # workers=4 what-if sweep vs serial: only meaningful when the
+        # runner actually has >=4 usable cores (the bench records them
+        # in scale.parallel_cores); on smaller machines the row stays
+        # informational — forked fan-out on 1 core is correctness-only.
+        if name.startswith("scale.speedup_parallel_"):
+            if bench.get("scale.parallel_cores", 1.0) >= 4:
+                return 2.0
+            return None
         return None
 
     failures = []

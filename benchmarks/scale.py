@@ -14,7 +14,14 @@ compiled analytic passes (arrayanalytic.analyze / critical_path /
 argsort-rank priorities) against the dict implementations with a
 bit-exactness ``ref_match``, and ``scale.schedule_*`` rows time the
 end-to-end Principle-1 pipeline on both analytic substrates with a
-Schedule-identity ``ref_match``.  Graphs are built outside the timed
+Schedule-identity ``ref_match``.  ``scale.speedup_batch_*`` rows
+compare the mega-batch event loop against the per-event loop on the
+same compiled engine (interleaved best-of so a frequency step can't
+fabricate the ratio; exact-makespan ``ref_match``), and
+``scale.speedup_parallel_*`` rows time a ``workers=4`` what-if unit
+sweep against the serial loop (bit-identical results;
+``scale.parallel_cores`` records the runner's usable cores, which
+conditions the CI floor).  Graphs are built outside the timed
 region — construction and simulation are separate costs (and were
 separate bottlenecks).
 
@@ -46,12 +53,13 @@ from __future__ import annotations
 import contextlib
 import os
 import sys
+import time
 
 _ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
 sys.path.insert(0, os.path.join(_ROOT, "src"))
 sys.path.insert(0, _ROOT)        # so `python benchmarks/scale.py` works
 
-from benchmarks._util import timeit_us  # noqa: E402
+from benchmarks._util import timeit_pair_us, timeit_us  # noqa: E402
 
 EPS = 1e-9
 
@@ -224,6 +232,79 @@ def bench_rows(seed_rows: bool = True, only: str | None = None):
                                     - sim.calendar_run().makespan) < 1e-9
                          else 0.0,
                          "array engine == event-calendar core makespan"))
+
+    # -- mega-batch event loop (batch=True vs the per-event oracle) ----
+    # both arms run the same compiled flat-array engine; batch=False is
+    # the pre-mega-batch loop kept verbatim as the differential oracle.
+    # Interleaved best-of so a frequency step can't fabricate the ratio;
+    # ref_match is exact makespan equality between the two loops.
+    # mr128x128 is deliberately absent: its 16k-flow uniform shuffle is
+    # routed to the vectorized waterfill rounds by the batch fill's
+    # group-size gate, so batch≈nobatch there (~1.0x) by design.
+    for name, floor_note in (("layered20k", "gated >= 1.2x"),
+                             ("ddl1024", "gated >= 1.5x")):
+        if not want(f"simulate_{name}_batch"):
+            continue
+        g, cl = big_graph(name)
+
+        def run_batch(g=g, cl=cl):
+            return Simulator(g, cl).run(batch=True)
+
+        def run_nobatch(g=g, cl=cl):
+            return Simulator(g, cl).run(batch=False)
+
+        run_batch()                     # warm the compile for both arms
+        b_us, n_us = timeit_pair_us(run_batch, run_nobatch, repeat=3)
+        rows.append((f"scale.simulate_{name}_batch_us", b_us,
+                     f"mega-batch event loop ({b_us.note})"))
+        rows.append((f"scale.simulate_{name}_nobatch_us", n_us,
+                     f"per-event oracle loop ({n_us.note})"))
+        rows.append((f"scale.speedup_batch_{name}", n_us / b_us,
+                     f"mega-batch speedup over the per-event loop "
+                     f"({floor_note})"))
+        rows.append((f"scale.simulate_{name}_batch.ref_match",
+                     1.0 if run_batch().makespan == run_nobatch().makespan
+                     else 0.0,
+                     "batched loop == per-event loop makespan (exact)"))
+
+    # -- parallel what-if sweeps (workers=4 vs serial) -----------------
+    # one schedule()+DES per trial, fanned across forked workers that
+    # inherit the parent's warm compile caches copy-on-write.  The
+    # ratio is gated (>=2x) only when the recorded parallel_cores row
+    # shows >=4 usable cores — on a 1-core runner the fan-out is
+    # correctness-only and the row is informational.
+    if want("sweep_unit_mr128x128") or want("parallel_cores"):
+        from repro.core.parallel import cpu_count
+        from repro.core.whatif import WhatIf
+        rows.append(("scale.parallel_cores", float(cpu_count()),
+                     "usable cores on this runner (conditions the "
+                     "speedup_parallel gate)"))
+        g, cl = big_graph("mr128x128")
+        units = [2.0 ** k for k in range(-3, 5)]        # 8 trials
+        task = next(iter(g.tasks))
+
+        def sweep(workers=None, g=g, cl=cl):
+            # fresh WhatIf per arm: its memo cache would otherwise make
+            # every trial after the first free
+            return WhatIf(g, cl).sweep_unit(task, units, workers=workers)
+
+        t0 = time.perf_counter()
+        serial = sweep()
+        s_us = (time.perf_counter() - t0) * 1e6
+        t0 = time.perf_counter()
+        par = sweep(workers=4)
+        p_us = (time.perf_counter() - t0) * 1e6
+        rows.append(("scale.sweep_unit_mr128x128_us", p_us,
+                     f"what-if unit sweep ({len(units)} trials, "
+                     f"workers=4)"))
+        rows.append(("scale.sweep_unit_mr128x128_serial_us", s_us,
+                     "same sweep, serial"))
+        rows.append(("scale.speedup_parallel_mr128x128", s_us / p_us,
+                     "workers=4 sweep speedup over serial (gated >=2x "
+                     "when parallel_cores >= 4)"))
+        rows.append(("scale.sweep_unit_mr128x128.ref_match",
+                     1.0 if par == serial else 0.0,
+                     "parallel sweep bit-identical to serial"))
 
     # -- analytic passes at Graphene scale (compiled vs dict) ----------
     # with_slack + priorities + critical_path: the per-DAG overhead the

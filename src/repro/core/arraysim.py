@@ -80,6 +80,7 @@ from __future__ import annotations
 
 import heapq
 import math
+from bisect import bisect_left
 from itertools import chain
 
 try:
@@ -643,6 +644,149 @@ def _wf_core_py(sg_ids, flow_links, sg_pos, link_order, residual, rate,
         unfrozen = [r for r in unfrozen if r in unfrozen_set]
 
 
+def _wf_fill_batch(net_ids_a, flow_links, fl_ptr, fl_flat, sg_pos,
+                   link_order, residual, rate, seq, bl, unfrozen):
+    """Batch-mode progressive fill: scalar-granular core on Python state.
+
+    Unweighted groups only (coflow-weighted groups stay on
+    :func:`_wf_core_np`).  Freezes touch one to a handful of links per
+    row, a granularity where Python-list scalar ops beat NumPy scalar
+    indexing by an order of magnitude — so the fill runs on Python
+    mirrors of ``residual``/``wsum`` and the frozen rates scatter back
+    in one vectorized write.  Bottleneck picks and tie-run freezes
+    follow :func:`_wf_core_np` (EPS-hysteresis first-min pick,
+    bitwise-tied run frozen in link order with a sequential-exact
+    recheck per link); the per-row sequential subtraction matches the
+    scalar oracle :func:`_wf_core_py` exactly, and freezes of >=32 rows
+    collapse to one bincount (the same association order — and ulp
+    drift, covered by the equivalence tolerance — as the old array
+    fill's >=32 path).
+
+    Rows are NET POSITIONS, so the incidence needs no per-call build:
+    ``bl`` maps each link to the rank-sorted positions of the group
+    (the caller passes the incrementally maintained per-component/class
+    structure, or a per-call build when that isn't valid), ``sg_pos``
+    is the rank-sorted position array, and ``unfrozen`` is a shared
+    all-zero bytearray over net positions (restored to all-zero on
+    return — every group member is frozen by some path).
+    """
+    k = len(sg_pos)
+    if k == 0:
+        return
+    sg_list = sg_pos.tolist()
+    for p in sg_list:
+        unfrozen[p] = 1
+    res = residual.tolist()
+    ws = [0.0] * len(res)
+    for l, fl in bl.items():
+        if fl:
+            ws[l] = float(len(fl))
+    remaining = k
+    frozen_pos: list[int] = []
+    frozen_allocs: list[float] = []
+    fp_append = frozen_pos.append
+    fa_append = frozen_allocs.append
+    inf = math.inf
+    # links whose rows are all frozen get compacted out of the walk
+    # once they are a third of it (same pick: a dead link can never
+    # win); ``dead`` counts ws hitting zero in the freeze updates
+    live = link_order
+    dead = 0
+    while remaining:
+        if dead * 3 > len(live):
+            live = [l for l in live if ws[l] > EPS]
+            dead = 0
+        # single walk: first-min scan with EPS hysteresis in link_order
+        # order (== _pick_bottleneck over valid links), collecting the
+        # links tied bitwise with the running best as it goes.  A link
+        # bitwise-equal to the final best can never precede the pick
+        # (it would have been accepted, or the pick rejected), so the
+        # tie list is exactly the per-index candidate run ("pre-round
+        # ratio == best, at or after the pick") of the two-pass form,
+        # in order.
+        best_ratio = inf
+        ties: list = []
+        for l in live:
+            w = ws[l]
+            if w <= EPS:
+                continue
+            q = res[l] / w
+            if q < best_ratio - EPS:
+                best_ratio = q
+                ties = [l]
+            elif q == best_ratio:
+                ties.append(l)
+        if not ties:
+            for p in sg_list:              # rank order, like the scalar
+                if unfrozen[p]:            # fill's exhaustion pass
+                    unfrozen[p] = 0
+                    fp_append(p)
+                    fa_append(0.0)
+            break
+        # freeze the pick, then the run of links tied bitwise with it,
+        # in link order; each later link rechecks against the current
+        # (sequentially updated) residual and breaks on any drift —
+        # exactly the scalar fill's iteration, with the rescans skipped
+        froze_any = False
+        for link in ties:
+            w_t = ws[link]
+            if w_t <= EPS:
+                continue
+            if not froze_any:
+                froze_any = True           # the pick itself: no recheck
+            elif res[link] / w_t != best_ratio:
+                break
+            # ws > 0 ==> the link is in bl with unfrozen rows (ws and
+            # the incidence share bookkeeping), so index directly
+            rows = [p for p in bl[link] if unfrozen[p]]
+            nr = len(rows)
+            if not nr:                     # numerical guard; ws tracks
+                ws[link] = 0.0             # unfrozen, so normally nonzero
+                dead += 1
+                continue
+            if nr >= 32:
+                for p in rows:
+                    unfrozen[p] = 0
+                frozen_pos.extend(rows)
+                frozen_allocs.extend([best_ratio] * nr)
+                sub = _gather(fl_ptr, fl_flat,
+                              np.array(rows, dtype=np.int64))
+                delta = np.bincount(sub)
+                for ll in np.nonzero(delta)[0].tolist():
+                    c = int(delta[ll])
+                    v = res[ll] - best_ratio * c
+                    res[ll] = v if v > 0.0 else 0.0
+                    w = ws[ll] - c
+                    ws[ll] = w
+                    if w <= EPS:
+                        dead += 1
+            else:
+                for p in rows:
+                    unfrozen[p] = 0
+                    fp_append(p)
+                    fa_append(best_ratio)
+                    for ll in flow_links[p]:
+                        v = res[ll] - best_ratio
+                        res[ll] = v if v > 0.0 else 0.0
+                        w = ws[ll] - 1.0
+                        ws[ll] = w
+                        if w <= EPS:
+                            dead += 1
+            remaining -= nr
+            if not remaining:
+                break
+        if not froze_any:                  # guard: stale ws on the pick
+            link = ties[0]
+            if ws[link] > EPS:
+                dead += 1
+            ws[link] = 0.0
+    residual[:] = res
+    ia = net_ids_a[np.array(frozen_pos, dtype=np.int64)]
+    rate[ia] = frozen_allocs
+    if seq is not None:
+        seq.extend(zip(ia.tolist(), frozen_allocs))
+
+
 def vectorized_waterfill(group, paths, weight, residual, rates):
     """Drop-in vectorized :func:`repro.core.simulator.waterfill`.
 
@@ -687,7 +831,7 @@ def vectorized_waterfill(group, paths, weight, residual, rates):
     return seq
 
 
-def array_run(sim, horizon: float = 1e15):
+def array_run(sim, horizon: float = 1e15, batch: bool = True):
     """Run ``sim`` to completion on the compiled flat arrays.
 
     A faithful translation of ``Simulator.calendar_run`` — same event
@@ -695,12 +839,18 @@ def array_run(sim, horizon: float = 1e15):
     integer-indexed state.  See the module docstring for where the two
     may differ in floating-point association (last-ulp only).
 
+    ``batch=False`` disables the mega-batch vectorized passes (NumPy
+    state vectors, batched fills/integration/completion scans and the
+    per-component event heaps) and runs the retained per-event paths —
+    the differential oracle the batched loop is tested against, and the
+    "before" arm of the ``scale.speedup_batch_*`` benchmark rows.
+
     Implemented as one uninterrupted :class:`ResumableSim` session, so
     the pausable fault-capable engine and this hot path are a single
     implementation that cannot drift apart (the zero-fault differential
     tests pin the equivalence regardless).
     """
-    rs = ResumableSim(sim, horizon)
+    rs = ResumableSim(sim, horizon, batch=batch)
     rs.run_until(math.inf)
     return rs.result()
 
@@ -754,11 +904,17 @@ class ResumableSim:
     rewound); fault scenarios avoid killing them after completion.
     """
 
-    def __init__(self, sim, horizon: float = 1e15):
+    def __init__(self, sim, horizon: float = 1e15, batch: bool = True):
         from repro.core.simulator import SimResult
 
         comp = compile_sim(sim)
         use_np = comp.np_ready and np is not None
+        # mega-batch mode: NumPy-backed state vectors and vectorized
+        # event-batch passes (fills, integration, completion scans,
+        # per-component heaps).  Off — or NumPy absent — runs the
+        # retained per-event scalar paths, which double as the
+        # differential oracle for the batched loop.
+        use_batch = bool(batch) and use_np
         n = comp.n
         names = comp.names
         size, unit, nu = comp.size, comp.unit, comp.nu
@@ -783,6 +939,8 @@ class ResumableSim:
             cls_net = [0.0 if comp.stream_fed[i]
                        else prio_get(names[i], 0.0)
                        for i in net_ids]
+        cls_net_a = np.array(cls_net, dtype=np.float64) \
+            if use_batch and policy != "fair" else None
         prio_arr = [prio_get(nm, 0.0) for nm in names]
         if use_np:
             order = np.lexsort((comp.name_rank_a, np.array(prio_arr)))
@@ -799,15 +957,37 @@ class ResumableSim:
         for nm, v in sim.releases.items():
             rel[comp.idx[nm]] = v
 
-        # -- dynamic state (flat lists of float64/int; scalar access in
-        # the branchy event code is list-speed, batch math converts on
-        # demand) ------------------------------------------------------
-        work = [0.0] * n
-        rate = [0.0] * n
+        # -- dynamic state (batch mode: float64/bool NumPy vectors so
+        # the fill / integration / completion passes run as array math;
+        # otherwise flat lists — scalar access in the branchy event
+        # code is list-speed, batch math converts on demand) -----------
+        if use_batch:
+            work = np.zeros(n)
+            rate = np.zeros(n)
+            speed = np.ones(n)           # fault-model rate multipliers
+            starved_net = np.zeros(comp.n_net, dtype=bool)
+            simple_a = np.array(comp.simple, dtype=bool)
+            link_bw_a_run = comp.link_bw_a.copy()
+            # incremental fill incidence: (K, cls) -> {link: rank-sorted
+            # positions of that component/class's runnable flows}.
+            # Built lazily at the first big fill, then maintained by
+            # inc_add/inc_remove as flows start and complete, so the
+            # steady-state fill skips the O(group x links) rebuild.
+            # Cleared wholesale on anything non-incremental (restore,
+            # repath, priority swaps, fault mutators).
+            inc_bylink: dict = {}
+            unfrozen_pos = bytearray(comp.n_net)   # all-zero between fills
+            pos_rank = comp.name_rank_a[comp.net_ids_a].tolist()
+        else:
+            work = [0.0] * n
+            rate = [0.0] * n
+            speed = [1.0] * n
+            starved_net = [False] * comp.n_net
+            simple_a = link_bw_a_run = None
+            inc_bylink = unfrozen_pos = pos_rank = None
+        vcopy = (lambda a: a.copy()) if use_batch else (lambda a: a[:])
         cap = list(size)                 # cap_of default = size
-        speed = [1.0] * n                # fault-model rate multipliers
         speed_on = False                 # sticky: any speed ever != 1.0
-        starved_net = [False] * comp.n_net
         started: list = [None] * n
         finished: list = [None] * n
         has_slot = [False] * n
@@ -844,6 +1024,20 @@ class ResumableSim:
         link_bw = list(comp.link_bw)
         residual = comp.link_bw_a.copy() if use_np else list(link_bw)
         heap: list = []
+        # per-component event heaps (batch mode, >=2 components): a
+        # component's kind-1/2 entries live in comp_heaps[K] and the
+        # global heap carries only releases, compute-task entries, and
+        # kind-3 meta hints ``(t, 3, K, 0)`` — one per component head.
+        # A hint is pushed whenever a push lowers a component's head,
+        # so min(hints for K) <= head(K) always holds and the global
+        # heap never misses a component event; stale hints (head moved
+        # by lazy pruning or draining) are refreshed on pop.  Net
+        # effect: a huge component's churn (thousands of stale entries
+        # per reallocation) stops inflating every other component's
+        # push/pop cost.
+        use_cheaps = use_batch and n_comps >= 2
+        comp_heaps: list = \
+            [[] for _ in range(n_comps)] if use_cheaps else None
         stamp = [0] * n
         unfinished = n
         now = 0.0
@@ -975,7 +1169,26 @@ class ResumableSim:
             mega-batch (same entry set, so the event calendar is
             unchanged — only the arbitrary pop order of equal-time
             entries may differ, which batch collection absorbs),
-            individual pushes otherwise."""
+            individual pushes otherwise.  With per-component heaps,
+            flow entries route to their component's heap instead, with
+            a meta hint on the global heap whenever a push lowers that
+            component's head."""
+            if comp_heaps is not None:
+                for e in pending:
+                    if e[1] == 2:
+                        K = e[2]
+                    else:
+                        i2 = e[2]
+                        if is_comp[i2]:
+                            heappush(heap, e)
+                            continue
+                        K = comp_of[net_pos[i2]]
+                    ch = comp_heaps[K]
+                    if not ch or e[0] < ch[0][0]:
+                        heappush(heap, (e[0], 3, K, 0))
+                    heappush(ch, e)
+                pending.clear()
+                return
             if len(pending) > 1024 and len(pending) * 2 > len(heap):
                 heap.extend(pending)
                 heapq.heapify(heap)
@@ -983,6 +1196,24 @@ class ResumableSim:
                 for e in pending:
                     heappush(heap, e)
             pending.clear()
+
+        def meta_head(K: int):
+            """Validate a kind-3 meta hint: prune component ``K``'s
+            stale entries and return its true head time (None when it
+            has no live events).  The caller drops the hint when this
+            returns None and refreshes it when the head disagrees."""
+            ch = comp_heaps[K]
+            while ch:
+                t2, k2, i2, s2 = ch[0]
+                if k2 == 1 and (stamp[i2] != s2
+                                or finished[i2] is not None):
+                    heappop(ch)
+                    continue
+                if k2 == 2 and comp_stamp[i2] != s2:
+                    heappop(ch)
+                    continue
+                return t2
+            return None
 
         gate_dec = comp.gate_dec
 
@@ -996,8 +1227,22 @@ class ResumableSim:
             shrinks from O(flows) to O(1) per reallocation."""
             st = comp_stamp[K] + 1
             comp_stamp[K] = st
+            csa = comp_simple_active[K]
+            if use_batch and len(csa) >= 48:
+                # same per-flow divisions elementwise, same min — the
+                # candidate times are bit-identical to the scalar scan
+                ids = np.fromiter(csa, dtype=np.int64, count=len(csa))
+                r = rate[ids]
+                if speed_on:
+                    r = r * speed[ids]
+                on = r > EPS
+                if on.any():
+                    sel = ids[on]
+                    d = (comp.size_a[sel] - work[sel]) / r[on]
+                    _defer((float(now + d.min()), 2, K, st))
+                return
             best = inf
-            for i in comp_simple_active[K]:
+            for i in csa:
                 r = rate[i]
                 if speed_on:
                     r = r * speed[i]
@@ -1007,6 +1252,51 @@ class ResumableSim:
                         best = d
             if best < inf:
                 _defer((float(now + best), 2, K, st))
+
+        def inc_add(pos: int) -> None:
+            """A flow became runnable: insert it (rank-ordered) into its
+            component/class's incremental fill incidence, if built."""
+            bl = inc_bylink.get(
+                (comp_of[pos], None if policy == "fair" else cls_net[pos]))
+            if bl is None:
+                return
+            rk = pos_rank[pos]
+            for l in flow_links[pos]:
+                fl = bl.get(l)
+                if fl is None:
+                    bl[l] = [pos]
+                    continue
+                if not fl:
+                    fl.append(pos)
+                    continue
+                last = fl[-1]
+                if last == pos:                         # tolerate re-adds
+                    continue
+                if pos_rank[last] < rk:                 # common: in-order
+                    fl.append(pos)
+                else:
+                    j = bisect_left(fl, rk, key=pos_rank.__getitem__)
+                    if j == len(fl) or fl[j] != pos:   # tolerate re-adds
+                        fl.insert(j, pos)
+
+        def inc_remove(pos: int) -> None:
+            """A flow left the runnable set: drop it from the incidence
+            (tolerant — absent positions are a no-op)."""
+            bl = inc_bylink.get(
+                (comp_of[pos], None if policy == "fair" else cls_net[pos]))
+            if bl is None:
+                return
+            rk = pos_rank[pos]
+            for l in flow_links[pos]:
+                fl = bl.get(l)
+                if fl:
+                    if fl[-1] == pos:                   # common: tail pop
+                        fl.pop()
+                    else:
+                        j = bisect_left(fl, rk,
+                                        key=pos_rank.__getitem__)
+                        if j < len(fl) and fl[j] == pos:
+                            del fl[j]
 
         def complete(i: int) -> None:
             """Finish ``i``: free resources, trigger gated candidates."""
@@ -1025,6 +1315,8 @@ class ResumableSim:
                 pos = net_pos[i]
                 K = comp_of[pos]
                 comp_runnable[K].discard(pos)
+                if inc_bylink:
+                    inc_remove(pos)
                 if simple[i]:
                     comp_simple_active[K].discard(i)
                 if rate[i]:
@@ -1073,6 +1365,8 @@ class ResumableSim:
                     pos = net_pos[i]
                     K = comp_of[pos]
                     comp_runnable[K].discard(pos)
+                    if inc_bylink:
+                        inc_remove(pos)
                     if simple[i]:
                         comp_simple_active[K].discard(i)
                     if rate[i]:
@@ -1120,6 +1414,8 @@ class ResumableSim:
                 starved_net[pos] = is_starved
                 K = comp_of[pos]
                 comp_runnable[K].add(pos)
+                if inc_bylink:
+                    inc_add(pos)
                 dirty_net(pos)
                 if simple[i]:
                     # coalesced: activation and the completion event
@@ -1164,6 +1460,8 @@ class ResumableSim:
                         starved_net[pos] = False
                         K = comp_of[pos]
                         comp_runnable[K].add(pos)
+                        if inc_bylink:
+                            inc_add(pos)
                         dirty_net(pos)
                         if simple[i]:
                             comp_simple_active[K].add(i)
@@ -1225,29 +1523,61 @@ class ResumableSim:
             on the scalar port, whose constant factors beat NumPy-call
             overhead at that size."""
             changed: list = []
+            fast_groups = use_batch and not any_coflow
             for K in sorted(comp_dirty):
-                positions = [p for p in sorted(comp_runnable[K])
-                             if not starved_net[p]]
-                old_log = comp_log[K]
-                if not positions:
-                    comp_log[K] = None
-                    continue
-                seen: set[int] = set()
-                link_order: list[int] = []
-                for p in positions:
-                    for l in flow_links[p]:
-                        if l not in seen:
-                            seen.add(l)
-                            link_order.append(l)
-                for l in link_order:  # reset only this comp's links
-                    residual[l] = link_bw[l]
-                lo_arr = None
+                pos_a = None
+                if fast_groups:
+                    m = len(comp_runnable[K])
+                    old_log = comp_log[K]
+                    if m == 0:
+                        comp_log[K] = None
+                        continue
+                    ps = np.fromiter(comp_runnable[K], dtype=np.int64,
+                                     count=m)
+                    ps.sort()
+                    pos_a = ps[~starved_net[ps]]
+                    if len(pos_a) == 0:
+                        comp_log[K] = None
+                        continue
+                    positions = pos_a.tolist()
+                    # first-seen link order over the sorted positions:
+                    # the concatenated incidence is exactly the scalar
+                    # append order, so sorting the unique links by first
+                    # occurrence reproduces it
+                    cat_k = _gather(fl_ptr, fl_flat, pos_a)
+                    uniq, first = np.unique(cat_k, return_index=True)
+                    lo_arr = uniq[np.argsort(first, kind="stable")]
+                    residual[lo_arr] = link_bw_a_run[lo_arr]
+                    link_order = lo_arr.tolist()
+                else:
+                    positions = [p for p in sorted(comp_runnable[K])
+                                 if not starved_net[p]]
+                    old_log = comp_log[K]
+                    if not positions:
+                        comp_log[K] = None
+                        continue
+                    seen: set[int] = set()
+                    link_order = []
+                    for p in positions:
+                        for l in flow_links[p]:
+                            if l not in seen:
+                                seen.add(l)
+                                link_order.append(l)
+                    for l in link_order:  # reset only this comp's links
+                        residual[l] = link_bw[l]
+                    lo_arr = None
                 if policy == "fair":
                     classes: list = [None]
                     lowest = None
+                    pos_cls = None
+                elif fast_groups:
+                    pos_cls = cls_net_a[pos_a]
+                    classes = np.unique(pos_cls).tolist()
+                    lowest = comp_dirty[K]
                 else:
                     classes = sorted({cls_net[p] for p in positions})
                     lowest = comp_dirty[K]
+                    pos_cls = None
                 new_log: dict = {}
                 for cls in classes:
                     if lowest is None or cls >= lowest \
@@ -1256,17 +1586,28 @@ class ResumableSim:
                         # priority policy (fair always refills) — skip
                         # building it when it can never be read
                         seq = None if policy == "fair" else []
-                        gpos = positions if cls is None else \
-                            [p for p in positions if cls_net[p] == cls]
+                        if fast_groups:
+                            gpa = pos_a if cls is None \
+                                else pos_a[pos_cls == cls]
+                            gpos = gpa.tolist()
+                        else:
+                            gpa = None
+                            gpos = positions if cls is None else \
+                                [p for p in positions
+                                 if cls_net[p] == cls]
+                        # batch mode drops the link-count requirement:
+                        # the scalar fill's only remaining edge is tiny
+                        # groups, where NumPy call overhead dominates
                         big = use_np and len(gpos) >= 48 \
-                            and len(link_order) >= 48
+                            and (use_batch or len(link_order) >= 48)
                         full = big and full_counts is not None \
                             and len(gpos) == comp.n_net
                         if full:
                             sg_pos_a = full_sg_pos
                             sg_ids = full_sorted_ids
                         elif big:
-                            ga = np.array(gpos, dtype=np.int64)
+                            ga = gpa if gpa is not None \
+                                else np.array(gpos, dtype=np.int64)
                             o = np.argsort(
                                 comp.name_rank_a[comp.net_ids_a[ga]],
                                 kind="stable")
@@ -1277,14 +1618,56 @@ class ResumableSim:
                                 gpos,
                                 key=lambda p: comp.name_rank[net_ids[p]])
                             sg_ids = [net_ids[p] for p in sg_pos]
-                        gids = [net_ids[p] for p in gpos]
-                        old = [rate[f] for f in gids]
+                        if fast_groups:
+                            gids_a = comp.net_ids_a[gpa]
+                            old_a = rate[gids_a].copy()
+                            gids = old = None
+                        else:
+                            gids_a = None
+                            gids = [net_ids[p] for p in gpos]
+                            old = [rate[f] for f in gids]
                         weights = None
                         if any_coflow \
                                 and any(coflow_of[f] >= 0
                                         for f in sg_ids):
                             weights = group_weights(sg_ids)
-                        if big:
+                        # the scalar-granular batch fill wins when
+                        # rounds freeze a handful of rows each (layered
+                        # / trickle shapes); huge uniform groups
+                        # (all-to-all shuffles) freeze thousands of
+                        # rows in a round or two, where the vectorized
+                        # np rounds are far cheaper — route those there
+                        if big and use_batch and weights is None \
+                                and len(gpos) < 2048:
+                            # per-(component, class) link incidence:
+                            # valid exactly when the group is the whole
+                            # runnable membership (no starved members),
+                            # which is when inc_add/inc_remove have been
+                            # tracking it; otherwise build per-call
+                            use_inc = pos_a is not None \
+                                and len(pos_a) == m
+                            bl = inc_bylink.get((K, cls)) \
+                                if use_inc else None
+                            if bl is None:
+                                bl = {}
+                                bget = bl.get
+                                # rank-sorted positions -> plain appends
+                                # yield the rank-sorted per-link lists
+                                # the incremental hooks maintain
+                                for p in sg_pos_a.tolist():
+                                    for l in flow_links[p]:
+                                        fl2 = bget(l)
+                                        if fl2 is None:
+                                            bl[l] = [p]
+                                        else:
+                                            fl2.append(p)
+                                if use_inc:
+                                    inc_bylink[(K, cls)] = bl
+                            _wf_fill_batch(comp.net_ids_a, flow_links,
+                                           fl_ptr, fl_flat, sg_pos_a,
+                                           link_order, residual, rate,
+                                           seq, bl, unfrozen_pos)
+                        elif big:
                             if lo_arr is None:
                                 lo_arr = np.array(link_order,
                                                   dtype=np.int64)
@@ -1303,8 +1686,13 @@ class ResumableSim:
                             _wf_core_py(sg_ids, flow_links, sg_pos,
                                         link_order, residual, rate,
                                         weights, seq)
-                        changed.extend(f for f, o in zip(gids, old)
-                                       if rate[f] != o)
+                        if fast_groups:
+                            chm = rate[gids_a] != old_a
+                            if chm.any():
+                                changed.extend(gids_a[chm].tolist())
+                        else:
+                            changed.extend(f for f, o in zip(gids, old)
+                                           if rate[f] != o)
                         new_log[cls] = seq
                     else:
                         # unchanged class: replay the logged freeze seq
@@ -1325,6 +1713,15 @@ class ResumableSim:
             membership maintained — their component's next-completion
             entry is being recomputed by schedule_comp — while
             everything else re-derives its per-task event."""
+            if use_batch and len(changed) >= 64:
+                ca = np.array(changed, dtype=np.int64)
+                sm = simple_a[ca]
+                simp = ca[sm]
+                on = rate[simp] > EPS
+                active.update(simp[on].tolist())
+                active.difference_update(simp[~on].tolist())
+                touched_sched.update(ca[~sm].tolist())
+                return
             for i in changed:
                 if simple[i]:
                     if rate[i] > EPS:
@@ -1431,6 +1828,15 @@ class ResumableSim:
                     if kind == 2 and comp_stamp[i] != stp:
                         heappop(heap)
                         continue
+                    if kind == 3:
+                        th = meta_head(i)
+                        if th is None:
+                            heappop(heap)
+                            continue
+                        if th != tm:         # stale hint: refresh
+                            heappop(heap)
+                            heappush(heap, (th, 3, i, 0))
+                            continue
                     t_next = tm
                     break
                 if t_next is None:
@@ -1448,8 +1854,22 @@ class ResumableSim:
                 if t_next > horizon:
                     t_next = horizon
                 dt = t_next - now
+                act_arr = None
+                if use_batch and len(active) >= 64:
+                    act_arr = np.fromiter(active, dtype=np.int64,
+                                          count=len(active))
                 if dt > 0.0:
-                    if speed_on:
+                    if act_arr is not None:
+                        # same elementwise arithmetic as the scalar
+                        # loop (w + r*dt, clamp to size == the
+                        # conditional store), one array pass
+                        r = rate[act_arr]
+                        if speed_on:
+                            r = r * speed[act_arr]
+                        w = work[act_arr] + r * dt
+                        np.minimum(w, comp.size_a[act_arr], out=w)
+                        work[act_arr] = w
+                    elif speed_on:
                         for i in active:
                             w = work[i] + rate[i] * speed[i] * dt
                             sz = size[i]
@@ -1474,11 +1894,29 @@ class ResumableSim:
                         # it even if no completion/reallocation follows
                         # (FP shortfall)
                         comp_resched.add(i)
+                    elif kind == 3:
+                        # drain the component's due events; leave one
+                        # fresh hint behind if any remain
+                        ch = comp_heaps[i]
+                        while ch and ch[0][0] <= t_next:
+                            t2, k2, i2, s2 = heappop(ch)
+                            if k2 == 1 and stamp[i2] == s2 \
+                                    and finished[i2] is None:
+                                batch.append(i2)
+                            elif k2 == 2 and comp_stamp[i2] == s2:
+                                comp_resched.add(i2)
+                        if ch:
+                            heappush(heap, (ch[0][0], 3, i, 0))
 
                 # completions (a task reaching its cap/size keeps
                 # rate > 0 until this very event — scan the active set)
-                finished_now = [i for i in active
-                                if work[i] >= size[i] - EPS]
+                if act_arr is not None:
+                    finished_now = act_arr[
+                        work[act_arr] >= comp.size_a[act_arr] - EPS
+                    ].tolist()
+                else:
+                    finished_now = [i for i in active
+                                    if work[i] >= size[i] - EPS]
                 if len(finished_now) >= 128:
                     complete_bulk(finished_now)
                 else:
@@ -1572,6 +2010,15 @@ class ResumableSim:
                 if kind == 2 and comp_stamp[i] != stp:
                     heappop(heap)
                     continue
+                if kind == 3:
+                    th = meta_head(i)
+                    if th is None:
+                        heappop(heap)
+                        continue
+                    if th != tm:             # stale hint: refresh
+                        heappop(heap)
+                        heappush(heap, (th, 3, i, 0))
+                        continue
                 return tm
             return None
 
@@ -1645,6 +2092,8 @@ class ResumableSim:
             if finished[i] is not None:
                 raise ValueError(f"{names[i]} already finished "
                                  f"(use resurrect)")
+            if inc_bylink:
+                inc_bylink.clear()     # non-incremental runnable edit
             stamp[i] += 1
             active.discard(i)
             if has_slot[i]:
@@ -1690,6 +2139,8 @@ class ResumableSim:
             nonlocal unfinished, needs_settle
             if finished[i] is None:
                 return
+            if inc_bylink:
+                inc_bylink.clear()     # non-incremental runnable edit
             if coflow_of[i] >= 0 or comp.coflow_fed_by[i]:
                 raise NotImplementedError(
                     f"cannot resurrect coflow-coupled task {names[i]}")
@@ -1743,6 +2194,8 @@ class ResumableSim:
             """Patch link ``li``'s capacity; dirty touched components."""
             nonlocal needs_settle
             link_bw[li] = float(bw)
+            if use_batch:
+                link_bw_a_run[li] = float(bw)
             for pos in range(len(flow_links)):
                 if li in flow_links[pos] \
                         and finished[net_ids[pos]] is None:
@@ -1799,7 +2252,8 @@ class ResumableSim:
             endpoint NICs included), merging contention components the
             new path bridges.  ``reset`` restarts an in-flight transfer
             from zero; a finished flow is resurrected (re-delivery)."""
-            nonlocal flow_links, comp_of, residual, needs_settle
+            nonlocal flow_links, comp_of, residual, needs_settle, \
+                link_bw_a_run
             if is_comp[i]:
                 raise ValueError(f"{names[i]} is not a flow")
             pos = net_pos[i]
@@ -1819,6 +2273,9 @@ class ResumableSim:
                         residual = np.append(residual, 0.0)
                     else:
                         residual.append(0.0)
+                    if use_batch:
+                        link_bw_a_run = np.append(link_bw_a_run,
+                                                  link_bw[-1])
                 ids.append(li)
             if flow_links is comp.flow_links:
                 flow_links = list(comp.flow_links)
@@ -1865,6 +2322,8 @@ class ResumableSim:
             comp_dirty[kt] = -inf
             if comp_runnable[old_k]:
                 comp_dirty[old_k] = -inf
+            if inc_bylink:
+                inc_bylink.clear()     # incidence/component maps changed
             rebuild_csr()
             needs_settle = True
 
@@ -1932,7 +2391,7 @@ class ResumableSim:
             policy); rebuilt classes/dispatch ranks, invalidated replay
             logs, runnable components refill from scratch."""
             nonlocal policy, cls_net, prio_arr, dispatch_rank, \
-                needs_settle
+                needs_settle, cls_net_a
             if new_policy is not None:
                 if new_policy not in ("fair", "priority"):
                     raise ValueError(f"unknown policy {new_policy}")
@@ -1944,6 +2403,8 @@ class ResumableSim:
                 cls_net = [0.0 if comp.stream_fed[i]
                            else pget(names[i], 0.0)
                            for i in net_ids]
+            cls_net_a = np.array(cls_net, dtype=np.float64) \
+                if use_batch and policy != "fair" else None
             prio_arr = [pget(nm, 0.0) for nm in names]
             if use_np:
                 o = np.lexsort((comp.name_rank_a, np.array(prio_arr)))
@@ -1957,6 +2418,8 @@ class ResumableSim:
                 dispatch_rank = [0] * n
                 for r2, i2 in enumerate(o):
                     dispatch_rank[i2] = r2
+            if inc_bylink:
+                inc_bylink.clear()     # classes re-keyed
             for K in range(n_comps):
                 comp_log[K] = None
                 if comp_runnable[K]:
@@ -1972,9 +2435,9 @@ class ResumableSim:
             if needs_settle:
                 settle()
             return {
-                "work": work[:], "rate": rate[:], "cap": cap[:],
-                "speed": speed[:], "speed_on": speed_on,
-                "starved_net": starved_net[:], "started": started[:],
+                "work": vcopy(work), "rate": vcopy(rate), "cap": cap[:],
+                "speed": vcopy(speed), "speed_on": speed_on,
+                "starved_net": vcopy(starved_net), "started": started[:],
                 "finished": finished[:], "has_slot": has_slot[:],
                 "starved": starved[:], "d_units": d_units[:],
                 "slots_free": slots_free[:], "cof_left": cof_left[:],
@@ -1989,7 +2452,10 @@ class ResumableSim:
                 "comp_log": [None if lg is None else dict(lg)
                              for lg in comp_log],
                 "comp_stamp": comp_stamp[:],
-                "heap": heap[:], "unfinished": unfinished, "now": now,
+                "heap": heap[:],
+                "comp_heaps": (None if comp_heaps is None
+                               else [h[:] for h in comp_heaps]),
+                "unfinished": unfinished, "now": now,
                 "guard": guard,
                 "policy": policy, "cls_net": cls_net[:],
                 "prio_arr": prio_arr[:],
@@ -2015,19 +2481,20 @@ class ResumableSim:
                 slots_free, cof_left, n_gate, stamp, active, \
                 waiting_slot, candidates, comp_runnable, \
                 comp_simple_active, comp_log, comp_stamp, heap, \
+                comp_heaps, \
                 unfinished, now, guard, policy, cls_net, prio_arr, \
                 dispatch_rank, link_bw, residual, flow_links, \
                 comp_of, slot_of, slot_ids_run, link_names, \
                 link_name_id, cur_host, cur_src, cur_dst, fl_ptr, \
                 fl_flat, full_sg_pos, full_sorted_ids, \
                 full_row_links, full_by_link, full_counts, \
-                needs_settle
-            work = snap["work"][:]
-            rate = snap["rate"][:]
+                needs_settle, link_bw_a_run, cls_net_a
+            work = vcopy(snap["work"])
+            rate = vcopy(snap["rate"])
             cap = snap["cap"][:]
-            speed = snap["speed"][:]
+            speed = vcopy(snap["speed"])
             speed_on = snap["speed_on"]
-            starved_net = snap["starved_net"][:]
+            starved_net = vcopy(snap["starved_net"])
             started = snap["started"][:]
             finished = snap["finished"][:]
             has_slot = snap["has_slot"][:]
@@ -2047,7 +2514,12 @@ class ResumableSim:
             comp_log = [None if lg is None else dict(lg)
                         for lg in snap["comp_log"]]
             comp_stamp = snap["comp_stamp"][:]
+            if inc_bylink:
+                inc_bylink.clear()     # rebuilt lazily from new state
             heap = snap["heap"][:]
+            ch_snap = snap["comp_heaps"]
+            comp_heaps = None if ch_snap is None \
+                else [h[:] for h in ch_snap]
             unfinished = snap["unfinished"]
             now = snap["now"]
             guard = snap["guard"]
@@ -2069,6 +2541,10 @@ class ResumableSim:
             cur_dst = snap["cur_dst"][:]
             (fl_ptr, fl_flat, full_sg_pos, full_sorted_ids,
              full_row_links, full_by_link, full_counts) = snap["csr"]
+            if use_batch:
+                link_bw_a_run = np.array(link_bw, dtype=np.float64)
+                cls_net_a = np.array(cls_net, dtype=np.float64) \
+                    if policy != "fair" else None
             comp_dirty.clear()
             comp_resched.clear()
             touched.clear()

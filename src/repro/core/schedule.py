@@ -31,6 +31,7 @@ from repro.core import arrayanalytic
 from repro.core.cluster import Cluster
 from repro.core.fabric import nic_in, nic_out
 from repro.core.graph import MXDAG
+from repro.core.parallel import effective_workers, trial_map
 from repro.core.simulator import SimResult, simulate
 from repro.core.task import TaskKind
 
@@ -396,8 +397,13 @@ class MXDAGScheduler:
                  incremental_pipelining: bool = True,
                  placement: "Optional[PlacementScheduler]" = None,
                  try_routing: bool = False, engine: str = "auto",
-                 analytic: str = "auto"):
+                 analytic: str = "auto",
+                 workers: Optional[int] = None):
         self.try_pipelining = try_pipelining
+        # workers > 1 lets _best evaluate its independent DES candidates
+        # (the initial priority run and the fair floor) in forked worker
+        # processes; the chosen Schedule is bit-identical to serial.
+        self.workers = workers
         self.slack_eps = slack_eps
         self.memoize = memoize
         self.incremental_pipelining = incremental_pipelining
@@ -482,6 +488,17 @@ class MXDAGScheduler:
                 prio[n] = NONCRITICAL + rank[rs] / denom
         return prio
 
+    @staticmethod
+    def _sim_key(sig, policy: str, prio: dict[str, float],
+                 routes: Optional[dict]):
+        # prio key in dict-insertion order: every producer builds the
+        # map in a deterministic per-graph order, so equal content ⇒
+        # equal key in practice, and a differently-ordered duplicate
+        # only costs a cache miss (re-simulating is always correct) —
+        # while skipping the O(n log n) sort per memo lookup
+        return (sig, policy, tuple(prio.items()),
+                tuple(sorted(routes.items())) if routes else None)
+
     def _sim(self, g: MXDAG, cluster: Optional[Cluster],
              cache: Optional[dict], policy: str, prio: dict[str, float],
              routes: Optional[dict] = None, sig=None) -> SimResult:
@@ -494,13 +511,7 @@ class MXDAGScheduler:
         if sig is None:
             sig_ids = cache.setdefault("sig_ids", {})
             sig = sig_ids.setdefault(g.signature(), len(sig_ids))
-        # prio key in dict-insertion order: every producer builds the
-        # map in a deterministic per-graph order, so equal content ⇒
-        # equal key in practice, and a differently-ordered duplicate
-        # only costs a cache miss (re-simulating is always correct) —
-        # while skipping the O(n log n) sort per memo lookup
-        key = (sig, policy, tuple(prio.items()),
-               tuple(sorted(routes.items())) if routes else None)
+        key = self._sim_key(sig, policy, prio, routes)
         res = cache.get(key)
         if res is None:
             res = simulate(g, cluster, policy=policy, priorities=prio,
@@ -512,6 +523,7 @@ class MXDAGScheduler:
     def _best(self, g: MXDAG, cluster: Optional[Cluster],
               cache: Optional[dict] = None,
               routes: Optional[dict] = None,
+              workers: Optional[int] = None,
               ) -> tuple[str, dict[str, float], float, SimResult]:
         """Principle 1 with its own caveat enforced.
 
@@ -551,6 +563,30 @@ class MXDAGScheduler:
         prio = self._priorities_from(names, slack)
         cands: list[tuple[str, dict[str, float], float, SimResult]] = []
         cur = dict(prio)
+        # Speculative parallel start: the fair-floor run never depends
+        # on the promote loop, so with workers>1 the first priority run
+        # and the fair run evaluate in concurrent forked processes and
+        # land in the memo cache; the loop below then hits the cache for
+        # its first iteration and any later promotions stay serial (each
+        # depends on the previous run's finish times).  Skipped when the
+        # initial classes are all-critical — there the single-class
+        # shortcut below makes the fair run free, and forking would
+        # *add* a redundant DES.  Results are bit-identical to serial:
+        # the same two (policy, priorities) runs feed the same argmin.
+        if workers is None:
+            workers = self.workers
+        fair: Optional[SimResult] = None
+        if effective_workers(workers) > 1 and cache is not None and not (
+                cur and self._use_array_analytic(g)
+                and all(v == CRITICAL for v in cur.values())):
+            spec = [("priority", dict(cur)), ("fair", {})]
+            out = trial_map(
+                lambda i: self._sim(g, cluster, None, spec[i][0],
+                                    spec[i][1], routes),
+                range(len(spec)), workers, label="_best candidates")
+            for (pol, pr), r in zip(spec, out):
+                cache.setdefault(self._sim_key(sig, pol, pr, routes), r)
+            fair = out[1]
         for _ in range(len(g.tasks)):
             res = sim("priority", cur)
             cands.append(("priority", dict(cur), res.makespan, res))
@@ -563,11 +599,12 @@ class MXDAGScheduler:
                 break
             for n in late:
                 cur[n] = CRITICAL
-        if cur and self._use_array_analytic(g) \
-                and all(v == CRITICAL for v in cur.values()):
-            fair = res                   # single class ≡ fair (see above)
-        else:
-            fair = sim("fair", {})
+        if fair is None:
+            if cur and self._use_array_analytic(g) \
+                    and all(v == CRITICAL for v in cur.values()):
+                fair = res               # single class ≡ fair (see above)
+            else:
+                fair = sim("fair", {})
         cands.append(("fair", {}, fair.makespan, fair))
         return min(cands, key=lambda c: (c[2], c[0] == "fair"))
 

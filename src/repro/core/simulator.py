@@ -338,16 +338,23 @@ class Simulator:
             self.__dict__["_res_map"] = res
         return res
 
-    def run(self, horizon: float = 1e15) -> SimResult:
-        """Simulate to completion with the configured engine."""
+    def run(self, horizon: float = 1e15, *,
+            batch: bool = True) -> SimResult:
+        """Simulate to completion with the configured engine.
+
+        ``batch=False`` makes the array engine process events strictly
+        one at a time (the pre-mega-batch loop, kept as the batched
+        loop's differential oracle); calendar/reference engines ignore
+        it.  Results are bit-identical either way.
+        """
         if self.engine == "calendar":
             return self.calendar_run(horizon)
         if self.engine == "reference":
             return self._reference_run(horizon)
         from repro.core.arraysim import array_run
-        return array_run(self, horizon)
+        return array_run(self, horizon, batch=batch)
 
-    def resumable(self, horizon: float = 1e15):
+    def resumable(self, horizon: float = 1e15, *, batch: bool = True):
         """A pausable array-engine session over this simulation.
 
         Returns a :class:`~repro.core.arraysim.ResumableSim`: the same
@@ -355,10 +362,12 @@ class Simulator:
         pause/mutate/resume, checkpoint/restore, and the fault-model
         mutators (kill_host, scale_link, set_speed, move_task,
         repath_flow, set_priorities) used by :mod:`repro.core.nemesis`.
-        With no mutations applied it is bit-exact against :meth:`run`.
+        With no mutations applied it is bit-exact against :meth:`run`;
+        ``batch=False`` selects the per-event oracle loop as in
+        :meth:`run`.
         """
         from repro.core.arraysim import ResumableSim
-        return ResumableSim(self, horizon)
+        return ResumableSim(self, horizon, batch=batch)
 
     # ------------------------------------------------------------------
     # incremental event-calendar core (see module docstring invariants)

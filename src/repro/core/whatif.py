@@ -16,6 +16,7 @@ from typing import Mapping, Optional, Sequence
 
 from repro.core.cluster import Cluster
 from repro.core.graph import MXDAG
+from repro.core.parallel import trial_map
 from repro.core.schedule import MXDAGScheduler
 from repro.core.task import MXTask, TaskKind
 
@@ -122,6 +123,34 @@ class WhatIf:
             g.set_pipelined(s, d, True)
         return WhatIfResult(self.baseline(), self._makespan(g))
 
+    def _sweep(self, graphs: Sequence[MXDAG], workers: Optional[int],
+               label: str) -> list[float]:
+        """Evaluate variant graphs, optionally across worker processes.
+
+        The baseline is evaluated first so forked workers inherit the
+        warm schedule/compile caches copy-on-write.  Trials are
+        dispatched by index and collected in index order, so the result
+        list is bit-identical to the serial sweep no matter which worker
+        finishes first; the parent cache is backfilled afterwards so
+        later queries reuse the sweep even though each child's own cache
+        dies with it.
+        """
+        self.baseline()
+        vals = trial_map(lambda i: self._makespan(graphs[i]),
+                         range(len(graphs)), workers, label=label)
+        ck = self._cluster_key(self.cluster)
+        for g, ms in zip(graphs, vals):
+            self._cache[((g.signature(), ck), None)] = ms
+        return vals
+
+    def _unit_graph(self, task: str, unit: Optional[float]) -> MXDAG:
+        g = self.graph.copy()
+        t = g.tasks[task]
+        if unit is not None and t.size > 0:
+            unit = min(unit, t.size)
+        g.replace_task(dataclasses.replace(t, unit=unit))
+        return g
+
     def set_unit(self, task: str, unit: Optional[float]) -> WhatIfResult:
         """Change a task's pipeline unit (chunk) size.
 
@@ -132,17 +161,22 @@ class WhatIf:
         chunking were coarser" instead of crashing mid-sweep on
         MXTask's ``unit <= size`` validation.
         """
-        g = self.graph.copy()
-        t = g.tasks[task]
-        if unit is not None and t.size > 0:
-            unit = min(unit, t.size)
-        g.replace_task(dataclasses.replace(t, unit=unit))
+        g = self._unit_graph(task, unit)    # validate before simulating
         return WhatIfResult(self.baseline(), self._makespan(g))
 
     def sweep_unit(self, task: str, units: Sequence[float],
+                   workers: Optional[int] = None,
                    ) -> list[tuple[float, float]]:
-        """Makespan as a function of the unit size — pick the knee."""
-        return [(u, self.set_unit(task, u).variant) for u in units]
+        """Makespan as a function of the unit size — pick the knee.
+
+        ``workers`` > 1 fans the trials across forked processes (one
+        schedule+DES per unit); the returned list is bit-identical to
+        the serial sweep.
+        """
+        units = list(units)
+        vals = self._sweep([self._unit_graph(task, u) for u in units],
+                           workers, f"sweep_unit({task})")
+        return list(zip(units, vals))
 
     def resize_fabric(self, scale: Optional[float] = None, *,
                       links: Optional[Mapping[str, float]] = None,
@@ -173,6 +207,10 @@ class WhatIf:
         with *other* compute producers/consumers keeps its endpoint (its
         data still lands where the tasks that stay behind are).
         """
+        g = self._move_graph(task, host)    # validate before simulating
+        return WhatIfResult(self.baseline(), self._makespan(g))
+
+    def _move_graph(self, task: str, host: str) -> MXDAG:
         g = self.graph.copy()
         t = g.tasks[task]
         if t.kind is not TaskKind.COMPUTE:
@@ -189,7 +227,50 @@ class WhatIf:
         for fname, side in follow_moves(g, task, host).items():
             g.replace_task(dataclasses.replace(g.tasks[fname],
                                                **{side: host}))
-        return WhatIfResult(self.baseline(), self._makespan(g))
+        return g
+
+    def sweep_moves(self, task: str, hosts: Sequence[str],
+                    workers: Optional[int] = None,
+                    ) -> list[tuple[str, float]]:
+        """Makespan of running ``task`` on each candidate host.
+
+        Validation (unknown host, missing proc pool) happens up front in
+        the parent, so a bad candidate raises before any worker forks.
+        """
+        hosts = list(hosts)
+        vals = self._sweep([self._move_graph(task, h) for h in hosts],
+                           workers, f"sweep_moves({task})")
+        return list(zip(hosts, vals))
+
+    def sweep_routes(self, flow: str,
+                     routes: Optional[Sequence[Sequence[str]]] = None,
+                     workers: Optional[int] = None,
+                     ) -> list[tuple[tuple[str, ...], float]]:
+        """Makespan of sending ``flow`` over each candidate route.
+
+        ``routes`` defaults to the fabric's candidate paths for the
+        flow's endpoints.  The Schedule is shared across the sweep (a
+        route override changes only the DES), so each trial is one
+        simulation; ``workers`` fans those across processes.
+        """
+        t = self.graph.tasks[flow]
+        if t.kind is not TaskKind.NETWORK:
+            raise ValueError(f"{flow}: only network tasks are routed")
+        if routes is None:
+            if self.cluster is None:
+                raise ValueError("sweep_routes needs explicit routes or a "
+                                 "cluster with a fabric Topology")
+            routes = self.cluster.candidate_routes(t)
+        cands = [tuple(r) for r in routes]
+        self.baseline()
+        vals = trial_map(
+            lambda i: self._makespan(self.graph, routes={flow: cands[i]}),
+            range(len(cands)), workers, label=f"sweep_routes({flow})")
+        base_key = (self.graph.signature(),
+                    self._cluster_key(self.cluster))
+        for r, ms in zip(cands, vals):
+            self._cache[(base_key, ((flow, r),))] = ms
+        return list(zip(cands, vals))
 
     def reroute_flow(self, flow: str,
                      route: Sequence[str]) -> WhatIfResult:

@@ -1,0 +1,159 @@
+"""Parallel what-if sweeps and scheduler candidates.
+
+Pins the three guarantees of :mod:`repro.core.parallel`:
+
+1. **determinism** — ``trial_map`` returns results in trial order no
+   matter which worker finishes first, so ``workers=N`` sweeps and
+   ``MXDAGScheduler(workers=N)`` schedules are bit-identical to serial
+   (including which candidate wins a makespan tie);
+2. **crash containment** — a dying worker breaks the pool, the missing
+   trials re-run serially with a :class:`RuntimeWarning`, and nothing
+   hangs or is silently dropped;
+3. **graceful degradation** — ``workers<=1`` or a fork-less platform is
+   the plain serial loop.
+
+Everything here is stdlib-only (runs in the numpy-free core lane).
+"""
+import multiprocessing
+import os
+import warnings
+
+import pytest
+
+from repro.core import builders
+from repro.core.parallel import cpu_count, effective_workers, trial_map
+from repro.core.schedule import MXDAGScheduler
+from repro.core.whatif import WhatIf
+
+HAVE_FORK = "fork" in multiprocessing.get_all_start_methods()
+needs_fork = pytest.mark.skipif(not HAVE_FORK,
+                                reason="platform has no fork start method")
+
+
+class TestTrialMap:
+    def test_serial_path(self):
+        assert trial_map(lambda x: x * 2, [3, 1, 2]) == [6, 2, 4]
+        assert trial_map(lambda x: x * 2, [3, 1, 2], workers=1) == [6, 2, 4]
+        assert trial_map(lambda x: x, []) == []
+
+    @needs_fork
+    def test_parallel_order_matches_input(self):
+        # later trials finish first (reverse sleep) — results must still
+        # come back in input order
+        import time
+
+        def trial(i):
+            time.sleep(0.02 * (4 - i))
+            return i * 10
+        assert trial_map(trial, range(5), workers=4) == \
+            [0, 10, 20, 30, 40]
+
+    @needs_fork
+    def test_closure_over_unpicklable_state(self):
+        # the trial fn travels via fork, never pickle: closures over
+        # arbitrary objects (graphs, schedulers, lambdas) are fine
+        hidden = {"fn": lambda x: x + 1}
+        out = trial_map(lambda i: hidden["fn"](i), range(4), workers=2)
+        assert out == [1, 2, 3, 4]
+
+    @needs_fork
+    def test_worker_crash_falls_back_serially(self):
+        parent = os.getpid()
+
+        def trial(i):
+            if i == 1 and os.getpid() != parent:
+                os._exit(17)        # hard crash, only ever in a worker
+            return i * 10
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            out = trial_map(trial, range(4), workers=2)
+        assert out == [0, 10, 20, 30]
+        assert any("worker pool failed" in str(r.message) for r in rec)
+
+    def test_effective_workers(self):
+        assert effective_workers(None) == 1
+        assert effective_workers(0) == 1
+        assert effective_workers(1) == 1
+        if HAVE_FORK:
+            assert effective_workers(4) == 4
+        assert cpu_count() >= 1
+
+
+@needs_fork
+class TestSweepsBitIdentical:
+    def test_sweep_unit(self):
+        g = builders.mapreduce("mr", 8, 8)
+        task = next(iter(g.tasks))
+        units = [0.25, 0.5, 1.0, 2.0, None]
+        serial = WhatIf(g).sweep_unit(task, units)
+        par = WhatIf(g).sweep_unit(task, units, workers=3)
+        assert par == serial
+
+    def test_sweep_moves(self):
+        g = builders.mapreduce("mr", 6, 6)
+        task = next(n for n, t in g.tasks.items()
+                    if t.host is not None)
+        hosts = sorted({t.host for t in g.tasks.values()
+                        if isinstance(t.host, str)})[:4]
+        serial = WhatIf(g).sweep_moves(task, hosts)
+        par = WhatIf(g).sweep_moves(task, hosts, workers=2)
+        assert par == serial
+
+    def test_sweep_routes(self):
+        g, cl = builders.fat_tree_shuffle(4, stride=2)
+        wi_s, wi_p = WhatIf(g, cl), WhatIf(g, cl)
+        flow = next(n for n, t in g.tasks.items()
+                    if t.src is not None)
+        serial = wi_s.sweep_routes(flow)
+        par = wi_p.sweep_routes(flow, workers=2)
+        assert par == serial
+        assert len(serial) >= 1
+
+    def test_sweep_backfills_cache(self):
+        # after a parallel sweep the parent answers the same queries
+        # from cache (children's caches die with them)
+        g = builders.mapreduce("mr", 6, 6)
+        task = next(iter(g.tasks))
+        wi = WhatIf(g)
+        swept = dict(wi.sweep_unit(task, [0.5, 1.0], workers=2))
+        n_keys = len(wi._cache)
+        assert wi.set_unit(task, 0.5).variant == swept[0.5]
+        assert len(wi._cache) == n_keys        # no new simulation
+
+
+class TestBestWorkers:
+    def _schedules_equal(self, a, b):
+        assert a.policy == b.policy
+        assert a.priorities == b.priorities
+        assert a.releases == b.releases
+        assert a.simulate().makespan == b.simulate().makespan
+
+    @needs_fork
+    def test_schedule_identical_on_tie(self):
+        # a symmetric shuffle: priority and fair tie on makespan, and
+        # the serial argmin prefers "priority" — the parallel candidate
+        # evaluation must agree on the winner, not just the value
+        g = builders.mapreduce("mr", 8, 8)
+        ser = MXDAGScheduler(try_pipelining=False).schedule(g)
+        par = MXDAGScheduler(try_pipelining=False,
+                             workers=2).schedule(g)
+        self._schedules_equal(ser, par)
+        assert par.policy == "priority"
+
+    @needs_fork
+    def test_schedule_identical_with_promotions(self):
+        # layered DAG with real non-critical classes: the promote loop
+        # may iterate; only the speculative first round is parallel
+        g = builders.random_layered(300, n_hosts=16, min_width=4,
+                                    max_width=16, seed=5)
+        ser = MXDAGScheduler(try_pipelining=False).schedule(g)
+        par = MXDAGScheduler(try_pipelining=False,
+                             workers=2).schedule(g)
+        self._schedules_equal(ser, par)
+
+    def test_workers_none_is_serial(self):
+        g = builders.mapreduce("mr", 6, 6)
+        self._schedules_equal(
+            MXDAGScheduler(try_pipelining=False).schedule(g),
+            MXDAGScheduler(try_pipelining=False,
+                           workers=None).schedule(g))
