@@ -17,8 +17,11 @@ shuffle — stopped beating its fixed baseline), ``*.mxdag_wins``
 scenario — see benchmarks/bakeoff.py; the headline claim of the
 reproduction, gated like any other correctness row), ``*.replan_wins``
 (live replanning stopped strictly beating the no-replan arm on a
-fault-injection scenario — see benchmarks/nemesis.py) and
-``*.detected`` (the replan controller missed an injected fault).  ``scale.speedup_array_*``
+fault-injection scenario — see benchmarks/nemesis.py), ``*.detected``
+(the replan controller missed an injected fault) and ``*.no_worse``
+(the *cost-aware* controller arm lost to doing nothing — the analytic
+worth-it model exists precisely so speculation never makes a scenario
+worse, ``layered_rand`` included).  ``scale.speedup_array_*``
 rows (flat-array engine vs the event-calendar core on the Graphene-scale
 scenarios, including the ddl(1024) serial-chain trickle that
 component-level reallocation + coalesced completion events lifted from
@@ -284,6 +287,14 @@ def main(argv=None) -> int:
             elif bench[name] != 1.0:
                 failures.append(f"{name}: the controller missed an "
                                 f"injected fault")
+            continue
+        if name.endswith(".no_worse"):
+            if name not in bench:
+                failures.append(f"{name}: cost-model row missing from "
+                                f"bench output (check never ran)")
+            elif bench[name] != 1.0:
+                failures.append(f"{name}: the cost-aware controller "
+                                f"lost to doing nothing")
             continue
         floor = speedup_floor(name)
         if floor is not None:

@@ -831,6 +831,26 @@ def vectorized_waterfill(group, paths, weight, residual, rates):
     return seq
 
 
+class ResurrectConflict(RuntimeError):
+    """``resurrect`` refused: started consumers hold the task's output.
+
+    Raised when un-finishing a task whose data is still being consumed
+    by one or more *started, unfinished* tasks — they would be running
+    on data that no longer exists.  ``task`` names the resurrection
+    target and ``consumers`` every offending consumer (sorted), so a
+    lineage-closure caller (``kill_host``) can kill exactly those
+    consumers and retry.
+    """
+
+    def __init__(self, task: str, consumers):
+        self.task = task
+        self.consumers = tuple(consumers)
+        super().__init__(
+            f"resurrect({task}): consumer(s) "
+            f"{', '.join(self.consumers)} running on its output — "
+            f"kill them first")
+
+
 def array_run(sim, horizon: float = 1e15, batch: bool = True):
     """Run ``sim`` to completion on the compiled flat arrays.
 
@@ -900,8 +920,14 @@ class ResumableSim:
     exactly the passes one event iteration runs) before the next
     advance.  ``checkpoint``/``restore`` snapshot the whole mutable
     state so scenario arms can fork from one shared pre-fault prefix.
-    Coflow-coupled tasks cannot be resurrected (MADD bookkeeping is not
-    rewound); fault scenarios avoid killing them after completion.
+    Resurrecting a coflow member rewinds the group's MADD bookkeeping:
+    the unfinished-member count re-opens, and when the group had
+    already completed, its consumers' start gates are restored (the
+    all-or-nothing output is no longer complete) — so fault scenarios
+    may kill coflow-coupled lineage freely.  Started consumers of a
+    resurrection target raise :class:`ResurrectConflict` (naming every
+    offender); ``kill_host`` catches it and kills exactly those
+    consumers before retrying.
     """
 
     def __init__(self, sim, horizon: float = 1e15, batch: bool = True):
@@ -2134,25 +2160,46 @@ class ResumableSim:
         def resurrect(i: int) -> None:
             """Un-finish a task whose output data was lost: restore its
             consumers' gate counters and reset it to unstarted.  Started
-            consumers must be killed first (they would be running on
-            data that no longer exists)."""
+            barrier/coflow consumers raise :class:`ResurrectConflict`
+            (they would be running on data that no longer exists; the
+            exception names all of them so the caller can kill exactly
+            those and retry).  For a coflow member the group's MADD
+            bookkeeping is rewound: ``cof_left`` re-opens, and when the
+            group had completed, every start gate its all-or-nothing
+            output had released is re-armed.  Started *streaming*
+            consumers are handled like ``kill`` handles them — their
+            caps shrink back to the (now zero) delivered units and they
+            stall until re-delivery."""
             nonlocal unfinished, needs_settle
             if finished[i] is None:
                 return
             if inc_bylink:
                 inc_bylink.clear()     # non-incremental runnable edit
-            if coflow_of[i] >= 0 or comp.coflow_fed_by[i]:
-                raise NotImplementedError(
-                    f"cannot resurrect coflow-coupled task {names[i]}")
-            for s in gate_dec[i]:
-                if started[s] is not None and finished[s] is None:
-                    raise RuntimeError(
-                        f"resurrect({names[i]}): consumer {names[s]} "
-                        f"is running on its output — kill it first")
+            ci = coflow_of[i]
+            group_done = ci >= 0 and cof_left[ci] == 0
+            # gate_dec[i] holds every counter i's own completion
+            # decremented (barrier successors + member-sync gates of
+            # coflows i feeds); a completed group's cof_dec adds the
+            # consumers its *group* completion released
+            held = set(gate_dec[i])
+            if group_done:
+                held.update(comp.cof_dec[ci])
+            running = sorted(
+                names[s] for s in held
+                if started[s] is not None and finished[s] is None)
+            if running:
+                raise ResurrectConflict(names[i], running)
             finished[i] = None
             unfinished += 1
             for s in gate_dec[i]:
                 n_gate[s] += 1
+            if ci >= 0:
+                if group_done:
+                    # mirror of the group-completion decrement: one per
+                    # member-pred edge in cof_dec (entries repeat)
+                    for t in comp.cof_dec[ci]:
+                        n_gate[t] += 1
+                cof_left[ci] += 1
             stamp[i] += 1
             started[i] = None
             work[i] = 0.0
@@ -2162,6 +2209,12 @@ class ResumableSim:
             starved[i] = False
             if not is_comp[i]:
                 starved_net[net_pos[i]] = False
+            for c in stream_out[i]:
+                if started[c] is not None and finished[c] is None:
+                    nc = recompute_cap(c)
+                    if nc != cap[c]:
+                        cap[c] = nc
+                        touched.add(c)
             candidates.add(i)
             touched.discard(i)
             touched_sched.discard(i)
@@ -2332,8 +2385,11 @@ class ResumableSim:
             unfinished tasks, and resurrect the lineage closure —
             finished tasks whose output data resided there (computes
             placed on it, flows delivered to it) and is still needed by
-            an unfinished data consumer.  Returns the restarted task
-            names (sorted); the replanner must re-place/re-path them."""
+            an unfinished data consumer.  Started consumers of the
+            resurrected data (even on healthy hosts) are killed too —
+            they were running on output that no longer exists.  Returns
+            the restarted task names (sorted); the replanner must
+            re-place/re-path them."""
             nonlocal needs_settle
             resident: list[int] = []
             direct: set[int] = set()
@@ -2373,9 +2429,23 @@ class ResumableSim:
             for i in sorted(need):
                 if finished[i] is None:
                     kill(i)
+            idx = comp.idx
             for i in sorted(need):
-                if finished[i] is not None:
-                    resurrect(i)
+                while finished[i] is not None:
+                    try:
+                        resurrect(i)
+                    except ResurrectConflict as e:
+                        # a started consumer on a *healthy* host is
+                        # running on the data being resurrected: kill
+                        # exactly the named offenders (they join the
+                        # restarted set) and retry — each retry strictly
+                        # shrinks the running-consumer set, so this
+                        # terminates
+                        for nm in e.consumers:
+                            j = idx[nm]
+                            if finished[j] is None:
+                                kill(j)
+                            need.add(j)
             for (h, _proc), si in slot_ids_run.items():
                 if h == host:
                     slots_free[si] = 0

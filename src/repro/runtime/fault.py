@@ -91,7 +91,8 @@ class LoopConfig:
 
 def recovery_drill(schedule, cluster, *, faults=None, n_faults: int = 2,
                    seed: int = 0, probe_every: float = 0.5,
-                   horizon: float = 1e9) -> dict:
+                   horizon: float = 1e9, campaign: str = "random",
+                   cost_aware: bool = False) -> dict:
     """Game-day drill for a step schedule: inject faults into a live DES
     of the step MXDAG and measure recovery with vs without replanning.
 
@@ -99,36 +100,66 @@ def recovery_drill(schedule, cluster, *, faults=None, n_faults: int = 2,
     :class:`~repro.core.schedule.Schedule` of one training step (the
     same graph a :class:`StepMonitor` attributes stragglers on), it
     derives a seeded fault schedule (when ``faults`` is not given),
-    runs the no-replan and replan arms, and returns a comparable
-    summary — what an SRE would ask of the runtime before trusting it:
-    *if a host dies mid-step, does the controller notice, and what does
-    the step time become?*
+    runs the no-replan, replan, and cost-aware-replan arms, and returns
+    a comparable summary — what an SRE would ask of the runtime before
+    trusting it: *if a host dies mid-step, does the controller notice,
+    and what does the step time become?*
 
-    :returns: dict with ``no_replan``/``replan`` makespans, the fault
-        list, ``detection_rate``, ``recovered``, and the markdown
-        recovery ``report``.
+    :param campaign: shape of the derived fault schedule when
+        ``faults`` is not given — ``"random"`` (independent faults
+        spread over the step, :func:`~repro.core.nemesis.random_faults`)
+        or ``"storm"`` (distinct overlapping faults packed into a tight
+        window, :func:`~repro.core.nemesis.fault_storm`; on a fabric
+        cluster the storm mix also samples correlated ``rack_loss``
+        blast-radius faults).
+    :param cost_aware: run the *replan* arm with the cost-aware
+        controller (analytic worth-it model, hysteresis, bounded
+        speculation budget) instead of the always-act one; the
+        always-act arm is still reported as ``replan`` and the chosen
+        arm's makespan as ``cost_replan``.
+    :returns: dict with ``no_replan``/``replan``/``cost_replan``
+        makespans, the fault list, ``detection_rate``, ``recovered``,
+        and the markdown recovery ``report``.
     """
-    from repro.core.nemesis import Nemesis, random_faults
+    from repro.core.nemesis import (BASE_FAULT_KINDS, Nemesis,
+                                    fault_storm, random_faults,
+                                    tor_groups)
 
     expected = schedule.simulate(cluster)
     if faults is None:
-        faults = random_faults(schedule.graph, cluster,
-                               horizon=expected.makespan,
-                               n=n_faults, seed=seed)
+        if campaign == "storm":
+            kinds = BASE_FAULT_KINDS
+            if tor_groups(cluster):
+                kinds = kinds + ("rack_loss",)
+            faults = fault_storm(schedule.graph, cluster,
+                                 horizon=expected.makespan,
+                                 n=n_faults, seed=seed, kinds=kinds)
+        elif campaign == "random":
+            faults = random_faults(schedule.graph, cluster,
+                                   horizon=expected.makespan,
+                                   n=n_faults, seed=seed)
+        else:
+            raise ValueError(f"unknown campaign {campaign!r} "
+                             "(want 'random' or 'storm')")
     arm_no = Nemesis(schedule, cluster, faults=faults, replan=False,
                      probe_every=probe_every,
                      expected=expected).run(horizon)
     arm_yes = Nemesis(schedule, cluster, faults=faults, replan=True,
                       probe_every=probe_every,
                       expected=expected).run(horizon)
+    arm_cost = (Nemesis(schedule, cluster, faults=faults, replan=True,
+                        probe_every=probe_every, expected=expected,
+                        cost_aware=True).run(horizon)
+                if cost_aware else arm_yes)
     return {
         "baseline": expected.makespan,
         "faults": [dataclasses.asdict(f) for f in faults],
         "no_replan": arm_no.makespan,
         "replan": arm_yes.makespan,
-        "detection_rate": arm_yes.detection_rate,
-        "recovered": arm_yes.completed,
-        "report": arm_yes.tracker.report(),
+        "cost_replan": arm_cost.makespan,
+        "detection_rate": arm_cost.detection_rate,
+        "recovered": arm_cost.completed,
+        "report": arm_cost.tracker.report(),
     }
 
 

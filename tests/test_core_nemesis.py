@@ -12,19 +12,52 @@ Three layers under test:
 3. The :class:`Nemesis` harness + :class:`ReplanController` must detect
    every injected fault and strictly beat the no-replan arm on the
    oversubscribed recovery scenarios.
+4. Coflow-coupled resurrection: killing a finished coflow member
+   rewinds the MADD group bookkeeping bit-exactly (differential against
+   a fresh sim built in the post-fault state), and refusals name the
+   offending consumers.
+5. Cascade campaigns (rack blast radius, flapping links, fault storms)
+   and the cost-aware replanner (worth-it vetoes, budgets).
+
+The property tests run under hypothesis when the environment ships it
+and fall back to a seeded parametrize sweep when it does not.
 """
+import dataclasses
 import math
+import random
 
 import pytest
 
 from repro.core import builders
 from repro.core.arraysim import ResumableSim, array_run
 from repro.core.cluster import Cluster
+from repro.core.fabric import is_nic_link
+from repro.core.graph import MXDAG
 from repro.core.nemesis import (
-    Fault, Nemesis, RecoveryTracker, random_faults,
+    BASE_FAULT_KINDS, Fault, Nemesis, RecoveryTracker, fault_storm,
+    flapping_link, rack_blast, random_faults, tor_groups,
 )
-from repro.core.schedule import MXDAGScheduler
+from repro.core.schedule import MXDAGScheduler, auto_coflows
 from repro.core.simulator import Simulator
+from repro.core.task import TaskKind
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                               # container may not ship it
+    HAVE_HYPOTHESIS = False
+
+
+def seeded_property(n_examples):
+    """``@given`` a random seed under hypothesis; otherwise a seeded
+    ``parametrize`` sweep — same driver, deterministic fallback."""
+    def deco(fn):
+        if HAVE_HYPOTHESIS:
+            return settings(max_examples=n_examples, deadline=None)(
+                given(seed=st.integers(min_value=0, max_value=2**32 - 1))(fn))
+        return pytest.mark.parametrize("seed", range(n_examples))(fn)
+    return deco
 
 
 def scenarios():
@@ -419,6 +452,367 @@ class TestNemesisRecovery:
         t = RecoveryTracker()
         assert t.detection_rate() == 1.0
         assert t.recovery_rate() == 1.0
+
+
+class TestCoflowResurrect:
+    """Coflow-coupled resurrection: killing finished members of a MADD
+    group rewinds gate counts and group membership exactly."""
+
+    T = 2.5        # reducers are half done (they run 2.0 -> 3.0)
+
+    def mk(self):
+        g = builders.mapreduce("mr", 2, 2)
+        cl = Cluster.for_graph(g)
+        return g, cl, ResumableSim(Simulator(g, cl,
+                                             coflows=auto_coflows(g)))
+
+    def test_reducer_host_loss_differential_vs_fresh(self):
+        """The acceptance oracle: after rewinding a finished shuffle
+        group and replaying recovery, the mutated sim must agree
+        *bit-exactly* with a fresh sim constructed in the post-fault
+        state (all sizes dyadic, so float equality is meaningful)."""
+        g, cl, rs = self.mk()
+        rs.run_until(self.T)
+        rs.advance_to(self.T)
+        restarted = rs.kill_host("mr.R1")
+        # r1's inputs were delivered to the dead host: the finished
+        # coflow group {s0_1, s1_1} is resurrected alongside r1
+        assert set(restarted) == {"mr.r1", "mr.s0_1", "mr.s1_1"}
+        # recovery: rerun r1 on the idle mapper host M0, re-fetch there
+        rs.move_task("mr.r1", "mr.M0")
+        for f in ("mr.s0_1", "mr.s1_1"):
+            src, _ = rs.flow_ends(f)
+            rs.repath_flow(f, (f"{src}.nic_out", "mr.M0.nic_in"),
+                           reset=True, dst="mr.M0")
+        assert rs.run_until(math.inf) == "done"
+        res = rs.result()
+
+        # fresh-sim oracle built from the post-fault state: r0 at its
+        # remaining size, r1 + its shuffle group from scratch on M0
+        g2 = MXDAG("post")
+        g2.add(dataclasses.replace(g.tasks["mr.r0"], size=0.5))
+        g2.add(dataclasses.replace(g.tasks["mr.r1"], host="mr.M0"))
+        for f in ("mr.s0_1", "mr.s1_1"):
+            g2.add(dataclasses.replace(g.tasks[f], dst="mr.M0"))
+            g2.add_edge(f, "mr.r1")
+        fresh = array_run(Simulator(g2, cl,
+                                    coflows=[{"mr.s0_1", "mr.s1_1"}]))
+        for n in g2.tasks:
+            assert res.finish[n] == self.T + fresh.finish[n]
+
+    def test_resurrect_conflict_names_started_consumers(self):
+        # resolve the class through the module at call time: the numpy
+        # fallback test reloads arraysim, invalidating import-time
+        # class identity
+        from repro.core.arraysim import ResurrectConflict
+
+        g, cl, rs = self.mk()
+        rs.run_until(1.5)
+        rs.advance_to(1.5)           # shuffle flows mid-flight
+        with pytest.raises(ResurrectConflict) as ei:
+            rs.kill_task("mr.m1")
+        e = ei.value
+        assert e.task == "mr.m1"
+        # member-synchronized gating: every started shuffle flow runs
+        # on m1's barrier, so every one of them is named
+        assert set(e.consumers) == {"mr.s0_0", "mr.s0_1",
+                                    "mr.s1_0", "mr.s1_1"}
+        for c in e.consumers:
+            assert c in str(e)
+        assert isinstance(e, RuntimeError)
+        # the refusal left the sim untouched: it completes clean
+        assert rs.run_until(math.inf) == "done"
+        assert rs.result().makespan == 3.0
+
+    def test_kill_host_autokills_consumers_and_resyncs(self):
+        g, cl, rs = self.mk()
+        rs.run_until(1.5)
+        rs.advance_to(1.5)
+        restarted = rs.kill_host("mr.M1")
+        # lineage closure caught the ResurrectConflict, killed exactly
+        # the started consumers, and retried
+        assert set(restarted) == {"mr.m1", "mr.s0_0", "mr.s0_1",
+                                  "mr.s1_0", "mr.s1_1"}
+        # recovery: rerun m1 on a reducer host (idle until shuffles land)
+        rs.move_task("mr.m1", "mr.R0")
+        for f in ("mr.s1_0", "mr.s1_1"):
+            _, dst = rs.flow_ends(f)
+            rs.repath_flow(f, ("mr.R0.nic_out", f"{dst}.nic_in"),
+                           src="mr.R0")
+        assert rs.run_until(math.inf) == "done"
+        # group membership survived the rewind: all four flows restart
+        # member-synchronized once m1's barrier re-opens at t=2.5
+        starts = {rs.started_at(f) for f in
+                  ("mr.s0_0", "mr.s0_1", "mr.s1_0", "mr.s1_1")}
+        assert len(starts) == 1
+        assert starts.pop() == pytest.approx(2.5)
+
+
+def _storm_mutate(rs, rng, hosts, links, tasks):
+    """Apply one random mutator; preconditions may legitimately refuse
+    (finished consumers, dead hosts, missing pools) — refusals are part
+    of the surface under test and must not corrupt state."""
+    op = rng.randrange(6)
+    try:
+        if op == 0:
+            rs.kill_task(rng.choice(tasks))
+        elif op == 1:
+            rs.kill_host(rng.choice(hosts))
+        elif op == 2:
+            rs.scale_link(rng.choice(links), rng.choice([0.25, 0.5]))
+        elif op == 3:
+            link = rng.choice(links)
+            rs.set_link_bw(link, rs.link_capacity(link) or 1.0)
+        elif op == 4:
+            rs.set_speed(rng.choice(tasks), rng.choice([0.25, 0.5, 1.0]))
+        else:
+            task, host = rng.choice(tasks), rng.choice(hosts)
+            rs.move_task(task, host)
+    except (ValueError, KeyError, RuntimeError):
+        pass
+
+
+class TestMutatorStorms:
+    """Property tests: checkpoint isolation under arbitrary mutator
+    storms, and mutator/spec equivalence against fresh sims."""
+
+    def _fork_scenarios(self):
+        def fanin():
+            g, cl = builders.oversubscribed_fanin(4, oversubscription=2.0)
+            return g, cl, Simulator(g, cl)
+
+        def mr_coflows():
+            g = builders.mapreduce("mr", 2, 2)
+            cl = Cluster.for_graph(g)
+            return g, cl, Simulator(g, cl, coflows=auto_coflows(g))
+
+        return [fanin, mr_coflows]
+
+    @seeded_property(12)
+    def test_parent_replays_bit_exact_after_fork_storm(self, seed):
+        """A forked checkpoint absorbs an arbitrary mutator storm; the
+        restored parent must replay the unmutated run bit-exactly."""
+        for mk in self._fork_scenarios():
+            g, cl, sim = mk()
+            ref = array_run(mk()[2])
+            rs = ResumableSim(sim)
+            rs.run_until(0.5)
+            snap = rs.checkpoint()
+
+            rng = random.Random(seed)
+            hosts = sorted(cl.hosts)
+            links = sorted(
+                l for h in hosts for l in (f"{h}.nic_in", f"{h}.nic_out")
+            ) + sorted(cl.topology.links if cl.topology else ())
+            tasks = sorted(g.tasks)
+            t = 0.5
+            for _ in range(6):
+                t += rng.uniform(0.2, 0.6)
+                status = rs.run_until(t, allow_stall=True)
+                if status == "done":
+                    break
+                if status != "stalled":
+                    rs.advance_to(t)
+                _storm_mutate(rs, rng, hosts, links, tasks)
+            rs.run_until(1e6, allow_stall=True)     # fork may stall: fine
+
+            rs.restore(snap)
+            assert rs.run_until(math.inf) == "done"
+            res = rs.result()
+            assert res.finish == ref.finish
+            assert res.start == ref.start
+
+    @seeded_property(12)
+    def test_mutators_at_t0_match_fresh_sim_from_mutated_spec(self, seed):
+        """Moves, degradations and slowdowns applied at t=0 must land on
+        the same schedule as a fresh sim built from the mutated spec."""
+        rng = random.Random(seed)
+        g, cl = builders.oversubscribed_fanin(4, oversubscription=2.0)
+        topo = cl.topology
+        hosts = sorted(cl.hosts)
+
+        moves = {f"c{i}": rng.choice(hosts)
+                 for i in range(4) if rng.random() < 0.5}
+        speeds = {f"c{i}": rng.choice([0.25, 0.5])
+                  for i in range(4) if rng.random() < 0.4}
+        degr = {l: rng.choice([0.25, 0.5])
+                for l in rng.sample(sorted(topo.links),
+                                    k=rng.randrange(0, 3))}
+
+        rs = ResumableSim(Simulator(g, cl))
+        rs.run_until(0.0)
+        for task, h in moves.items():
+            rs.move_task(task, h)
+            fl = f"f{task[1:]}"              # fanin: f_i feeds c_i
+            src, _ = rs.flow_ends(fl)
+            rs.repath_flow(fl, topo.path(src, h), dst=h)
+        for task, f in speeds.items():
+            rs.set_speed(task, f)
+        for l, f in degr.items():
+            rs.set_link_bw(l, cl.bandwidth(l) * f)
+        assert rs.run_until(math.inf) == "done"
+        live = rs.result()
+
+        g2 = MXDAG("mutated")
+        for t in g.tasks.values():
+            if t.kind is TaskKind.COMPUTE:
+                t = dataclasses.replace(
+                    t, host=moves.get(t.name, t.host),
+                    size=t.size / speeds.get(t.name, 1.0))
+            else:
+                consumer = f"c{t.name[1:]}"
+                if consumer in moves:
+                    t = dataclasses.replace(t, dst=moves[consumer])
+            g2.add(t)
+        for e in g.edges.values():
+            g2.add_edge(e.src, e.dst, pipelined=e.pipelined)
+        cl2 = cl.degraded({l: cl.bandwidth(l) * f for l, f in degr.items()})
+        fresh = array_run(Simulator(g2, cl2))
+        # rerouted flows can leave non-dyadic waterfill shares (e.g. a
+        # 3-way split of 2.0), where the live path and the fresh path
+        # associate the same products differently — last-ulp only
+        assert live.finish.keys() == fresh.finish.keys()
+        for n in fresh.finish:
+            assert live.finish[n] == pytest.approx(fresh.finish[n],
+                                                   abs=1e-9)
+            assert live.start[n] == pytest.approx(fresh.start[n],
+                                                  abs=1e-9)
+
+
+def _loaded_fabric_link(g, cl):
+    """Most-traversed non-NIC link under static routing (bench's pick)."""
+    from collections import Counter
+    cnt = Counter()
+    for t in g.tasks.values():
+        if t.kind is TaskKind.NETWORK:
+            for l in cl.resources_for(t):
+                if not is_nic_link(l):
+                    cnt[l] += 1
+    return max(sorted(cnt), key=cnt.__getitem__)
+
+
+class TestCascadeCampaigns:
+    def coflow_shuffle(self):
+        g, cl = builders.fat_tree_shuffle(8, stride=2)
+        sched = MXDAGScheduler(try_pipelining=False).schedule(g, cl)
+        return g, cl, dataclasses.replace(sched, coflows=auto_coflows(g))
+
+    def test_tor_groups_and_rack_blast(self):
+        g, cl = builders.fat_tree_shuffle(8, stride=2)
+        groups = tor_groups(cl)
+        assert "p0.e0" in groups
+        hosts, links = rack_blast(cl, "p0.e0")
+        assert hosts and links
+        assert all(h.startswith("p0e0") for h in hosts)
+        assert all(l.startswith("p0.e0") for l in links)
+        with pytest.raises(ValueError):
+            rack_blast(cl, "nonexistent.switch")
+        # a big-switch cluster has no ToR structure to blast
+        assert tor_groups(Cluster.for_graph(builders.fig1_jobs())) == {}
+
+    def test_flapping_link_schedule(self):
+        fs = flapping_link("p0.e0a0.up", start=1.0, period=0.5,
+                           cycles=2, factor=0.25)
+        assert [f.kind for f in fs] == ["link_degrade", "link_recover",
+                                        "link_degrade", "link_recover"]
+        assert [f.time for f in fs] == [1.0, 1.25, 1.5, 1.75]
+        assert all(f.target == "p0.e0a0.up" for f in fs)
+        assert fs[0].factor == 0.25 and fs[1].factor == 1.0
+        with pytest.raises(ValueError):
+            flapping_link("l", start=0.0, period=0.0)
+        with pytest.raises(ValueError):
+            flapping_link("l", start=0.0, period=1.0, cycles=0)
+
+    def test_fault_storm_distinct_targets_in_window(self):
+        g, cl = builders.fat_tree_shuffle(8, stride=2)
+        fs = fault_storm(g, cl, horizon=4.0, n=4, seed=3)
+        assert len(fs) == 4
+        assert len({(f.kind, f.target) for f in fs}) == 4
+        assert all(0.2 * 4.0 <= f.time <= 0.4 * 4.0 + 1e-9 for f in fs)
+        assert all(f.kind in BASE_FAULT_KINDS for f in fs)
+        assert fs == fault_storm(g, cl, horizon=4.0, n=4, seed=3)
+        # opting into rack_loss draws from the ToR groups
+        fs2 = fault_storm(g, cl, horizon=4.0, n=4, seed=3,
+                          kinds=BASE_FAULT_KINDS + ("rack_loss",))
+        assert any(f.kind == "rack_loss" for f in fs2)
+
+    def test_rack_loss_recovery(self):
+        g, cl, sched = self.coflow_shuffle()
+        base = sched.simulate(cl).makespan
+        faults = [Fault(0.4 * base, "rack_loss", "p0.e0")]
+        no = Nemesis(sched, cl, faults=faults, replan=False,
+                     probe_every=0.25).run()
+        yes = Nemesis(sched, cl, faults=faults, replan=True,
+                      probe_every=0.25).run()
+        assert not no.completed            # stranded mappers: stalls
+        assert yes.completed and yes.makespan < math.inf
+        assert yes.detection_rate == 1.0
+        rec = yes.tracker.records[0]
+        assert "rack p0.e0" in rec.diagnosis
+        assert any(a[0] == "move_task" for a in rec.actions)
+
+    def test_storm_per_fault_attribution(self):
+        """Three simultaneously active faults: every record must carry
+        its *own* diagnosis, not the probe batch's union."""
+        g, cl, sched = self.coflow_shuffle()
+        base = sched.simulate(cl).makespan
+        link = _loaded_fabric_link(g, cl)
+        faults = [Fault(0.3 * base, "link_degrade", link, 0.05),
+                  Fault(0.45 * base, "host_loss", "p1e0h0"),
+                  Fault(0.5 * base, "straggler", "r5", 0.1)]
+        rep = Nemesis(sched, cl, faults=faults, replan=True,
+                      probe_every=0.25).run()
+        assert rep.completed and rep.detection_rate == 1.0
+        by_kind = {r.fault.kind: r for r in rep.tracker.records}
+        assert link in by_kind["link_degrade"].diagnosis
+        assert "r5" not in by_kind["link_degrade"].diagnosis
+        assert "p1e0h0" in by_kind["host_loss"].diagnosis
+        assert "r5" in by_kind["straggler"].diagnosis
+        assert link not in by_kind["straggler"].diagnosis
+
+
+class TestCostAwareReplan:
+    def sched_fanin(self, n=8, over=8.0):
+        g, cl = builders.oversubscribed_fanin(n, oversubscription=over)
+        return MXDAGScheduler(try_pipelining=False).schedule(g, cl), cl
+
+    def test_mild_straggler_move_is_vetoed(self):
+        """c0 at 0.6x with most of its work behind it: staying rides out
+        the mild slowdown; moving pays the full 8s restart. Always-act
+        loses to doing nothing; the cost model prices both arms on the
+        analytic critical path and declines the move."""
+        sched, cl = self.sched_fanin()
+        faults = [Fault(3.0, "straggler", "c0", 0.6)]
+        no = Nemesis(sched, cl, faults=faults, replan=False).run()
+        plain = Nemesis(sched, cl, faults=faults, replan=True).run()
+        nem = Nemesis(sched, cl, faults=faults, replan=True,
+                      cost_aware=True)
+        cost = nem.run()
+        assert plain.makespan > no.makespan + 1e-9
+        assert cost.makespan <= no.makespan + 1e-9
+        assert cost.detection_rate == 1.0          # seen, priced, declined
+        assert any("not worth it" in reason
+                   for _, _, reason in nem.controller.declined)
+
+    def test_severe_straggler_still_acted_on(self):
+        sched, cl = self.sched_fanin()
+        faults = [Fault(1.5, "straggler", "c0", 0.125)]
+        no = Nemesis(sched, cl, faults=faults, replan=False).run()
+        cost = Nemesis(sched, cl, faults=faults, replan=True,
+                       cost_aware=True).run()
+        assert cost.completed
+        assert cost.makespan < no.makespan - 1e-9
+        assert cost.detection_rate == 1.0
+
+    def test_host_loss_relocation_is_never_cost_gated(self):
+        """Losing a host leaves no stay arm — relocation is survival,
+        not speculation, so the cost model must not veto it."""
+        sched, cl = self.sched_fanin()
+        faults = [Fault(2.5, "host_loss", "d0")]
+        cost = Nemesis(sched, cl, faults=faults, replan=True,
+                       cost_aware=True).run()
+        assert cost.completed and cost.makespan < math.inf
+        assert cost.detection_rate == 1.0
 
 
 class TestSimulatorPlumbing:
