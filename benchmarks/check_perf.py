@@ -18,10 +18,15 @@ scenario — see benchmarks/bakeoff.py; the headline claim of the
 reproduction, gated like any other correctness row), ``*.replan_wins``
 (live replanning stopped strictly beating the no-replan arm on a
 fault-injection scenario — see benchmarks/nemesis.py), ``*.detected``
-(the replan controller missed an injected fault) and ``*.no_worse``
+(the replan controller missed an injected fault), ``*.jct_wins``
+(altruistic admission stopped beating FIFO/fair on p99 JCT in the
+oversubscribed online mix — see benchmarks/online.py) and
+``*.no_worse``
 (the *cost-aware* controller arm lost to doing nothing — the analytic
 worth-it model exists precisely so speculation never makes a scenario
-worse, ``layered_rand`` included).  ``scale.speedup_array_*``
+worse, ``layered_rand`` included).  ``online.speedup_replan_loop``
+(compiled multi-job re-prioritisation vs the dict pipeline in the
+service-loop shape, committed ~4x) shares the 3x ``--speedup-floor``.  ``scale.speedup_array_*``
 rows (flat-array engine vs the event-calendar core on the Graphene-scale
 scenarios, including the ddl(1024) serial-chain trickle that
 component-level reallocation + coalesced completion events lifted from
@@ -80,7 +85,7 @@ def gated(name: str) -> bool:
     # analytic passes, the per-event oracle loop, the serial sweep):
     # informational — their drift tracks runner speed, not a code
     # regression.
-    return (name.startswith(("micro.", "scale."))
+    return (name.startswith(("micro.", "scale.", "online."))
             and name.endswith("_us")
             and not name.endswith(("_seed_us", "_dict_us",
                                    "_nobatch_us", "_serial_us")))
@@ -244,6 +249,13 @@ def main(argv=None) -> int:
             if bench.get("scale.parallel_cores", 1.0) >= 4:
                 return 2.0
             return None
+        # the online service-loop re-prioritisation (compiled multi-job
+        # passes vs the dict pipeline, sliding-window shape — see
+        # benchmarks/online.py; committed ~4x).  The small-job stream
+        # variant (speedup_replan_stream) stays informational: tiny
+        # jobs leave the compiled passes little to amortize.
+        if name == "online.speedup_replan_loop":
+            return args.speedup_floor
         return None
 
     failures = []
@@ -287,6 +299,15 @@ def main(argv=None) -> int:
             elif bench[name] != 1.0:
                 failures.append(f"{name}: the controller missed an "
                                 f"injected fault")
+            continue
+        if name.endswith(".jct_wins"):
+            if name not in bench:
+                failures.append(f"{name}: online-admission claim row "
+                                f"missing from bench output (check "
+                                f"never ran)")
+            elif bench[name] != 1.0:
+                failures.append(f"{name}: altruistic admission no "
+                                f"longer beats FIFO/fair on p99 JCT")
             continue
         if name.endswith(".no_worse"):
             if name not in bench:

@@ -15,6 +15,10 @@
 - the fault-injection recovery matrix (nemesis.py — replan vs
   no-replan vs clairvoyant oracle under host loss, stragglers and link
   degradation; ``replan_wins``/``detected``/``ref_match`` rows gated),
+- the online multi-job service sweep (online.py — sustained Poisson
+  arrivals through the admission front end; dict-vs-array altruistic
+  ``ref_match``, the altruistic-beats-FIFO/fair ``jct_wins`` row and
+  the >=3x ``speedup_replan_loop`` floor all gated),
 - the roofline summary per dry-run cell (roofline.py; populated by
   ``python -m repro.launch.dryrun --all``).
 
@@ -70,7 +74,7 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from benchmarks import (
-        bakeoff, fabric, figures, nemesis, roofline, scale,
+        bakeoff, fabric, figures, nemesis, online, roofline, scale,
     )
 
     rows = []
@@ -81,6 +85,7 @@ def main(argv=None) -> None:
     rows += scale.bench_rows(seed_rows=not args.no_seed)
     rows += bakeoff.bench_rows()
     rows += nemesis.bench_rows()
+    rows += online.bench_rows(smoke=args.smoke)
     if not args.smoke:
         rows += roofline.bench_rows()
 

@@ -21,6 +21,12 @@ from repro.core.baselines import (
     MetaflowScheduler,
     SEBFScheduler,
 )
+from repro.core.service import (
+    AdmissionService,
+    JobStats,
+    online_recovery_drill,
+    run_stream,
+)
 from repro.core.whatif import WhatIf, WhatIfResult
 from repro.core.monitor import Monitor, Straggler
 
@@ -36,5 +42,7 @@ __all__ = [
     "auto_coflows",
     "BASELINES", "SEBFScheduler", "DependencyCoflowScheduler",
     "GrapheneScheduler", "MetaflowScheduler",
+    "AdmissionService", "JobStats", "run_stream",
+    "online_recovery_drill",
     "WhatIf", "WhatIfResult", "Monitor", "Straggler",
 ]

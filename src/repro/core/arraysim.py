@@ -2456,6 +2456,37 @@ class ResumableSim:
             needs_settle = True
             return sorted(names[i] for i in need)
 
+        def revive_host(host: str) -> None:
+            """Bring a killed host back (the reboot model): slot pools
+            to full capacity and NICs to nominal.  Prior progress stays
+            lost — ``kill_host`` already restarted the lineage.  Only
+            valid on a host with nothing running (guaranteed after
+            ``kill_host``: zero slots stop computes, zero NICs leave
+            flows parked at rate 0 — those resume on revive)."""
+            nonlocal needs_settle
+            if host not in sim.cluster.hosts:
+                raise KeyError(host)
+            if slot_ids_run is not comp.slot_ids:
+                raise RuntimeError(
+                    "revive_host is not supported after move_task "
+                    "(slot pools diverged from the compiled capacities)")
+            for i in range(n):
+                if is_comp[i] and cur_host[i] == host \
+                        and started[i] is not None and finished[i] is None:
+                    raise RuntimeError(
+                        f"revive_host({host!r}): {names[i]!r} is "
+                        f"running there — revive only a killed host")
+            for (h, _proc), si in slot_ids_run.items():
+                if h == host:
+                    slots_free[si] = comp.slot_cap[si]
+                    freed.add(si)    # tasks parked in waiting_slot
+                    # must be reconsidered at the next settle
+            for lname in (host + ".nic_out", host + ".nic_in"):
+                li = link_name_id.get(lname)
+                if li is not None:
+                    set_link_bw(li, sim.cluster.bandwidth(lname))
+            needs_settle = True
+
         def set_priorities(prio: dict, new_policy) -> None:
             """Swap in a replanned priority map (optionally switching
             policy); rebuilt classes/dispatch ranks, invalidated replay
@@ -2645,18 +2676,278 @@ class ResumableSim:
             pos = net_pos[i]
             return (cur_src[pos], cur_dst[pos])
 
+        # -- live admission / departure (name-keyed state transfer) ----
+        def export_admission() -> dict:
+            """Name-keyed dump of the dynamic run state, for transfer
+            into a recompiled session over a merged (admit) or shrunk
+            (retire) graph.  Keys are task names, (host, proc) slot
+            pools, link names and sorted coflow member tuples, so the
+            receiving compile maps them onto its own interning — ids
+            never cross the boundary.  Settles queued mutations first
+            (like snapshot); structural mutations (move/repath) have no
+            name-stable representation and refuse the export."""
+            if needs_settle:
+                settle()
+            if list(slot_of) != list(comp.slot_of) \
+                    or list(flow_links) != list(comp.flow_links):
+                raise RuntimeError(
+                    "cannot admit/retire after move_task/repath_flow: "
+                    "the session's placement no longer matches the "
+                    "graph, so a recompiled merge cannot represent it")
+            key_of_slot = {si: key for key, si in slot_ids_run.items()}
+            tasks = {}
+            for i in range(n):
+                tasks[names[i]] = (
+                    float(work[i]), started[i], finished[i], cap[i],
+                    d_units[i], has_slot[i], starved[i],
+                    float(speed[i]), n_gate[i], rel[i], float(rate[i]))
+            # the live event calendar: per-task next-event times and
+            # per-component coalesced next-completion times, exported
+            # verbatim.  Recomputing them after the transfer would
+            # re-anchor ``now + (size-work)/rate`` at the admission
+            # instant and shift every float by ulps — the receiving
+            # session pushes these exact times instead, so untouched
+            # tasks keep the calendar a from-scratch merged run carries.
+            ev1: dict = {}
+            ev2: list = []
+
+            def _scan(entries) -> None:
+                for e in entries:
+                    tm, kind, i2, stp = e
+                    if kind == 1 and stamp[i2] == stp \
+                            and finished[i2] is not None:
+                        continue
+                    if kind == 1 and stamp[i2] == stp:
+                        ev1[names[i2]] = tm
+                    elif kind == 2 and comp_stamp[i2] == stp:
+                        ev2.append((tuple(sorted(
+                            names[m] for m in comp_simple_active[i2])),
+                            tm))
+            _scan(heap)
+            if comp_heaps is not None:
+                for ch in comp_heaps:
+                    _scan(ch)
+            return {
+                "ev1": ev1, "ev2": ev2,
+                "now": now, "speed_on": speed_on, "policy": policy,
+                "prio": {names[i]: prio_arr[i] for i in range(n)
+                         if prio_arr[i]},
+                "tasks": tasks,
+                "slots": {key: slots_free[si]
+                          for key, si in slot_ids_run.items()},
+                "waiting": {key_of_slot[si]: [names[i] for i in s]
+                            for si, s in waiting_slot.items() if s},
+                "links": {link_names[li]: link_bw[li]
+                          for li in range(len(link_bw))},
+                "cof_left": {tuple(sorted(names[m] for m in c)):
+                             cof_left[ci]
+                             for ci, c in enumerate(coflows)},
+                "candidates": [names[i] for i in candidates],
+            }
+
+        def transplant(st: dict) -> None:
+            """Load an export_admission() dump into this freshly built
+            session: wipe the t=0 initialisation, overlay the exported
+            per-task/slot/link state by name (names absent from this
+            compile — retired rows — are skipped), re-register in-flight
+            work, and leave everything dirty for one settle().  The
+            settle at the admission instant then completes exact-time
+            tasks and runs one combined dispatch pass, exactly the event
+            batch a from-scratch run of the merged graph would execute
+            there."""
+            nonlocal now, unfinished, speed_on, guard, needs_settle
+            # wipe: the constructor already started roots at t=0
+            heap.clear()
+            pending.clear()
+            if comp_heaps is not None:
+                for ch in comp_heaps:
+                    ch.clear()
+            active.clear()
+            waiting_slot.clear()
+            candidates.clear()
+            freed.clear()
+            touched.clear()
+            touched_sched.clear()
+            comp_dirty.clear()
+            comp_resched.clear()
+            if inc_bylink:
+                inc_bylink.clear()
+            for K in range(n_comps):
+                comp_runnable[K].clear()
+                comp_simple_active[K].clear()
+                comp_log[K] = None
+                comp_stamp[K] += 1
+            if use_batch:
+                work[:] = 0.0
+                rate[:] = 0.0
+                speed[:] = 1.0
+                starved_net[:] = False
+            else:
+                for i in range(n):
+                    work[i] = 0.0
+                    rate[i] = 0.0
+                    speed[i] = 1.0
+                for p in range(len(starved_net)):
+                    starved_net[p] = False
+            for i in range(n):
+                started[i] = None
+                finished[i] = None
+                has_slot[i] = False
+                starved[i] = False
+                d_units[i] = 0
+                cap[i] = size[i]
+                stamp[i] += 1
+            slots_free[:] = list(comp.slot_cap)
+            cof_left[:] = [len(c) for c in coflows]
+            n_gate[:] = list(comp.init_gate)
+            link_bw[:] = list(comp.link_bw)
+            if use_batch:
+                link_bw_a_run[:] = comp.link_bw_a
+            now = st["now"]
+            speed_on = st["speed_on"]
+            guard = 0
+            unfinished = n
+            # overlay the exported state by name
+            idx_get = comp.idx.get
+            for nm, ts in st["tasks"].items():
+                i = idx_get(nm)
+                if i is None:
+                    continue
+                (w, s0, f0, cp, du, hs, sv, spd, ng, _r, rt) = ts
+                work[i] = w
+                started[i] = s0
+                finished[i] = f0
+                cap[i] = cp
+                d_units[i] = du
+                has_slot[i] = hs
+                starved[i] = sv
+                speed[i] = spd
+                n_gate[i] = ng
+                rate[i] = rt
+                if f0 is not None:
+                    unfinished -= 1
+            for key, v in st["slots"].items():
+                si = slot_ids_run.get(key)
+                if si is not None:
+                    slots_free[si] = v
+            lid_get = link_name_id.get
+            for lname, bw in st["links"].items():
+                li = lid_get(lname)
+                if li is not None:
+                    link_bw[li] = bw
+                    if use_batch:
+                        link_bw_a_run[li] = bw
+            if use_np:
+                residual[:] = np.asarray(link_bw, dtype=np.float64)
+            else:
+                residual[:] = link_bw
+            if coflows:
+                ci_of = {tuple(sorted(names[m] for m in c)): ci
+                         for ci, c in enumerate(coflows)}
+                for ckey, left in st["cof_left"].items():
+                    ci = ci_of.get(ckey)
+                    if ci is not None:
+                        cof_left[ci] = left
+            # streaming bookkeeping is a pure function of work — derive
+            # it rather than trusting a dump taken one event earlier
+            if comp.has_streaming:
+                for i in range(n):
+                    if started[i] is None or finished[i] is not None:
+                        continue
+                    if stream_out[i]:
+                        d_units[i] = math.floor(work[i] / unit[i] + EPS)
+                for i in range(n):
+                    if started[i] is None or finished[i] is not None:
+                        continue
+                    if stream_in[i]:
+                        cap[i] = recompute_cap(i)
+            # re-register in-flight tasks: rates and the exported
+            # calendar carry over verbatim — nothing is re-anchored at
+            # the admission instant unless the merged run would have
+            # re-anchored it there too.  A task whose recomputed cap
+            # contradicts its exported starvation flag (a streaming
+            # boundary landing exactly at the admission time) goes
+            # through settle's starvation pass, which is where the
+            # from-scratch run flips it as well.
+            for i in range(n):
+                if started[i] is None or finished[i] is not None:
+                    continue
+                active.add(i)
+                if not is_comp[i]:
+                    pos = net_pos[i]
+                    starved_net[pos] = starved[i]
+                    K = comp_of[pos]
+                    comp_runnable[K].add(pos)
+                    if simple[i]:
+                        comp_simple_active[K].add(i)
+                if (cap[i] <= work[i] + EPS) != starved[i]:
+                    touched.add(i)
+            for key, nms in st["waiting"].items():
+                si = slot_ids_run.get(key)
+                if si is None:
+                    continue
+                ws = waiting_slot.setdefault(si, set())
+                for nm in nms:
+                    i = idx_get(nm)
+                    if i is not None:
+                        ws.add(i)
+            # future releases re-enter via the calendar; everything
+            # gate-ready (new-job roots included) via candidates — the
+            # settle's dispatch pass sorts them all together
+            for i in range(n):
+                if started[i] is not None:
+                    continue
+                if rel[i] > now + EPS:
+                    heappush(heap, (float(rel[i]), 0, i, 0))
+                elif not n_gate[i]:
+                    candidates.add(i)
+            for nm in st["candidates"]:
+                i = idx_get(nm)
+                if i is not None:
+                    candidates.add(i)
+            # replant the exported calendar at its original anchors.
+            # Coalesced (kind-2) entries are keyed by their member set:
+            # admission can merge the owning components (the entry lands
+            # on the union — an early fire just triggers a rescan, as
+            # the merged run's own coalesced entry does) and retirement
+            # can split them (the entry is replanted on every component
+            # holding survivors)
+            for nm, tv in st["ev1"].items():
+                i = idx_get(nm)
+                if i is None or started[i] is None \
+                        or finished[i] is not None:
+                    continue
+                _defer((tv, 1, i, stamp[i]))
+            for members, tv in st["ev2"]:
+                ks = set()
+                for nm in members:
+                    i = idx_get(nm)
+                    if i is None or started[i] is None \
+                            or finished[i] is not None:
+                        continue
+                    ks.add(comp_of[net_pos[i]])
+                for K in ks:
+                    _defer((tv, 2, K, comp_stamp[K]))
+            flush_events()
+            needs_settle = True
+
         self._sim = sim
         self._names = names
         self._idx = comp.idx
+        self._horizon = horizon
+        self._batch = bool(batch)
         self._ops = {
             "advance": advance, "advance_to": advance_to,
             "settle": settle, "result": result, "progress": progress,
+            "peek": peek_next, "export_admission": export_admission,
+            "transplant": transplant,
             "snapshot": snapshot, "restore": restore,
             "state": state_view, "free_slots": free_slots,
             "flow_route": flow_route, "flow_ends": flow_ends,
             "set_speed": set_speed, "set_link_bw": set_link_bw,
             "link_id": link_id, "link_bw_of": link_bw.__getitem__,
             "kill": kill_or_resurrect, "kill_host": kill_host,
+            "revive_host": revive_host,
             "move": move, "repath": repath,
             "set_priorities": set_priorities,
             "cur_host": lambda i: cur_host[i],
@@ -2780,6 +3071,12 @@ class ResumableSim:
         that lived on it.  See the class docstring for the fault model."""
         return self._ops["kill_host"](host)
 
+    def revive_host(self, host: str) -> None:
+        """Bring a killed host back online (reboot model): slot pools
+        restored to capacity, NICs to nominal.  Progress lost to the
+        kill stays lost; flows parked at rate 0 resume."""
+        self._ops["revive_host"](host)
+
     def move_task(self, name: str, host: str,
                   proc: str | None = None) -> None:
         """Re-place compute ``name`` onto ``host`` (restarts it if it
@@ -2810,3 +3107,149 @@ class ResumableSim:
     def restore(self, snap: dict) -> None:
         """Reset the session to a :meth:`checkpoint` snapshot."""
         self._ops["restore"](snap)
+
+    # -- live admission / departure ------------------------------------
+    def _adopt(self, other: "ResumableSim") -> None:
+        """Swap this session's engine for ``other``'s: every public
+        method dispatches through ``_ops``, so rebinding the handles is
+        a full engine replacement (prior checkpoints no longer apply)."""
+        self._sim = other._sim
+        self._names = other._names
+        self._idx = other._idx
+        self._ops = other._ops
+
+    def admit_graph(self, graph, at: float | None = None, *,
+                    priorities: dict | None = None) -> None:
+        """Splice a new job's DAG into the running session at time
+        ``at`` (default: the paused clock), warm-starting from the
+        current state — the history is never re-simulated.
+
+        Events strictly before ``at`` are processed first, then the
+        merged graph is compiled (the new job's rows extend the interned
+        name table, gates, CSR incidence and contention components; the
+        old rows keep their ids) and the dynamic state carries over
+        name-keyed.  Bit-exact invariant: after ``admit_graph(g, at=t)``
+        the session evolves exactly as a fresh session over the merged
+        graph with every new task released at ``t``.  ``priorities``
+        overlays priority classes for the new tasks (``set_priorities``
+        re-ranks everything later, as the service layer does on each
+        admission).
+
+        Not supported after ``move_task``/``repath_flow`` (the placement
+        diverged from the graph), nor at ``t == 0`` (build the merged
+        simulation directly — the constructor has already dispatched the
+        t=0 starts without the new job).
+        """
+        from repro.core.graph import MXDAG
+        from repro.core.simulator import Simulator
+
+        ops = self._ops
+        sim = self._sim
+        at = self.now if at is None else float(at)
+        if at < self.now - EPS:
+            raise ValueError(f"admit_graph at t={at!r}: the clock is "
+                             f"already at {self.now!r}")
+        if at <= 0.0:
+            raise ValueError(
+                "admit_graph at t=0: all jobs are known upfront — "
+                "simulate the merged graph directly")
+        jobs_old = {t.job for t in sim.g.tasks.values()}
+        jobs_new = {t.job for t in graph.tasks.values()}
+        taken = jobs_old & jobs_new
+        if taken:
+            raise ValueError(f"admitted job name(s) already running: "
+                             f"{sorted(taken)}")
+        # drive to the admission instant: events strictly before ``at``
+        while True:
+            tn = ops["peek"]()
+            if tn is None or tn >= at:
+                break
+            ops["advance"](tn, True)
+        ops["advance_to"](at)
+        st = ops["export_admission"]()
+        merged = MXDAG(sim.g.name)
+        for t in sim.g.tasks.values():
+            merged.add(t)
+        for nm, t in graph.tasks.items():
+            if nm in merged.tasks:
+                raise ValueError(
+                    f"admitted task name {nm!r} collides with the "
+                    f"running graph (prefix task names with the job "
+                    f"name, as builders.poisson_jobs does)")
+            merged.add(t)
+        for e in sim.g.edges.values():
+            merged.add_edge(e.src, e.dst, pipelined=e.pipelined)
+        for e in graph.edges.values():
+            merged.add_edge(e.src, e.dst, pipelined=e.pipelined)
+        releases = {nm: ts[9] for nm, ts in st["tasks"].items()
+                    if ts[9] > 0.0}
+        for nm in graph.tasks:
+            releases[nm] = at
+        prio = dict(st["prio"])
+        if priorities:
+            prio.update(priorities)
+        fresh = ResumableSim(
+            Simulator(merged, sim.cluster, policy=st["policy"],
+                      priorities=prio, releases=releases,
+                      coflows=sim.coflows, routes=sim.routes,
+                      engine="array"),
+            self._horizon, batch=self._batch)
+        fresh._ops["transplant"](st)
+        self._adopt(fresh)
+
+    def retire_job(self, job: str) -> None:
+        """Free a finished job's rows: recompile the session over the
+        graph without ``job``'s tasks and carry the dynamic state over
+        name-keyed.  Every task of the job must be finished, and the
+        job must share no edges or coflows with the survivors (its
+        completed outputs have already released all gates).  The job's
+        start/finish times leave the session with it — record them (the
+        service layer does) before retiring.
+        """
+        from repro.core.graph import MXDAG
+        from repro.core.simulator import Simulator
+
+        sim = self._sim
+        doomed = {nm for nm, t in sim.g.tasks.items() if t.job == job}
+        if not doomed:
+            raise KeyError(f"unknown job {job!r}")
+        if len(doomed) == len(sim.g.tasks):
+            raise ValueError("cannot retire the only job in the "
+                             "session")
+        st = self._ops["export_admission"]()
+        for nm in sorted(doomed):
+            if st["tasks"][nm][2] is None:
+                raise RuntimeError(f"retire_job({job!r}): task {nm} "
+                                   f"has not finished")
+        for e in sim.g.edges.values():
+            if (e.src in doomed) != (e.dst in doomed):
+                raise ValueError(f"retire_job({job!r}): cross-job edge "
+                                 f"{e.src} -> {e.dst}")
+        coflows = []
+        for c in sim.coflows:
+            inside = c & doomed
+            if inside and inside != c:
+                raise ValueError(f"retire_job({job!r}): coflow "
+                                 f"{sorted(c)} spans the retired job")
+            if not inside:
+                coflows.append(c)
+        shrunk = MXDAG(sim.g.name)
+        for nm, t in sim.g.tasks.items():
+            if nm not in doomed:
+                shrunk.add(t)
+        for e in sim.g.edges.values():
+            if e.src not in doomed and e.dst not in doomed:
+                shrunk.add_edge(e.src, e.dst, pipelined=e.pipelined)
+        releases = {nm: ts[9] for nm, ts in st["tasks"].items()
+                    if ts[9] > 0.0 and nm not in doomed}
+        prio = {nm: v for nm, v in st["prio"].items()
+                if nm not in doomed}
+        routes = {nm: p for nm, p in sim.routes.items()
+                  if nm not in doomed}
+        fresh = ResumableSim(
+            Simulator(shrunk, sim.cluster, policy=st["policy"],
+                      priorities=prio, releases=releases,
+                      coflows=coflows, routes=routes, engine="array"),
+            self._horizon, batch=self._batch)
+        fresh._ops["transplant"](st)
+        self._adopt(fresh)

@@ -180,7 +180,7 @@ def ddl(n_layers: int = 4, *,
         pull: Sequence[float] | float = 1.0,
         unit_frac: Optional[float] = None,
         worker: str = "W", ps: str = "PS", job: str = "job0",
-        placed: bool = True) -> MXDAG:
+        placed: bool = True, name: Optional[str] = None) -> MXDAG:
     """One boundary iteration of layer-wise data-parallel training.
 
     BP runs top layer → layer 0 on the worker GPU; each BP_i releases
@@ -207,6 +207,9 @@ def ddl(n_layers: int = 4, *,
         ``placed=False``).
     :param job: job label stamped on every task.
     :param placed: ``False`` leaves the PS side logical (see above).
+    :param name: when set, names the graph and prefixes every task name
+        with ``"{name}."`` — required when several ddl jobs share a
+        cluster (multi-job task names must be globally unique).
     :returns: the iteration's MXDAG.
     """
     def seq(x, default):
@@ -218,17 +221,22 @@ def ddl(n_layers: int = 4, *,
     bp, fp = seq(bp, 1.0), seq(fp, 1.0)
     push, pull = seq(push, 1.0), seq(pull, 1.0)
     uf = unit_frac
+    pre = f"{name}." if name else ""
 
-    g = MXDAG(f"ddl{n_layers}")
-    bps = [g.add(compute(f"BP{i}", bp[i], worker, proc="gpu", job=job))
+    g = MXDAG(name or f"ddl{n_layers}")
+    bps = [g.add(compute(f"{pre}BP{i}", bp[i], worker, proc="gpu",
+                         job=job))
            for i in range(n_layers)]
-    fps = [g.add(compute(f"FP{i}", fp[i], worker, proc="gpu", job=job))
+    fps = [g.add(compute(f"{pre}FP{i}", fp[i], worker, proc="gpu",
+                         job=job))
            for i in range(n_layers)]
     ps_host = ps if placed else None
-    pushes = [g.add(flow(f"push{i}", push[i], worker, ps_host, job=job,
+    pushes = [g.add(flow(f"{pre}push{i}", push[i], worker, ps_host,
+                         job=job,
                          unit=None if uf is None else uf * push[i]))
               for i in range(n_layers)]
-    pulls = [g.add(flow(f"pull{i}", pull[i], ps_host, worker, job=job,
+    pulls = [g.add(flow(f"{pre}pull{i}", pull[i], ps_host, worker,
+                        job=job,
                         unit=None if uf is None else uf * pull[i]))
              for i in range(n_layers)]
     # BP chain: top layer first
@@ -413,7 +421,8 @@ def serial_chain(n_tasks: int, *, size: float = 1.0, host: str = "H",
 def random_layered(n_tasks: int = 20000, *, n_hosts: int = 256,
                    min_width: int = 64, max_width: int = 256,
                    fanout: int = 2, seed: int = 0,
-                   job: str = "job0") -> MXDAG:
+                   job: str = "job0", name: Optional[str] = None,
+                   host_prefix: str = "h") -> MXDAG:
     """Random layered MXDAG of roughly ``n_tasks`` tasks (Graphene scale).
 
     Graphene ("Do the Hard Stuff First", Grandl et al.) schedules
@@ -449,6 +458,10 @@ def random_layered(n_tasks: int = 20000, *, n_hosts: int = 256,
     :param fanout: producers each consumer reads from (flows per task).
     :param seed: RNG seed — the graph is a pure function of arguments.
     :param job: job label stamped on every task.
+    :param name: when set, names the graph and prefixes every task name
+        with ``"{name}."`` (multi-job uniqueness, as in :func:`ddl`).
+    :param host_prefix: hosts are ``f"{host_prefix}{i}"`` — lets small
+        layered jobs land on a shared pool's hosts.
     :returns: the layered MXDAG.
     """
     if n_tasks < 2 or fanout < 1 or min_width < 1 \
@@ -456,8 +469,9 @@ def random_layered(n_tasks: int = 20000, *, n_hosts: int = 256,
         raise ValueError("need n_tasks >= 2, fanout >= 1, "
                          "1 <= min_width <= max_width <= n_hosts")
     rng = random.Random(seed)
-    g = MXDAG(f"layered{n_tasks}_s{seed}")
-    hosts = [f"h{i}" for i in range(n_hosts)]
+    pre = f"{name}." if name else ""
+    g = MXDAG(name or f"layered{n_tasks}_s{seed}")
+    hosts = [f"{host_prefix}{i}" for i in range(n_hosts)]
     prev: list[MXTask] = []
     total = 0
     layer = 0
@@ -476,14 +490,15 @@ def random_layered(n_tasks: int = 20000, *, n_hosts: int = 256,
         for i in range(width):
             if total >= n_tasks:
                 break
-            c = g.add(compute(f"L{layer}c{i}", csize, hosts[i], job=job))
+            c = g.add(compute(f"{pre}L{layer}c{i}", csize, hosts[i],
+                              job=job))
             total += 1
             cur.append(c)
             if prev:
                 for j in range(min(fanout, len(prev))):
                     k = (rot + i * fanout + j) % len(prev)
                     p = prev[k]
-                    f = g.add(flow(f"L{layer}c{i}f{k}", fsize,
+                    f = g.add(flow(f"{pre}L{layer}c{i}f{k}", fsize,
                                    p.host, c.host, job=job))
                     total += 1
                     g.add_edge(p, f)
@@ -556,3 +571,112 @@ def mapreduce(name: str, n_map: int, n_reduce: int, *,
             g.add_edge(m, f)
             g.add_edge(f, r)
     return g
+
+
+# ----------------------------------------------------------------------
+# online arrival stream (multi-job service workload source)
+# ----------------------------------------------------------------------
+JOB_SHAPES = ("mapreduce", "ddl", "fanin", "layered")
+
+
+def pool_cluster(n_hosts: int = 8, *, host_prefix: str = "pool",
+                 procs: Optional[dict] = None,
+                 nic: float = 1.0) -> Cluster:
+    """The shared host pool :func:`poisson_jobs` streams land on.
+
+    ``2 * n_hosts`` homogeneous hosts — ``{host_prefix}.M{i}`` (mapper /
+    worker side) and ``{host_prefix}.R{i}`` (reducer / parameter-server
+    side) — each with a small CPU pool and one GPU slot (the ddl shape
+    runs its BP/FP chain on a GPU).
+
+    :param n_hosts: hosts per side.
+    :param host_prefix: must match the stream's ``host_prefix``.
+    :param procs: per-host processor pools (default
+        ``{"cpu": 4, "gpu": 1}``).
+    :param nic: per-direction NIC bandwidth.
+    :returns: the homogeneous cluster.
+    """
+    hosts = [f"{host_prefix}.M{i}" for i in range(n_hosts)] \
+        + [f"{host_prefix}.R{i}" for i in range(n_hosts)]
+    return Cluster.homogeneous(hosts, procs=procs or {"cpu": 4, "gpu": 1},
+                               nic=nic)
+
+
+def poisson_jobs(rate: float, horizon: float, seed: int = 0, *,
+                 mix: Sequence[str] = JOB_SHAPES, n_hosts: int = 8,
+                 host_prefix: str = "pool",
+                 ) -> list[tuple[float, MXDAG]]:
+    """Seeded Poisson arrival stream of small jobs on one shared pool.
+
+    Inter-arrival gaps are ``Exp(rate)``; each arrival draws a shape
+    uniformly from ``mix`` and sizes it from the same seeded RNG, so the
+    stream is a pure function of its arguments — the online benchmark
+    and the admission tests share one reproducible workload source.
+    Shapes (all on :func:`pool_cluster`'s hosts, so concurrent jobs
+    contend for the same NICs and processor pools):
+
+    - ``"mapreduce"`` — a small all-to-all shuffle (2–4 × 2–4);
+    - ``"fanin"`` — 4–8 mappers aggregating into one long reducer on
+      ``{host_prefix}.R0`` (the oversubscribed aggregation hot spot);
+    - ``"ddl"`` — a 2–5 layer training iteration on one worker/PS pair;
+    - ``"layered"`` — a 24–48 task random layered DAG over the mapper
+      side.
+
+    Task names are prefixed with the per-arrival job name
+    (``j00017m`` …), so any subset of the stream merges collision-free.
+
+    :param rate: mean arrivals per unit time.
+    :param horizon: stop drawing arrivals at this time.
+    :param seed: stream RNG seed.
+    :param mix: shapes to draw from (subset of :data:`JOB_SHAPES`).
+    :param n_hosts: pool hosts per side (match :func:`pool_cluster`).
+    :param host_prefix: pool host name prefix.
+    :returns: ``[(arrival_time, graph), ...]`` in arrival order.
+    """
+    if rate <= 0 or horizon <= 0:
+        raise ValueError("need rate > 0 and horizon > 0")
+    if not mix or any(s not in JOB_SHAPES for s in mix):
+        raise ValueError(f"mix must be a non-empty subset of "
+                         f"{JOB_SHAPES}, got {mix!r}")
+    rng = random.Random(seed)
+    out: list[tuple[float, MXDAG]] = []
+    t = 0.0
+    i = 0
+    while True:
+        t += rng.expovariate(rate)
+        if t >= horizon:
+            break
+        shape = mix[rng.randrange(len(mix))]
+        nm = f"j{i:05d}{shape[0]}"
+        if shape == "mapreduce":
+            g = mapreduce(nm, rng.randint(2, 4), rng.randint(2, 4),
+                          map_time=round(rng.uniform(0.5, 2.0), 6),
+                          shuffle_time=round(rng.uniform(0.5, 2.0), 6),
+                          reduce_time=round(rng.uniform(0.25, 1.0), 6),
+                          hosts_per_side=n_hosts,
+                          host_prefix=host_prefix, job=nm)
+        elif shape == "fanin":
+            g = mapreduce(nm, rng.randint(4, 8), 1,
+                          map_time=round(rng.uniform(0.25, 1.0), 6),
+                          shuffle_time=round(rng.uniform(1.0, 2.0), 6),
+                          reduce_time=round(rng.uniform(2.0, 4.0), 6),
+                          hosts_per_side=n_hosts,
+                          host_prefix=host_prefix, job=nm)
+        elif shape == "ddl":
+            k = rng.randrange(n_hosts)
+            g = ddl(rng.randint(2, 5), name=nm, job=nm,
+                    worker=f"{host_prefix}.M{k}",
+                    ps=f"{host_prefix}.R{k}",
+                    bp=round(rng.uniform(0.25, 1.0), 6),
+                    fp=round(rng.uniform(0.25, 1.0), 6),
+                    push=round(rng.uniform(0.5, 1.5), 6),
+                    pull=round(rng.uniform(0.5, 1.5), 6))
+        else:       # layered
+            g = random_layered(rng.randint(24, 48), name=nm, job=nm,
+                               n_hosts=n_hosts, min_width=2,
+                               max_width=min(4, n_hosts), fanout=2,
+                               seed=rng.randrange(1 << 30),
+                               host_prefix=f"{host_prefix}.M")
+        out.append((t, g))
+        i += 1
+    return out

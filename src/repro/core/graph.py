@@ -119,6 +119,43 @@ class MXDAG:
         self._version += 1
         return task
 
+    @classmethod
+    def union(cls, graphs: Iterable["MXDAG"],
+              name: Optional[str] = None) -> "MXDAG":
+        """Disjoint union of whole DAGs (the multi-job merge), bulk.
+
+        Equivalent to ``add``-ing every task and ``add_edge``-ing every
+        edge job by job, but skips the per-edge cycle walk: task names
+        must be globally unique (checked — ``ValueError`` on collision),
+        so every edge stays inside its own already-acyclic input graph
+        and the union cannot create a cycle.  This is the hot path of
+        the online service loop, where the running job set is re-merged
+        on every admission and completion.
+        """
+        graphs = list(graphs)
+        m = cls(name if name is not None
+                else "+".join(g.name for g in graphs))
+        owner: dict[str, str] = {}
+        for g in graphs:
+            for nm, t in g.tasks.items():
+                if nm in m.tasks:
+                    raise ValueError(
+                        f"cross-job task name collision: {nm!r} is "
+                        f"defined by both {owner[nm]} and "
+                        f"{g.name!r} (job {t.job!r}); task names must "
+                        f"be unique across the jobs sharing a cluster "
+                        f"(prefix them with the job name, as "
+                        f"builders.mapreduce does)")
+                m.tasks[nm] = t
+                owner[nm] = f"{g.name!r} (job {t.job!r})"
+            m.edges.update(g.edges)
+            for nm, ss in g._succ.items():
+                m._succ[nm] = list(ss)
+            for nm, ps in g._pred.items():
+                m._pred[nm] = list(ps)
+        m._version = len(graphs)
+        return m
+
     def copy(self) -> "MXDAG":
         """Independent shallow copy (tasks are frozen; structure is new)."""
         g = MXDAG(self.name)

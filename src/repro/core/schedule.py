@@ -797,22 +797,51 @@ class AltruisticMultiScheduler:
     isolated analytic pass) covers the foreign critical work queued on the
     same resource — this implements "delaying its non-critical path resource
     allocation ... without increasing its own end-to-end completion time".
+
+    ``analytic`` picks the substrate, mirroring :class:`MXDAGScheduler`:
+    ``"array"`` runs the per-job isolated slack passes as compiled
+    level-batched passes over :mod:`repro.core.arrayanalytic` (memoized
+    per ``(job name, graph version)`` so a service loop re-admitting the
+    same jobs reuses warm passes) and computes each foreign-critical-work
+    sum once per ``(resource, excluded job)`` pair instead of once per
+    ``(task, resource)`` pair; ``"dict"`` is the original
+    ``with_slack`` pipeline verbatim, retained as the bit-exact oracle
+    and benchmark "before"; ``"auto"`` (default) picks ``"array"`` from
+    256 merged tasks up.  The two substrates produce identical priority
+    maps: the per-job slack vectors are bit-equal (arrayanalytic golden
+    tests) and the grouped demotion sums add the same floats in the
+    same sequential order as the dict path's inner loop.
     """
 
-    def __init__(self, *, try_pipelining: bool = False):
-        """:param try_pipelining: forwarded to the per-job scheduler."""
-        self.try_pipelining = try_pipelining
-
-    def schedule(self, graphs: list[MXDAG],
-                 cluster: Optional[Cluster] = None) -> Schedule:
-        """Schedule several jobs altruistically on one cluster.
-
-        :param graphs: the jobs; task names must be globally unique.
-        :param cluster: shared capacities; default derived from the
-            merged graph.
-        :returns: one Schedule over the merged graph whose priority
-            classes interleave the jobs per Principle 2.
+    def __init__(self, *, try_pipelining: bool = False,
+                 analytic: str = "auto"):
+        """:param try_pipelining: forwarded to the per-job scheduler.
+        :param analytic: ``"auto"`` | ``"array"`` | ``"dict"`` substrate
+            for the per-job slack/critical passes and demotion sums.
         """
+        self.try_pipelining = try_pipelining
+        if analytic not in ("auto", "array", "dict"):
+            raise ValueError(f"unknown analytic {analytic}")
+        self.analytic = analytic
+        # per-job isolated analytics keyed on (job name -> graph
+        # version): the same version-keyed trick as MXDAGScheduler._best,
+        # so repeated service-loop calls reuse warm passes.
+        self._job_cache: dict[str, tuple] = {}
+        # merged-graph (+ resource maps) keyed on the job set identity
+        self._merged_cache: dict[tuple, tuple] = {}
+        # per-job resource-map fragments (job name -> ((version, cluster
+        # signature), resource map, task->resources)) the merged view
+        # concatenates — jobs rarely change between service-loop calls
+        self._res_cache: dict[str, tuple] = {}
+
+    def _use_array(self, graphs: list[MXDAG]) -> bool:
+        if self.analytic != "auto":
+            return self.analytic == "array"
+        return sum(len(g.tasks) for g in graphs) >= 256
+
+    @staticmethod
+    def _merge(graphs: list[MXDAG]) -> MXDAG:
+        """Union the jobs into one graph, rejecting name collisions."""
         merged = MXDAG("+".join(g.name for g in graphs))
         owner: dict[str, str] = {}
         for g in graphs:
@@ -829,6 +858,27 @@ class AltruisticMultiScheduler:
                 merged.add(t)
             for e in g.edges.values():
                 merged.add_edge(e.src, e.dst, pipelined=e.pipelined)
+        return merged
+
+    def schedule(self, graphs: list[MXDAG],
+                 cluster: Optional[Cluster] = None) -> Schedule:
+        """Schedule several jobs altruistically on one cluster.
+
+        :param graphs: the jobs; task names must be globally unique.
+        :param cluster: shared capacities; default derived from the
+            merged graph.
+        :returns: one Schedule over the merged graph whose priority
+            classes interleave the jobs per Principle 2.
+        """
+        if self._use_array(graphs):
+            return self._schedule_array(graphs, cluster)
+        return self._schedule_dict(graphs, cluster)
+
+    def _schedule_dict(self, graphs: list[MXDAG],
+                       cluster: Optional[Cluster] = None) -> Schedule:
+        """The original dict pipeline, verbatim — the differential
+        oracle for the compiled path and the benchmark "before"."""
+        merged = self._merge(graphs)
 
         # isolated analytics per job
         prio: dict[str, float] = {}
@@ -860,6 +910,120 @@ class AltruisticMultiScheduler:
                     foreign += sum(merged.tasks[m].size
                                    for m in by_resource[r]
                                    if m in others_crit)
+                if foreign > 0 and slack[n] >= foreign - 1e-9:
+                    prio[n] = ALTRUIST_DEMOTED
+        return Schedule(graph=merged, policy="priority", priorities=prio,
+                        meta={"critical": critical})
+
+    def _job_analytics(self, g: MXDAG) -> tuple[dict[str, float],
+                                                set[str]]:
+        """Memoized per-job isolated (slack map, critical set) from the
+        compiled analytic pass, keyed on the job's graph version."""
+        cached = self._job_cache.get(g.name)
+        if cached is not None and cached[0] == g._version:
+            return cached[1], cached[2]
+        at = arrayanalytic.analyze(g)
+        slack = dict(zip(at.names, at.slack))
+        crit = {n for n, s in slack.items() if s <= 1e-9}
+        self._job_cache[g.name] = (g._version, slack, crit)
+        return slack, crit
+
+    def _merged_view(self, graphs: list[MXDAG],
+                     cluster: Optional[Cluster]) -> tuple:
+        """Memoized (merged graph, resource→tasks map, task→resources
+        map) keyed on the job-set identity and the cluster."""
+        sig = cluster.signature() if cluster is not None else None
+        key = (tuple((g.name, g._version) for g in graphs), sig)
+        cached = self._merged_cache.get(key)
+        if cached is not None:
+            return cached
+        # bulk union (no per-edge cycle walk — see MXDAG.union) plus
+        # per-job memoized resource maps concatenated in job order:
+        # merged.resource_map iterates tasks in insertion order, which
+        # is exactly job order then within-job insertion order, so the
+        # concatenation reproduces its lists element for element (the
+        # demotion sums below depend on that order for bit-exactness
+        # against the dict oracle).
+        merged = MXDAG.union(graphs)
+        by_resource: dict[str, list[str]] = {}
+        res_of: dict[str, tuple] = {}
+        for g in graphs:
+            rmap, jres = self._job_resources(g, cluster, sig)
+            for r, ns in rmap.items():
+                lst = by_resource.get(r)
+                if lst is None:
+                    by_resource[r] = list(ns)
+                else:
+                    lst.extend(ns)
+            res_of.update(jres)
+        if len(self._merged_cache) >= 64:     # service loops churn keys
+            self._merged_cache.clear()
+        self._merged_cache[key] = (merged, by_resource, res_of)
+        return merged, by_resource, res_of
+
+    def _job_resources(self, g: MXDAG, cluster: Optional[Cluster],
+                       sig) -> tuple:
+        """Memoized per-job (resource map, task→resources) fragments,
+        keyed on the job's graph version and the cluster signature."""
+        cached = self._res_cache.get(g.name)
+        if cached is not None and cached[0] == (g._version, sig):
+            return cached[1], cached[2]
+        rmap = g.resource_map(cluster)
+        jres = {n: (cluster.resources_for(t) if cluster is not None
+                    else t.resources())
+                for n, t in g.tasks.items()}
+        self._res_cache[g.name] = ((g._version, sig), rmap, jres)
+        return rmap, jres
+
+    def _schedule_array(self, graphs: list[MXDAG],
+                        cluster: Optional[Cluster] = None) -> Schedule:
+        """The compiled pipeline: per-job passes over the interned
+        arrays, demotion sums grouped per (resource, excluded job).
+
+        Bit-exact vs :meth:`_schedule_dict`: each grouped sum walks the
+        same ``by_resource[r]`` slice in the same order the dict path's
+        inner ``sum()`` does — filtering on "critical and foreign" picks
+        the identical float subsequence, so Python's strictly sequential
+        ``sum`` yields the identical value; it is merely computed once
+        per (resource, job) instead of once per (task, resource).
+        """
+        merged, by_resource, res_of = self._merged_view(graphs, cluster)
+
+        prio: dict[str, float] = {}
+        slack: dict[str, float] = {}
+        critical: dict[str, set[str]] = {}
+        for g in graphs:
+            jslack, crit = self._job_analytics(g)
+            critical[g.name] = crit
+            for n, s in jslack.items():
+                slack[n] = s
+                prio[n] = CRITICAL if n in crit else NONCRITICAL
+
+        # crit sets are disjoint (names are globally unique), so
+        # "critical for some OTHER job" ≡ "critical and not mine"
+        all_crit = set()
+        for c in critical.values():
+            all_crit |= c
+        tasks = merged.tasks
+        foreign_of: dict[tuple[str, str], float] = {}
+        for g in graphs:
+            if len(graphs) > 1:
+                own = critical[g.name]
+                others_crit = {m for m in all_crit if m not in own}
+            else:
+                others_crit = set()
+            jname = g.name
+            for n in g.tasks:
+                if prio[n] != NONCRITICAL:
+                    continue
+                foreign = 0.0
+                for r in res_of[n]:
+                    fr = foreign_of.get((r, jname))
+                    if fr is None:
+                        fr = sum(tasks[m].size for m in by_resource[r]
+                                 if m in others_crit)
+                        foreign_of[(r, jname)] = fr
+                    foreign += fr
                 if foreign > 0 and slack[n] >= foreign - 1e-9:
                     prio[n] = ALTRUIST_DEMOTED
         return Schedule(graph=merged, policy="priority", priorities=prio,
